@@ -1,0 +1,53 @@
+"""Beyond-paper ablations: which CASSINI ingredient buys what.
+
+Scenario: the Fig. 2 forced-sharing pair, toggling one mechanism at a time:
+  full          — placement choice + time-shifts + pacing agent (ours)
+  no-pacing     — time-shifts applied once, agents disarmed
+  1-candidate   — no placement choice (time-shifts only)
+  coarse-30deg  — 30-degree angle grid instead of 5
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from repro.cluster import ClusterSimulator, Topology, snapshot_trace
+from repro.sched import CassiniAugmented
+from repro.sched.fixed import FixedPlacementScheduler
+
+
+def _run(topo, pl, *, pace_threshold=0.9, precision=5.0, jitter=0.003):
+    jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=250)
+    sched = CassiniAugmented(
+        FixedPlacementScheduler(pl), num_candidates=1,
+        precision_deg=precision, pace_threshold=pace_threshold,
+    )
+    sim = ClusterSimulator(topo, sched, compute_jitter=jitter)
+    m = sim.run(jobs, horizon_ms=3_600_000)
+    its = m.iter_times("vgg19")
+    return statistics.mean(its), m.ecn_per_iter()
+
+
+def run() -> list[dict]:
+    topo = Topology.paper_testbed()
+    pl = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+
+    # baseline: no CASSINI at all
+    jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=250)
+    sim = ClusterSimulator(topo, FixedPlacementScheduler(pl), compute_jitter=0.003)
+    m = sim.run(jobs, horizon_ms=3_600_000)
+    base = statistics.mean(m.iter_times("vgg19"))
+
+    rows = [{"name": "ablate/themis-baseline", "us_per_call": 0.0,
+             "derived": f"mean={base:.0f}ms ecn={m.ecn_per_iter():.0f}"}]
+    for name, kw in [
+        ("full", {}),
+        ("no-pacing", {"pace_threshold": 1.1}),   # threshold unreachable
+        ("coarse-30deg", {"precision": 30.0}),
+    ]:
+        mean, ecn = _run(topo, pl, **kw)
+        rows.append({
+            "name": f"ablate/{name}", "us_per_call": 0.0,
+            "derived": f"mean={mean:.0f}ms ecn={ecn:.0f} speedup={base/mean:.2f}x",
+        })
+    return rows

@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable
+
+from repro.cluster import ClusterSimulator, Topology, ideal_metrics
+from repro.sched import CassiniAugmented, PolluxScheduler, RandomScheduler, ThemisScheduler
+from repro.sched.fixed import FixedPlacementScheduler
+
+SCHEDULERS: dict[str, Callable] = {
+    "themis": lambda: ThemisScheduler(),
+    "th+cassini": lambda: CassiniAugmented(ThemisScheduler()),
+    "pollux": lambda: PolluxScheduler(),
+    "po+cassini": lambda: CassiniAugmented(PolluxScheduler()),
+    "random": lambda: RandomScheduler(),
+}
+
+
+def pct(xs, q):
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(q / 100.0 * len(ys)))]
+
+
+def run_trace(topo, jobs, sched, *, epoch_ms=300_000.0, jitter=0.005,
+              horizon_ms=7_200_000.0, seed=0):
+    sim = ClusterSimulator(topo, sched, epoch_ms=epoch_ms,
+                           compute_jitter=jitter, seed=seed)
+    t0 = time.time()
+    metrics = sim.run(jobs, horizon_ms=horizon_ms)
+    return metrics, time.time() - t0, sim
+
+
+def timed(fn, *args, repeat=3, **kw):
+    ts = []
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return out, statistics.median(ts)

@@ -1,0 +1,62 @@
+"""Paper Fig. 10: dynamic trace — DLRM + ResNet50 arrive into a busy
+cluster (the congestion stress test).  Reports slowdowns (iter/solo) and
+ECN marks per iteration (paper: 27-33x fewer marks under CASSINI)."""
+
+from __future__ import annotations
+
+from repro.cluster import Topology, dynamic_trace
+
+from .common import SCHEDULERS, pct, run_trace
+
+
+def _jobs(topo):
+    # 3 base jobs x 7 workers fragment across racks; the burst takes the
+    # scattered leftovers - the paper's "busy cluster" arrival scenario.
+    jobs = dynamic_trace(
+        topo,
+        base_models=("vgg19", "wideresnet101", "gpt1"),
+        burst_models=("dlrm", "resnet50"),
+        burst_at_ms=90_000.0,
+        workers=7,
+        iters=350,
+    )
+    for j in jobs:
+        if j.job_id.startswith("burst"):
+            j.num_workers = 4
+    return jobs
+
+
+def run() -> list[dict]:
+    topo = Topology.paper_testbed()
+    rows = []
+    res = {}
+    for name in ("themis", "th+cassini", "pollux", "po+cassini"):
+        jobs = _jobs(topo)
+        m, wall, _ = run_trace(topo, jobs, SCHEDULERS[name]())
+        sl = m.slowdowns()
+        res[name] = dict(
+            avg=m.avg_iter_ms, sl_avg=m.avg_slowdown, sl_p99=m.pct_slowdown(99),
+            ecn=m.ecn_per_iter(),
+            ecn_dlrm=m.ecn_per_iter("dlrm"),
+            ecn_resnet=m.ecn_per_iter("resnet50"),
+        )
+        r = res[name]
+        rows.append({
+            "name": f"fig10/{name}", "us_per_call": wall * 1e6,
+            "derived": (
+                f"avg={r['avg']:.0f}ms slowdown avg={r['sl_avg']:.3f} "
+                f"p99={r['sl_p99']:.2f} ecn={r['ecn']:.0f} "
+                f"ecn_dlrm={r['ecn_dlrm']:.0f} ecn_resnet={r['ecn_resnet']:.0f}"
+            ),
+        })
+    for a, b in (("themis", "th+cassini"), ("pollux", "po+cassini")):
+        rows.append({
+            "name": f"fig10/{b}-vs-{a}", "us_per_call": 0.0,
+            "derived": (
+                f"slowdown avg {res[a]['sl_avg']/res[b]['sl_avg']:.2f}x "
+                f"p99 {res[a]['sl_p99']/res[b]['sl_p99']:.2f}x "
+                f"ecn {res[a]['ecn']/max(res[b]['ecn'],1e-9):.1f}x "
+                f"(paper: 1.5-1.6x avg / 2.2-2.5x p99 / 27-33x ecn)"
+            ),
+        })
+    return rows

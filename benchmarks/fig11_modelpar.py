@@ -1,0 +1,44 @@
+"""Paper Fig. 11: all-model-parallel trace (GPT family + DLRM).  CASSINI
+must steer toward the compatible ⟨GPT-1,GPT-2⟩ / ⟨GPT-3,DLRM⟩ pairings."""
+
+from __future__ import annotations
+
+from repro.cluster import Topology, dynamic_trace
+
+from .common import SCHEDULERS, pct, run_trace
+
+
+def run() -> list[dict]:
+    topo = Topology.paper_testbed()
+    rows = []
+    res = {}
+    for name in ("themis", "th+cassini"):
+        jobs = dynamic_trace(
+            topo,
+            base_models=("gpt1", "gpt2", "gpt3"),
+            burst_models=("dlrm", "gpt2"),
+            burst_at_ms=120_000.0,
+            workers=7,
+            iters=300,
+        )
+        for j in jobs:
+            if j.job_id.startswith("burst"):
+                j.num_workers = 5
+        m, wall, sim = run_trace(topo, jobs, SCHEDULERS[name]())
+        its = m.iter_times()
+        res[name] = dict(avg=sum(its) / len(its), p99=pct(its, 99),
+                         ecn=m.ecn_per_iter())
+        r = res[name]
+        rows.append({
+            "name": f"fig11/{name}", "us_per_call": wall * 1e6,
+            "derived": f"avg={r['avg']:.0f}ms p99={r['p99']:.0f}ms ecn={r['ecn']:.0f}",
+        })
+    a, b = res["themis"], res["th+cassini"]
+    rows.append({
+        "name": "fig11/speedup", "us_per_call": 0.0,
+        "derived": (
+            f"avg {a['avg']/b['avg']:.2f}x p99 {a['p99']/b['p99']:.2f}x "
+            f"ecn {a['ecn']/max(b['ecn'],1e-9):.1f}x (paper: 1.2x/1.6x, ecn 29x)"
+        ),
+    })
+    return rows

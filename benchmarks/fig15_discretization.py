@@ -1,0 +1,34 @@
+"""Paper Fig. 15: angle-discretization sweep — optimization wall time vs
+time-shift accuracy (5° is the paper's sweet spot)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import find_rotations
+from repro.profiles import get_profile
+
+
+def run() -> list[dict]:
+    pats = [get_profile("wideresnet101").pattern(4),
+            get_profile("vgg16").pattern(4)]
+    # reference: finest grid
+    ref = find_rotations(pats, 50.0, precision_deg=1.0)
+    ref_shift = ref.shifts_ms[1]
+    rows = []
+    for deg in (45.0, 20.0, 10.0, 5.0, 2.0, 1.0):
+        t0 = time.perf_counter()
+        res = find_rotations(pats, 50.0, precision_deg=deg)
+        us = (time.perf_counter() - t0) * 1e6
+        err = abs(res.shifts_ms[1] - ref_shift)
+        err = min(err, pats[1].iter_time_ms - err)
+        acc = 100.0 * max(0.0, 1.0 - err / pats[1].iter_time_ms)
+        rows.append({
+            "name": f"fig15/precision_{deg:g}deg",
+            "us_per_call": us,
+            "derived": (
+                f"score={res.score:.3f} shift={res.shifts_ms[1]:.0f}ms "
+                f"accuracy={acc:.1f}% (ref {ref_shift:.0f}ms)"
+            ),
+        })
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Fig. 2: two VGG19 jobs sharing one uplink — fair-share DCQCN vs a
+CASSINI time-shift.  Reports mean and p90 iteration time and ECN marks."""
+
+from __future__ import annotations
+
+import statistics
+
+from repro.cluster import Topology, snapshot_trace
+from repro.sched import CassiniAugmented
+from repro.sched.fixed import FixedPlacementScheduler
+
+from .common import pct, run_trace
+
+
+def run() -> list[dict]:
+    topo = Topology.paper_testbed()
+    pl = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+    rows = []
+    results = {}
+    for name, cass in [("scenario1-fair-share", False), ("scenario2-cassini", True)]:
+        jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=500)
+        sched = FixedPlacementScheduler(pl)
+        if cass:
+            sched = CassiniAugmented(sched, num_candidates=1)
+        m, wall, sim = run_trace(topo, jobs, sched, jitter=0.0)
+        its = m.iter_times("vgg19")
+        results[name] = dict(
+            mean=statistics.mean(its), p90=pct(its, 90), ecn=m.ecn_per_iter()
+        )
+        shifts = {j.job_id: round(j.time_shift_ms, 1) for j in m.jobs}
+        rows.append({"name": f"fig2/{name}", "us_per_call": wall * 1e6,
+                     "derived": f"mean={results[name]['mean']:.0f}ms "
+                                f"p90={results[name]['p90']:.0f}ms "
+                                f"ecn={results[name]['ecn']:.0f} shifts={shifts}"})
+    s1, s2 = results["scenario1-fair-share"], results["scenario2-cassini"]
+    rows.append({
+        "name": "fig2/speedup",
+        "us_per_call": 0.0,
+        "derived": (
+            f"p90 {s1['p90']/s2['p90']:.2f}x (paper: 1.26x) "
+            f"mean {s1['mean']/s2['mean']:.2f}x ecn {s1['ecn']/max(s2['ecn'],1e-9):.0f}x"
+        ),
+    })
+    return rows

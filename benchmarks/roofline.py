@@ -1,0 +1,169 @@
+"""Roofline analysis from the multi-pod dry-run cache (deliverable g).
+
+For every (arch × shape) cell on the single-pod mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs           [s]
+    memory term     = HLO_bytes_per_device / HBM_bw               [s]
+    collective term = collective_bytes_per_device / ICI link_bw   [s]
+
+(The dry-run parses the *post-SPMD* per-device HLO, so FLOPs/bytes are
+already per chip; the assignment's "÷ chips" of global quantities is the
+same number.)  We also report MODEL_FLOPS = 6·N(_active)·D (train) or
+2·N·D (prefill/decode) and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs · chips), which catches remat/redundancy waste.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models.api import SHAPES, build_model
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+CACHE = Path(__file__).resolve().parent / "dryrun_cache"
+
+_PARAM_CACHE: dict[str, tuple[int, int]] = {}
+
+
+def param_counts(arch: str) -> tuple[int, int]:
+    """(total params, active params per token) — active discounts inactive
+    experts for MoE archs."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        keys = "/".join(str(k) for k in path)
+        if cfg.is_moe and ("w_gate" in keys or "w_up" in keys or "w_down" in keys) \
+                and len(leaf.shape) >= 3 and leaf.shape[-3] == cfg.num_experts:
+            active += n * cfg.top_k // cfg.num_experts
+        else:
+            active += n
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    total, active = param_counts(arch)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * active * tokens
+
+
+def cell_terms(rec: dict, arch: str, shape_name: str) -> dict:
+    devices = rec.get("devices", 256)
+    flops_dev = rec.get("flops", 0.0) or 0.0
+    bytes_dev = rec.get("bytes_accessed", 0.0) or 0.0
+    coll_dev = rec.get("collectives", {}).get("bytes", {}).get("total", 0.0)
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(arch, shape_name)
+    useful = mf / (flops_dev * devices) if flops_dev > 0 else float("nan")
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful-model-compute time over the bound term
+    t_model = mf / devices / PEAK_FLOPS
+    frac = t_model / bound if bound > 0 else float("nan")
+    return dict(
+        devices=devices, t_comp=t_comp, t_mem=t_mem, t_coll=t_coll,
+        dominant=dom, model_flops=mf, useful_ratio=useful,
+        roofline_frac=frac,
+        peak_gib=rec.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30,
+    )
+
+
+def load_cell(arch: str, shape_name: str, mesh: str = "single") -> dict | None:
+    f = CACHE / f"{arch}__{shape_name}__{mesh}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            rec = load_cell(arch, shape_name)
+            if rec is None:
+                continue
+            if rec["status"] == "skip":
+                rows.append({
+                    "name": f"roofline/{arch}/{shape_name}",
+                    "us_per_call": 0.0,
+                    "derived": f"SKIP ({rec['reason'][:60]}…)",
+                })
+                continue
+            if rec["status"] != "ok":
+                rows.append({
+                    "name": f"roofline/{arch}/{shape_name}",
+                    "us_per_call": 0.0,
+                    "derived": f"ERROR {rec.get('error','?')[:80]}",
+                })
+                continue
+            t = cell_terms(rec, arch, shape_name)
+            rows.append({
+                "name": f"roofline/{arch}/{shape_name}",
+                "us_per_call": max(t["t_comp"], t["t_mem"], t["t_coll"]) * 1e6,
+                "derived": (
+                    f"comp={t['t_comp']*1e3:.2f}ms mem={t['t_mem']*1e3:.2f}ms "
+                    f"coll={t['t_coll']*1e3:.2f}ms dom={t['dominant']} "
+                    f"useful={t['useful_ratio']:.2f} "
+                    f"roofline={t['roofline_frac']*100:.0f}% "
+                    f"peak/dev={t['peak_gib']:.2f}GiB"
+                ),
+            })
+    return rows
+
+
+def table(mesh: str = "single") -> str:
+    """Markdown roofline table for EXPERIMENTS.md."""
+    lines = [
+        "| arch | shape | devs | compute s | memory s | collective s | "
+        "dominant | MODEL_FLOPs | useful | roofline | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            rec = load_cell(arch, shape_name, mesh)
+            if rec is None:
+                continue
+            if rec["status"] == "skip":
+                lines.append(
+                    f"| {arch} | {shape_name} | — | — | — | — | SKIP "
+                    f"(full-attention 500k) | — | — | — | — |"
+                )
+                continue
+            if rec["status"] != "ok":
+                lines.append(f"| {arch} | {shape_name} | ERROR | | | | | | | | |")
+                continue
+            t = cell_terms(rec, arch, shape_name)
+            lines.append(
+                f"| {arch} | {shape_name} | {t['devices']} "
+                f"| {t['t_comp']:.3e} | {t['t_mem']:.3e} | {t['t_coll']:.3e} "
+                f"| **{t['dominant']}** | {t['model_flops']:.2e} "
+                f"| {t['useful_ratio']:.2f} | {t['roofline_frac']*100:.0f}% "
+                f"| {t['peak_gib']:.2f} |"
+            )
+    return "\n".join(lines)

@@ -1,0 +1,59 @@
+"""Batched autoregressive serving demo: prefill a batch of prompts, then
+greedy-decode continuation tokens with the KV cache / SSM state.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch mamba2-1.3b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models.api import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = args.batch, args.prompt_len
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    print(f"arch={cfg.name} batch={b} prompt={s} new={args.new_tokens}")
+
+    state = model.init_decode_state(b, s + args.new_tokens)
+    step = jax.jit(model.serve_step)
+
+    # prefill via the decode path (token-by-token teacher forcing keeps the
+    # example family-agnostic; the prefill_32k path is exercised by dryrun)
+    t0 = time.time()
+    logits = None
+    for t in range(s):
+        logits, state = step(params, prompts[:, t:t + 1], state)
+    print(f"prefill: {s} steps in {time.time()-t0:.2f}s")
+
+    # greedy decode
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens - 1):
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.new_tokens} tokens/seq in {dt:.2f}s "
+          f"({b * args.new_tokens / dt:.1f} tok/s)")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""CASSINI reproduction: network-aware ML-cluster scheduling on a
+production-grade JAX training/serving substrate."""
+
+__version__ = "1.0.0"

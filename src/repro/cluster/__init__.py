@@ -1,0 +1,24 @@
+"""Cluster substrate: topology, jobs, fluid network model, simulator, traces."""
+
+from .ideal import ideal_metrics
+from .job import Job, JobState
+from .network import FluidNetworkSim, Segment, segments_from_pattern
+from .simulator import ClusterSimulator, Metrics
+from .topology import Link, Topology
+from .traces import dynamic_trace, poisson_trace, snapshot_trace
+
+__all__ = [
+    "Job",
+    "JobState",
+    "FluidNetworkSim",
+    "Segment",
+    "segments_from_pattern",
+    "ClusterSimulator",
+    "Metrics",
+    "Link",
+    "Topology",
+    "poisson_trace",
+    "dynamic_trace",
+    "snapshot_trace",
+    "ideal_metrics",
+]

@@ -1,0 +1,32 @@
+"""Ideal (dedicated-cluster) reference metrics (paper §5.1).
+
+Runs every job alone on a fresh copy of the fabric — no contention ever —
+and stitches the resulting per-job iteration times into a Metrics object.
+"""
+
+from __future__ import annotations
+
+import copy
+
+from repro.cluster.job import Job
+from repro.cluster.network import FluidNetworkSim
+from repro.cluster.simulator import Metrics
+from repro.cluster.topology import Topology
+
+__all__ = ["ideal_metrics"]
+
+
+def ideal_metrics(topo: Topology, jobs: list[Job]) -> Metrics:
+    out: list[Job] = []
+    for j in jobs:
+        job = copy.deepcopy(j)
+        job.placement = tuple(range(min(job.num_workers, topo.num_gpus)))
+        sim = FluidNetworkSim(topo)
+        sim.now_ms = job.arrival_ms
+        job.state = job.state.RUNNING
+        sim.configure([job])
+        # a job alone can never be slowed down: advance until done
+        horizon = job.arrival_ms + job.duration_iters * job.solo_iter_ms * 3 + 10_000
+        sim.advance(horizon)
+        out.append(job)
+    return Metrics(jobs=out)

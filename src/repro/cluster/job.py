@@ -1,0 +1,82 @@
+"""Job model for the cluster scheduler/simulator."""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+from repro.core.circle import CommPattern
+from repro.profiles.models import ModelProfile, get_profile
+
+__all__ = ["JobState", "Job"]
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclass
+class Job:
+    """One training job in the cluster.
+
+    A job requests ``num_workers`` GPUs and runs ``duration_iters`` training
+    iterations; the scheduler may change its placement (and CASSINI its
+    time-shift) at every scheduling epoch.
+    """
+
+    job_id: str
+    model: str
+    num_workers: int
+    duration_iters: int
+    arrival_ms: float = 0.0
+    batch_per_gpu: int | None = None
+
+    # runtime state ------------------------------------------------- #
+    state: JobState = JobState.PENDING
+    placement: tuple[int, ...] = ()          # server ids
+    time_shift_ms: float = 0.0
+    pending_shift_ms: float | None = None    # applied at next iteration start
+    align: bool = False                      # CASSINI agent holds the shift (§5.7)
+    paced_iter_ms: float | None = None       # isochronous pacing period
+    drift_adjustments: int = 0
+    iters_done: int = 0
+    iter_times_ms: list[float] = field(default_factory=list)
+    ecn_marks: list[float] = field(default_factory=list)
+    start_ms: float | None = None
+    finish_ms: float | None = None
+
+    # -------------------------------------------------------------- #
+    @property
+    def profile(self) -> ModelProfile:
+        return get_profile(self.model)
+
+    def pattern(self, num_workers: int | None = None) -> CommPattern:
+        return self.profile.pattern(
+            num_workers=num_workers or self.num_workers,
+            batch_per_gpu=self.batch_per_gpu,
+        )
+
+    @property
+    def solo_iter_ms(self) -> float:
+        return self.profile.iter_time_ms(self.num_workers, self.batch_per_gpu)
+
+    @property
+    def jct_ms(self) -> float | None:
+        """Job completion time (arrival → finish)."""
+        if self.finish_ms is None:
+            return None
+        return self.finish_ms - self.arrival_ms
+
+    def remaining_iters(self) -> int:
+        return max(0, self.duration_iters - self.iters_done)
+
+    # -------------------------------------------------------------- #
+    def mean_iter_ms(self) -> float | None:
+        if not self.iter_times_ms:
+            return None
+        return sum(self.iter_times_ms) / len(self.iter_times_ms)
+
+    def __repr__(self) -> str:
+        return f"{self.job_id}({self.model}x{self.num_workers})"

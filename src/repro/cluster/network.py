@@ -1,0 +1,394 @@
+"""Event-driven fluid model of the cluster fabric.
+
+Each running job executes a cyclic sequence of *segments* derived from its
+:class:`~repro.core.circle.CommPattern`:
+
+  - **compute** segments advance in wall-clock time unconditionally,
+  - **comm** segments carry a fixed number of Gbits at a demand cap
+    (the phase's Gbps); their *achieved* rate is the job's max-min-fair
+    share across every link it traverses.
+
+Between events (segment completions / scheduler epochs) all rates are
+constant, so the simulator jumps directly to the next completion — an exact
+fluid solution, not a time-stepped approximation.  Congestion therefore
+manifests exactly as in the paper: jobs whose Up phases collide on a link
+get a fraction of the link and their iterations stretch; CASSINI's
+time-shifts (applied as one-shot delays before the next iteration) move the
+phases apart and restore full-rate communication.
+
+ECN marking model: whenever aggregate *demand* on a link exceeds capacity,
+marks accrue at ``ecn_marks_per_gbit`` × excess-bits, attributed to the
+jobs on the link in proportion to their demand — the macroscopic behaviour
+of DCQCN/WRED marking in the paper's testbed (§5.1).
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+
+from repro.cluster.job import Job
+from repro.cluster.topology import Link, Topology
+from repro.core.circle import CommPattern
+
+__all__ = ["Segment", "segments_from_pattern", "FluidNetworkSim"]
+
+_EPS = 1e-9
+
+
+@dataclass
+class Segment:
+    """One piecewise-constant piece of a job's iteration cycle."""
+
+    kind: str          # "compute" | "comm"
+    duration_ms: float # compute: wall time; comm: duration at full demand
+    gbps: float = 0.0  # comm demand cap
+
+    @property
+    def gbits(self) -> float:
+        return self.gbps * self.duration_ms * 1e-3
+
+
+def segments_from_pattern(pattern: CommPattern) -> list[Segment]:
+    """Convert a (possibly overlapping-phase) pattern into alternating
+    compute/comm segments with piecewise-constant demand."""
+    t = pattern.iter_time_ms
+    points = {0.0, t}
+    for ph in pattern.phases:
+        points.add(ph.start_ms % t)
+        points.add(min((ph.start_ms % t) + ph.duration_ms, t))
+        if (ph.start_ms % t) + ph.duration_ms > t:  # wrapped phase
+            points.add(((ph.start_ms % t) + ph.duration_ms) % t)
+    cuts = sorted(points)
+    segs: list[Segment] = []
+    for a, b in zip(cuts, cuts[1:]):
+        if b - a < _EPS:
+            continue
+        mid = 0.5 * (a + b)
+        level = float(pattern.demand_at(mid))
+        if segs and (segs[-1].gbps - level) == 0.0 and (level > 0) == (segs[-1].kind == "comm"):
+            segs[-1].duration_ms += b - a
+        elif level > _EPS:
+            segs.append(Segment("comm", b - a, level))
+        else:
+            segs.append(Segment("compute", b - a))
+    if not segs:
+        segs.append(Segment("compute", t))
+    return segs
+
+
+# ---------------------------------------------------------------------- #
+@dataclass
+class _JobExec:
+    """Mutable execution state of one running job."""
+
+    job: Job
+    segments: list[Segment]
+    links: list[Link]
+    seg_idx: int = 0
+    remaining: float = 0.0        # compute: ms left; comm: Gbit left
+    delay_ms: float = 0.0         # one-shot delay before next segment runs
+    iter_start_ms: float = 0.0
+    marks: float = 0.0            # ECN marks accumulated this iteration
+    # CASSINI drift-adjustment agent (paper §4.2 step 3, §5.7):
+    solo_iter_ms: float = 0.0
+    paced_iter_ms: float = 0.0          # isochronous grid period (≥ solo)
+    ideal_next_ms: float | None = None  # armed only for aligned jobs
+    applied_shift_ms: float = 0.0       # shift already realized by delays
+    consec_adjust: int = 0              # disarm guard
+    skip_record: bool = False           # one-shot setup delay in this iter
+
+    def reset_segment(self) -> None:
+        seg = self.segments[self.seg_idx]
+        self.remaining = seg.duration_ms if self.kind == "compute" or not self.links else seg.gbits
+
+    @property
+    def kind(self) -> str:
+        return self.segments[self.seg_idx].kind
+
+    @property
+    def cap_gbps(self) -> float:
+        return self.segments[self.seg_idx].gbps
+
+
+class FluidNetworkSim:
+    """Exact event-driven fluid simulation of jobs sharing the fabric."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        *,
+        ecn_marks_per_gbit: float = 1000.0,
+        compute_jitter: float = 0.0,
+        migration_pause_ms: float = 1000.0,
+        drift_tolerance: float = 0.05,
+        congested_efficiency: float = 0.88,
+        seed: int = 0,
+    ) -> None:
+        # DCQCN under congestion does not achieve the full link rate: the
+        # paper's own Fig. 2(b) measures two competing jobs at ~22 Gbps each
+        # on a 50 Gbps link (~88 %).  When aggregate demand exceeds capacity
+        # the contended link delivers capacity × this factor.
+        self.congested_efficiency = congested_efficiency
+        self.topo = topology
+        self.drift_tolerance = drift_tolerance
+        self.ecn_marks_per_gbit = ecn_marks_per_gbit
+        self.compute_jitter = compute_jitter
+        self.migration_pause_ms = migration_pause_ms
+        self._rng = random.Random(seed)
+        self.now_ms: float = 0.0
+        self._execs: dict[str, _JobExec] = {}
+
+    # -------------------------------------------------------------- #
+    def configure(self, jobs: list[Job]) -> None:
+        """(Re)configure the running set after a scheduling decision.
+
+        Jobs keep their identity across epochs; a job whose placement
+        changed pays ``migration_pause_ms`` (checkpoint-restore) and every
+        job (re)starts its cycle at its (new) time-shift delay.
+        """
+        new: dict[str, _JobExec] = {}
+        for job in jobs:
+            pattern = job.pattern()
+            segs = segments_from_pattern(pattern)
+            links = self.topo.job_links(job.placement)
+            prev = self._execs.get(job.job_id)
+            ex = _JobExec(
+                job=job, segments=segs, links=links,
+                solo_iter_ms=pattern.iter_time_ms,
+                paced_iter_ms=job.paced_iter_ms or pattern.iter_time_ms,
+            )
+            migrated = prev is not None and prev.links != links
+            if prev is None or migrated:
+                ex.delay_ms = (self.migration_pause_ms if migrated else 0.0)
+                ex.delay_ms += job.time_shift_ms
+                ex.applied_shift_ms = job.time_shift_ms
+                ex.iter_start_ms = self.now_ms
+                ex.seg_idx = 0
+                ex.reset_segment()
+                # the migration pause / initial shift is a one-shot setup
+                # cost, not an iteration time: exclude it from the CDF
+                ex.skip_record = ex.delay_ms > _EPS
+                if job.align:
+                    ex.ideal_next_ms = self.now_ms + ex.delay_ms + ex.paced_iter_ms
+            else:
+                # same placement: keep mid-iteration progress.  A shift from
+                # this epoch's decision is applied as the *delta* against the
+                # shift this worker has already realized (re-sending the same
+                # shift must be a no-op).
+                ex.seg_idx = prev.seg_idx
+                ex.remaining = prev.remaining
+                ex.iter_start_ms = prev.iter_start_ms
+                ex.marks = prev.marks
+                ex.delay_ms = prev.delay_ms
+                ex.applied_shift_ms = prev.applied_shift_ms
+                ex.ideal_next_ms = prev.ideal_next_ms
+                ex.consec_adjust = prev.consec_adjust
+                ex.skip_record = prev.skip_record
+                if job.pending_shift_ms is not None:
+                    delta = (job.pending_shift_ms - prev.applied_shift_ms) % ex.solo_iter_ms
+                    if delta > _EPS and (ex.solo_iter_ms - delta) > _EPS:
+                        ex.delay_ms += delta
+                        ex.skip_record = True
+                        if ex.ideal_next_ms is not None:
+                            ex.ideal_next_ms += delta
+                    ex.applied_shift_ms = job.pending_shift_ms
+                # (re)arm / disarm the alignment agent (§5.7)
+                if job.align and ex.ideal_next_ms is None:
+                    ex.ideal_next_ms = ex.iter_start_ms + ex.delay_ms + ex.paced_iter_ms
+                    ex.consec_adjust = 0
+                elif not job.align:
+                    ex.ideal_next_ms = None
+            job.pending_shift_ms = None
+            if job.start_ms is None:
+                job.start_ms = self.now_ms
+            new[job.job_id] = ex
+        self._execs = new
+
+    # -------------------------------------------------------------- #
+    def _allocate(self) -> dict[str, float]:
+        """Max-min-fair rates (Gbps) for jobs currently in a comm segment,
+        respecting per-segment demand caps (progressive filling)."""
+        comm = {
+            jid: ex
+            for jid, ex in self._execs.items()
+            if ex.kind == "comm" and ex.delay_ms <= _EPS and ex.links
+        }
+        rates = {jid: 0.0 for jid in comm}
+        if not comm:
+            return rates
+        remaining = {}
+        users: dict[str, list[str]] = {}
+        demand: dict[str, float] = {}
+        caps: dict[str, float] = {}
+        for jid, ex in comm.items():
+            for l in ex.links:
+                users.setdefault(l.name, []).append(jid)
+                demand[l.name] = demand.get(l.name, 0.0) + ex.cap_gbps
+                caps[l.name] = l.capacity_gbps
+        for lname, cap in caps.items():
+            eff = self.congested_efficiency if demand[lname] > cap + _EPS else 1.0
+            remaining[lname] = cap * eff
+        unfrozen = set(comm)
+        while unfrozen:
+            # next increment: smallest of (per-link equal share, cap slack)
+            inc = math.inf
+            for lname, js in users.items():
+                live = [j for j in js if j in unfrozen]
+                if live:
+                    inc = min(inc, remaining[lname] / len(live))
+            for j in unfrozen:
+                inc = min(inc, comm[j].cap_gbps - rates[j])
+            if inc is math.inf or inc < 0:
+                break
+            for j in unfrozen:
+                rates[j] += inc
+            for lname, js in users.items():
+                live = sum(1 for j in js if j in unfrozen)
+                remaining[lname] -= inc * live
+            newly_frozen = {
+                j for j in unfrozen if comm[j].cap_gbps - rates[j] <= _EPS
+            }
+            for lname, js in users.items():
+                if remaining[lname] <= _EPS:
+                    newly_frozen |= {j for j in js if j in unfrozen}
+            if not newly_frozen:
+                break
+            unfrozen -= newly_frozen
+        return rates
+
+    def _mark_rates(self) -> dict[str, float]:
+        """ECN marks per ms for each job (demand-over-capacity model)."""
+        comm = {
+            jid: ex
+            for jid, ex in self._execs.items()
+            if ex.kind == "comm" and ex.delay_ms <= _EPS and ex.links
+        }
+        demand: dict[str, float] = {}
+        users: dict[str, list[str]] = {}
+        caps: dict[str, float] = {}
+        for jid, ex in comm.items():
+            for l in ex.links:
+                demand[l.name] = demand.get(l.name, 0.0) + ex.cap_gbps
+                users.setdefault(l.name, []).append(jid)
+                caps[l.name] = l.capacity_gbps
+        marks = {jid: 0.0 for jid in comm}
+        for lname, d in demand.items():
+            excess = d - caps[lname]
+            if excess <= 0:
+                continue
+            for jid in users[lname]:
+                share = comm[jid].cap_gbps / d
+                # Gbit/ms of excess attributed to this job × marks/Gbit
+                marks[jid] += excess * share * 1e-3 * self.ecn_marks_per_gbit
+        return marks
+
+    # -------------------------------------------------------------- #
+    def advance(self, until_ms: float, *, max_events: int = 2_000_000) -> list[Job]:
+        """Advance the fluid simulation to ``until_ms`` (exact events).
+
+        Returns as soon as one or more jobs finish their last iteration (so
+        the cluster simulator can react to the departure immediately); the
+        finished jobs are returned with ``finish_ms`` / ``state`` set.
+        """
+        from repro.cluster.job import JobState
+
+        finished: list[Job] = []
+        events = 0
+        while self.now_ms < until_ms - _EPS and self._execs:
+            events += 1
+            if events > max_events:
+                raise RuntimeError("fluid sim exceeded max_events")
+            rates = self._allocate()
+            marks = self._mark_rates()
+            # time to next event for every job
+            dt = until_ms - self.now_ms
+            for jid, ex in self._execs.items():
+                if ex.delay_ms > _EPS:
+                    dt = min(dt, ex.delay_ms)
+                elif ex.kind == "compute" or not ex.links:
+                    dt = min(dt, ex.remaining)
+                else:
+                    r = rates.get(jid, 0.0)
+                    if r > _EPS:
+                        dt = min(dt, ex.remaining / r * 1e3)
+            dt = max(dt, 1e-6)
+            self.now_ms += dt
+            # progress everyone by dt (rates constant over the interval)
+            for jid, ex in list(self._execs.items()):
+                if ex.delay_ms > _EPS:
+                    ex.delay_ms = max(0.0, ex.delay_ms - dt)
+                    continue
+                if ex.kind == "compute" or not ex.links:
+                    ex.remaining -= dt
+                else:
+                    ex.remaining -= rates.get(jid, 0.0) * dt * 1e-3
+                    ex.marks += marks.get(jid, 0.0) * dt
+                if ex.remaining <= _EPS:
+                    self._complete_segment(ex)
+                    if ex.job.remaining_iters() == 0:
+                        ex.job.finish_ms = self.now_ms
+                        ex.job.state = JobState.DONE
+                        del self._execs[jid]
+                        finished.append(ex.job)
+            if finished:
+                break
+        return finished
+
+    # -------------------------------------------------------------- #
+    def _complete_segment(self, ex: _JobExec) -> None:
+        ex.seg_idx += 1
+        if ex.seg_idx >= len(ex.segments):
+            # iteration boundary
+            job = ex.job
+            end = self.now_ms  # dt already chosen to land on the boundary
+            if ex.skip_record:
+                ex.skip_record = False
+            else:
+                job.iter_times_ms.append(end - ex.iter_start_ms)
+                job.ecn_marks.append(ex.marks)
+            job.iters_done += 1
+            ex.marks = 0.0
+            ex.iter_start_ms = end
+            ex.seg_idx = 0
+            # CASSINI alignment agent (§4.2 step 3, §5.7).  Aligned jobs run
+            # *isochronously* on a grid with the optimizer's (quantized)
+            # period: finishing early waits for the next slot (pacing — this
+            # is what makes interleaving stable when real iteration times
+            # differ slightly from the quantized ones the optimizer saw);
+            # drifting late by more than 5 % triggers a re-alignment delay
+            # onto the next slot.  Systematically-late jobs (3 consecutive
+            # adjustments) disarm — their placement is not interleavable and
+            # holding the grid would only burn time.
+            if ex.ideal_next_ms is not None:
+                drift = end - ex.ideal_next_ms
+                if drift <= 0.0:
+                    ex.delay_ms += -drift          # pace to the slot
+                    ex.consec_adjust = 0
+                    ex.ideal_next_ms += ex.paced_iter_ms
+                elif drift > self.drift_tolerance * ex.paced_iter_ms:
+                    extra = (-drift) % ex.paced_iter_ms
+                    ex.delay_ms += extra
+                    job.drift_adjustments += 1
+                    ex.consec_adjust += 1
+                    ex.ideal_next_ms = end + extra + ex.paced_iter_ms
+                    if ex.consec_adjust >= 3:
+                        ex.ideal_next_ms = None    # disarm
+                else:
+                    ex.consec_adjust = 0
+                    ex.ideal_next_ms += ex.paced_iter_ms
+        seg = ex.segments[ex.seg_idx]
+        if seg.kind == "compute" or not ex.links:
+            jitter = (
+                1.0 + self._rng.gauss(0.0, self.compute_jitter)
+                if self.compute_jitter > 0
+                else 1.0
+            )
+            ex.remaining = seg.duration_ms * max(0.1, jitter)
+        else:
+            ex.remaining = seg.gbits
+
+    # -------------------------------------------------------------- #
+    def finished_jobs(self) -> list[Job]:
+        return [ex.job for ex in self._execs.values() if ex.job.remaining_iters() == 0]

@@ -1,0 +1,199 @@
+"""Discrete-event cluster simulator (paper §5 methodology).
+
+Drives job arrivals/departures and scheduling epochs over the fluid network
+model.  Placement changes are triggered — exactly as in the paper — by job
+arrivals, job departures, and lease (epoch) expiry; the configured
+scheduler (optionally CASSINI-augmented) decides placements and time-shifts
+at each trigger.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.cluster.job import Job, JobState
+from repro.cluster.network import FluidNetworkSim
+from repro.cluster.topology import Topology
+from repro.sched.base import ClusterState, Decision, Scheduler
+
+__all__ = ["Metrics", "ClusterSimulator"]
+
+
+@dataclass
+class Metrics:
+    """Aggregated results of one simulation run."""
+
+    jobs: list[Job] = field(default_factory=list)
+
+    # ------------------------------------------------------------- #
+    def _all_iters(self) -> list[float]:
+        out: list[float] = []
+        for j in self.jobs:
+            out.extend(j.iter_times_ms)
+        return out
+
+    @staticmethod
+    def _pct(xs: list[float], q: float) -> float:
+        if not xs:
+            return float("nan")
+        ys = sorted(xs)
+        i = min(len(ys) - 1, max(0, int(math.ceil(q / 100.0 * len(ys))) - 1))
+        return ys[i]
+
+    @property
+    def avg_iter_ms(self) -> float:
+        xs = self._all_iters()
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def pct_iter_ms(self, q: float = 99.0) -> float:
+        return self._pct(self._all_iters(), q)
+
+    @property
+    def jcts_ms(self) -> list[float]:
+        return [j.jct_ms for j in self.jobs if j.jct_ms is not None]
+
+    @property
+    def avg_jct_ms(self) -> float:
+        xs = self.jcts_ms
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def pct_jct_ms(self, q: float = 99.0) -> float:
+        return self._pct(self.jcts_ms, q)
+
+    def ecn_per_iter(self, model: str | None = None) -> float:
+        marks: list[float] = []
+        for j in self.jobs:
+            if model is None or j.model == model:
+                marks.extend(j.ecn_marks)
+        return sum(marks) / len(marks) if marks else 0.0
+
+    def iter_times(self, model: str | None = None) -> list[float]:
+        out: list[float] = []
+        for j in self.jobs:
+            if model is None or j.model == model:
+                out.extend(j.iter_times_ms)
+        return out
+
+    def slowdowns(self, model: str | None = None) -> list[float]:
+        """Per-iteration slowdown factors iter_time / solo_iter_time — the
+        scale-free view of the paper's iteration-time CDFs for traces that
+        mix fast and slow models."""
+        out: list[float] = []
+        for j in self.jobs:
+            if model is None or j.model == model:
+                solo = max(j.solo_iter_ms, 1e-9)
+                out.extend(it / solo for it in j.iter_times_ms)
+        return out
+
+    @property
+    def avg_slowdown(self) -> float:
+        xs = self.slowdowns()
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    def pct_slowdown(self, q: float = 99.0) -> float:
+        return self._pct(self.slowdowns(), q)
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "avg_iter_ms": self.avg_iter_ms,
+            "p99_iter_ms": self.pct_iter_ms(99),
+            "avg_slowdown": self.avg_slowdown,
+            "p99_slowdown": self.pct_slowdown(99),
+            "avg_jct_ms": self.avg_jct_ms,
+            "p99_jct_ms": self.pct_jct_ms(99),
+            "ecn_per_iter": self.ecn_per_iter(),
+            "jobs_finished": float(sum(1 for j in self.jobs if j.state == JobState.DONE)),
+        }
+
+
+# ---------------------------------------------------------------------- #
+class ClusterSimulator:
+    """Event loop: arrivals → scheduling epochs → fluid network advance."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        scheduler: Scheduler,
+        *,
+        epoch_ms: float = 600_000.0,   # paper: 10-min bidding period
+        compute_jitter: float = 0.0,
+        migration_pause_ms: float = 1000.0,
+        congested_efficiency: float = 0.88,
+        seed: int = 0,
+    ) -> None:
+        self.topo = topology
+        self.scheduler = scheduler
+        self.epoch_ms = epoch_ms
+        self.net = FluidNetworkSim(
+            topology,
+            compute_jitter=compute_jitter,
+            migration_pause_ms=migration_pause_ms,
+            congested_efficiency=congested_efficiency,
+            seed=seed,
+        )
+        self.decisions: list[tuple[float, Decision]] = []
+
+    # -------------------------------------------------------------- #
+    def run(self, jobs: list[Job], *, horizon_ms: float = 36_000_000.0) -> Metrics:
+        pending = sorted(jobs, key=lambda j: j.arrival_ms)
+        running: list[Job] = []
+        done: list[Job] = []
+        next_epoch = 0.0
+
+        def reschedule(now: float) -> None:
+            state = ClusterState(
+                topology=self.topo, now_ms=now, running=list(running), pending=[]
+            )
+            decision = self.scheduler.schedule(state)
+            self.decisions.append((now, decision))
+            placed: list[Job] = []
+            for job in running:
+                servers = decision.placements.get(job.job_id, ())
+                if servers:
+                    job.placement = tuple(servers)
+                    job.state = JobState.RUNNING
+                    shift = decision.time_shifts_ms.get(job.job_id)
+                    ok = (decision.meta or {}).get("align_ok", {}).get(
+                        job.job_id, True
+                    )
+                    job.align = shift is not None and ok
+                    job.paced_iter_ms = (decision.meta or {}).get("paced_ms", {}).get(
+                        job.job_id
+                    )
+                    if shift is not None:
+                        job.pending_shift_ms = shift
+                        job.time_shift_ms = shift
+                    placed.append(job)
+                else:
+                    job.placement = ()
+                    job.state = JobState.PENDING  # queued: no GPUs this epoch
+            self.net.configure(placed)
+
+        while (pending or running) and self.net.now_ms < horizon_ms:
+            now = self.net.now_ms
+            t_arrival = pending[0].arrival_ms if pending else math.inf
+            t_event = min(t_arrival, next_epoch, horizon_ms)
+
+            if t_event > now:
+                finished = self.net.advance(t_event)
+                if finished:
+                    for job in finished:
+                        running.remove(job)
+                        done.append(job)
+                    reschedule(self.net.now_ms)  # departure triggers re-place
+                    continue
+            now = self.net.now_ms
+            if pending and now >= pending[0].arrival_ms - 1e-9:
+                while pending and pending[0].arrival_ms <= now + 1e-9:
+                    running.append(pending.pop(0))
+                reschedule(now)
+            if now >= next_epoch - 1e-9:
+                next_epoch = now + self.epoch_ms
+                if not (pending and pending[0].arrival_ms <= now + 1e-9):
+                    reschedule(now)
+
+        for job in running:  # jobs cut off by the horizon
+            if job.state == JobState.RUNNING and job.finish_ms is None:
+                job.finish_ms = None
+        return Metrics(jobs=done + running)

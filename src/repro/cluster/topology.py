@@ -1,0 +1,149 @@
+"""Cluster fabric model (paper §5.1 / Fig. 18, generalized).
+
+The paper's testbed is 24 single-GPU servers under a Tofino switch emulating
+13 logical switches, 48 bidirectional links and **2:1 oversubscription above
+the ToRs**.  We model a two-tier leaf-spine fabric:
+
+    servers ── ToR (leaf) ── spine(s)
+
+- every server has one `host` link to its ToR (full NIC rate),
+- every ToR has `uplinks` to the spine tier sized for the requested
+  oversubscription ratio (capacity = servers_per_rack × nic / oversub,
+  split across `num_spines` physical uplinks),
+- routing is deterministic: traffic between two servers in the same rack
+  stays under the ToR; cross-rack traffic uses src-ToR→spine→dst-ToR with
+  the spine chosen by a stable hash of the (src_rack, dst_rack) pair
+  (ECMP-like but reproducible).
+
+Links are unidirectional in our accounting (a, b) ordered pairs; ML
+collectives are symmetric so both directions carry the same demand and we
+track the pair once as a *bidirectional* link, which matches how the paper
+counts its 48 links.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+__all__ = ["Link", "Topology"]
+
+
+@dataclass(frozen=True)
+class Link:
+    """A (bidirectional) network link with fixed capacity."""
+
+    name: str
+    capacity_gbps: float
+
+    def __repr__(self) -> str:  # keep affinity-graph vertex labels short
+        return self.name
+
+
+def _stable_hash(*parts: object) -> int:
+    h = hashlib.blake2s("/".join(map(str, parts)).encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
+@dataclass
+class Topology:
+    """Two-tier leaf-spine topology with deterministic routing."""
+
+    num_racks: int
+    servers_per_rack: int
+    nic_gbps: float = 50.0
+    oversubscription: float = 2.0
+    num_spines: int = 0  # 0 → derived from the oversubscription ratio
+    gpus_per_server: int = 1
+
+    links: dict[str, Link] = field(default_factory=dict, repr=False)
+
+    def __post_init__(self) -> None:
+        # discrete NIC-rate uplinks (as in the paper's fabric): a rack's
+        # aggregate uplink capacity is servers × nic / oversub, realized as
+        # individual 1×nic-rate links that flows hash onto.
+        if self.num_spines <= 0:
+            self.num_spines = max(
+                1, round(self.servers_per_rack / self.oversubscription)
+            )
+        for r in range(self.num_racks):
+            for s in range(self.servers_per_rack):
+                name = f"host:r{r}s{s}"
+                self.links[name] = Link(name, self.nic_gbps)
+            for sp in range(self.num_spines):
+                name = f"up:r{r}-sp{sp}"
+                self.links[name] = Link(name, self.nic_gbps)
+
+    # -------------------------------------------------------------- #
+    @classmethod
+    def paper_testbed(cls) -> "Topology":
+        """The 24-server, 2:1-oversubscribed testbed of §5.1 (4 racks × 6)."""
+        return cls(num_racks=4, servers_per_rack=6, nic_gbps=50.0, oversubscription=2.0)
+
+    # -------------------------------------------------------------- #
+    @property
+    def num_servers(self) -> int:
+        return self.num_racks * self.servers_per_rack
+
+    @property
+    def num_gpus(self) -> int:
+        return self.num_servers * self.gpus_per_server
+
+    def server_of(self, gpu: int) -> int:
+        """Placements hold GPU ids; with gpus_per_server > 1 two GPUs can
+        share one server (and one NIC)."""
+        return gpu // self.gpus_per_server
+
+    def rack_of(self, gpu: int) -> int:
+        return self.server_of(gpu) // self.servers_per_rack
+
+    def host_link(self, server: int) -> Link:
+        r, s = divmod(server, self.servers_per_rack)
+        return self.links[f"host:r{r}s{s}"]
+
+    def uplink(self, rack: int, src_rack: int, dst_rack: int) -> Link:
+        sp = _stable_hash(min(src_rack, dst_rack), max(src_rack, dst_rack)) % self.num_spines
+        return self.links[f"up:r{rack}-sp{sp}"]
+
+    # -------------------------------------------------------------- #
+    def path(self, src_gpu: int, dst_gpu: int) -> list[Link]:
+        """Links traversed by a flow between two GPUs (NVLink-local when
+        they share a server → no network links)."""
+        src, dst = self.server_of(src_gpu), self.server_of(dst_gpu)
+        if src == dst:
+            return []
+        rs = src // self.servers_per_rack
+        rd = dst // self.servers_per_rack
+        p = [self.host_link(src)]
+        if rs != rd:
+            p.append(self.uplink(rs, rs, rd))
+            p.append(self.uplink(rd, rs, rd))
+        p.append(self.host_link(dst))
+        return p
+
+    def job_links(self, gpus: Sequence[int]) -> list[Link]:
+        """Links a job's collective traffic traverses.
+
+        Data/hybrid-parallel jobs synchronize with ring collectives over
+        their workers ordered by GPU id (NCCL ring order); the job's
+        traffic covers every link on every ring edge's path.
+        """
+        ws = sorted(set(gpus))
+        if len(ws) < 2:
+            return []
+        out: dict[str, Link] = {}
+        for a, b in zip(ws, ws[1:] + ws[:1]):
+            for l in self.path(a, b):
+                out[l.name] = l
+        return list(out.values())
+
+    def shared_links(
+        self, placements: dict[object, Sequence[int]]
+    ) -> dict[Link, list[object]]:
+        """Map of contended links → jobs whose traffic traverses them."""
+        by_link: dict[str, tuple[Link, list[object]]] = {}
+        for job, servers in placements.items():
+            for l in self.job_links(servers):
+                by_link.setdefault(l.name, (l, []))[1].append(job)
+        return {l: js for l, js in by_link.values() if len(js) > 1}

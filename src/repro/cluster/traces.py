@@ -1,0 +1,131 @@
+"""Workload traces (paper §5.1): Poisson, dynamic, snapshot.
+
+- *Poisson trace*: job arrivals with exponential inter-arrival times, rate
+  calibrated so the average fraction of busy GPUs equals ``load``.
+- *Dynamic trace*: a base set of jobs present in the cluster plus a burst
+  of new arrivals (the paper triggers DLRM + ResNet50 arrivals).
+- *Snapshot trace*: all jobs present at t = 0 (Table 2 experiments).
+
+All models have equal occurrence probability, training duration is sampled
+uniformly in [200, 1000] iterations and the initial worker request in
+[1, 12] GPUs — matching §5.1.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Sequence
+
+from repro.cluster.job import Job
+from repro.cluster.topology import Topology
+from repro.profiles.models import PROFILES, get_profile
+
+__all__ = ["poisson_trace", "dynamic_trace", "snapshot_trace"]
+
+
+def _mk_job(
+    rng: random.Random,
+    idx: int,
+    arrival_ms: float,
+    models: Sequence[str],
+    *,
+    min_workers: int = 1,
+    max_workers: int = 12,
+    min_iters: int = 200,
+    max_iters: int = 1000,
+) -> Job:
+    model = rng.choice(list(models))
+    return Job(
+        job_id=f"j{idx:03d}-{model}",
+        model=model,
+        num_workers=rng.randint(min_workers, max_workers),
+        duration_iters=rng.randint(min_iters, max_iters),
+        arrival_ms=arrival_ms,
+    )
+
+
+def poisson_trace(
+    topo: Topology,
+    *,
+    load: float = 0.9,
+    num_jobs: int = 20,
+    models: Sequence[str] | None = None,
+    seed: int = 0,
+    min_iters: int = 200,
+    max_iters: int = 1000,
+) -> list[Job]:
+    """Poisson arrivals targeting ``load`` average GPU occupancy."""
+    rng = random.Random(seed)
+    models = models or list(PROFILES)
+    jobs: list[Job] = []
+    t = 0.0
+    for i in range(num_jobs):
+        jobs.append(
+            _mk_job(rng, i, t, models, min_iters=min_iters, max_iters=max_iters)
+        )
+        j = jobs[-1]
+        # expected service time of this job (solo): iters × iter_time
+        service_ms = j.duration_iters * j.profile.iter_time_ms(j.num_workers)
+        # arrival rate so that E[busy gpus] = load × num_gpus:
+        #   λ · E[workers·service] = load · G  →  inter-arrival = w·s/(load·G)
+        inter = j.num_workers * service_ms / (load * topo.num_gpus)
+        t += rng.expovariate(1.0) * inter
+    return jobs
+
+
+def dynamic_trace(
+    topo: Topology,
+    *,
+    base_models: Sequence[str] = ("vgg19", "wideresnet101", "bert", "gpt1"),
+    burst_models: Sequence[str] = ("dlrm", "resnet50"),
+    burst_at_ms: float = 120_000.0,
+    workers: int = 4,
+    iters: int = 400,
+    seed: int = 0,
+) -> list[Job]:
+    """Base jobs at t=0; a burst of new arrivals at ``burst_at_ms`` (§5.3)."""
+    rng = random.Random(seed)
+    jobs: list[Job] = []
+    for i, m in enumerate(base_models):
+        jobs.append(
+            Job(
+                job_id=f"base{i}-{m}",
+                model=m,
+                num_workers=workers,
+                duration_iters=iters + rng.randint(0, 100),
+                arrival_ms=0.0,
+            )
+        )
+    for i, m in enumerate(burst_models):
+        jobs.append(
+            Job(
+                job_id=f"burst{i}-{m}",
+                model=m,
+                num_workers=workers,
+                duration_iters=iters,
+                arrival_ms=burst_at_ms,
+            )
+        )
+    return jobs
+
+
+def snapshot_trace(
+    specs: Sequence[tuple[str, int, int]],
+    *,
+    iters: int = 300,
+) -> list[Job]:
+    """All jobs at t=0. ``specs`` = (model, num_workers, batch_per_gpu)."""
+    jobs = []
+    for i, (model, workers, batch) in enumerate(specs):
+        get_profile(model)  # validate name
+        jobs.append(
+            Job(
+                job_id=f"snap{i}-{model}",
+                model=model,
+                num_workers=workers,
+                duration_iters=iters,
+                arrival_ms=0.0,
+                batch_per_gpu=batch,
+            )
+        )
+    return jobs

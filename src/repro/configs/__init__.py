@@ -1,0 +1,29 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` / ``ARCHS``."""
+
+from importlib import import_module
+
+from repro.models.common import ArchConfig
+
+# arch id (as assigned) -> module name
+ARCHS: dict[str, str] = {
+    "mamba2-1.3b": "mamba2_1p3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "granite-3-8b": "granite_3_8b",
+    "qwen1.5-0.5b": "qwen1p5_0p5b",
+    "smollm-135m": "smollm_135m",
+    "llama3.2-1b": "llama3p2_1b",
+    "internvl2-26b": "internvl2_26b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def get_config(arch: str) -> ArchConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+    return import_module(f"repro.configs.{ARCHS[arch]}").CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

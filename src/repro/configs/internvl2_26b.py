@@ -1,0 +1,10 @@
+"""internvl2-26b — InternViT + InternLM2 [arXiv:2404.16821; hf].
+The vision frontend is a STUB: input_specs() supplies 1024 precomputed
+patch embeddings; the 48L GQA decoder backbone is real."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", family="vlm",
+    num_layers=48, d_model=6144, num_heads=48, num_kv_heads=8, d_ff=16384,
+    vocab=92553, num_patches=1024,
+)

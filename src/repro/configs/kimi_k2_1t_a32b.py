@@ -1,0 +1,15 @@
+"""kimi-k2-1t-a32b — trillion-param MoE [arXiv:2501.kimi2; unverified].
+61L d_model=7168 64H (GQA kv=8) expert d_ff=2048 vocab=163840, 384e top-8."""
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+# 1.05T parameters: bf16 weights + bf16 Adam moments (≈6.3 TB of state)
+# fully sharded over 512 devices ≈ 12.3 GB/device — fits a 16 GB v5e chip;
+# fp32 everything would need ≥1024 chips (documented in DESIGN.md).
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8, d_ff=2048,
+    vocab=163840, num_experts=384, top_k=8,
+    param_dtype=jnp.bfloat16, opt_moments_dtype=jnp.bfloat16,
+)

@@ -1,0 +1,9 @@
+"""mamba2-1.3b — SSD state-space model [arXiv:2405.21060; unverified].
+48L d_model=2048 (attn-free) vocab=50280, ssm_state=128."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b", family="ssm",
+    num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0, d_ff=0,
+    vocab=50280, ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+)

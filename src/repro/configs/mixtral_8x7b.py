@@ -1,0 +1,8 @@
+"""mixtral-8x7b — 8 experts top-2, SWA [arXiv:2401.04088; hf]."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336,
+    vocab=32000, num_experts=8, top_k=2, sliding_window=4096,
+)

@@ -1,0 +1,8 @@
+"""qwen1.5-0.5b — dense with QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-0.5b", family="dense",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16, d_ff=2816,
+    vocab=151936, qkv_bias=True,
+)

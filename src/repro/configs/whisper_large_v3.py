@@ -1,0 +1,10 @@
+"""whisper-large-v3 — enc-dec, conv frontend stubbed [arXiv:2212.04356].
+32 encoder + 32 decoder layers; input_specs() supplies precomputed frame
+embeddings (the log-mel+conv frontend is the assignment's STUB)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3", family="audio",
+    num_layers=32, d_model=1280, num_heads=20, num_kv_heads=20, d_ff=5120,
+    vocab=51866, enc_layers=32, enc_seq=1500,
+)

@@ -1,0 +1,8 @@
+"""zamba2-7b — Mamba2 backbone + shared attention [arXiv:2411.15242]."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32, d_ff=14336,
+    vocab=32000, ssm_state=64, ssm_head_dim=64, attn_every=6,
+)

@@ -1,0 +1,31 @@
+"""CASSINI core: the paper's contribution as a composable library.
+
+- :mod:`repro.core.circle`    — geometric abstraction (§3)
+- :mod:`repro.core.compat`    — compatibility optimization (Table 1)
+- :mod:`repro.core.timeshift` — Eq. 5 + drift adjustment (§5.7)
+- :mod:`repro.core.affinity`  — affinity graph + Algorithm 1 (§4.1)
+- :mod:`repro.core.plugin`    — pluggable module, Algorithm 2 (§4.2)
+"""
+
+from .affinity import AffinityGraph, bfs_affinity_time_shifts
+from .circle import CommPattern, Phase, UnifiedCircle, unified_perimeter
+from .compat import CompatResult, compatibility_score, find_rotations
+from .plugin import CassiniDecision, CassiniModule, PlacementCandidate
+from .timeshift import DriftAdjuster, rotation_to_time_shift
+
+__all__ = [
+    "AffinityGraph",
+    "bfs_affinity_time_shifts",
+    "CommPattern",
+    "Phase",
+    "UnifiedCircle",
+    "unified_perimeter",
+    "CompatResult",
+    "compatibility_score",
+    "find_rotations",
+    "CassiniDecision",
+    "CassiniModule",
+    "PlacementCandidate",
+    "DriftAdjuster",
+    "rotation_to_time_shift",
+]

@@ -1,0 +1,186 @@
+"""CASSINI Affinity graph (paper §4.1, Algorithm 1, Theorem 1).
+
+Bipartite graph ``G = (U, V, E)``: ``U`` = jobs that share a path with at
+least one other job; ``V`` = links carrying more than one job; an edge
+``(j, l)`` exists iff job ``j`` traverses contended link ``l`` and carries
+weight ``w_e = t_j^l`` — the per-link time-shift produced by the link-level
+optimization (:mod:`repro.core.compat`).
+
+Algorithm 1 extends BFS two ways: (i) only job vertices enter the queue,
+and (ii) traversing job→link negates the edge weight while link→job adds
+it, so every job ``k`` discovered through reference job ``j`` receives
+
+    t_k = (t_j − w(j,l) + w(l,k)) mod iter_time_k .
+
+Theorem 1: on a loop-free affinity graph this assignment is unique and
+preserves, for every pair of jobs on every link, the *relative* time-shift
+chosen by the link-level optimization (mod the link's unified-circle
+perimeter).  Property-tested in ``tests/test_affinity.py``.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Hashable, Iterable, Mapping
+
+__all__ = ["AffinityGraph", "bfs_affinity_time_shifts"]
+
+JobId = Hashable
+LinkId = Hashable
+
+
+@dataclass
+class AffinityGraph:
+    """Mutable bipartite affinity graph.
+
+    ``weights[(job, link)]`` is the link-level time-shift ``t_j^l`` in ms;
+    ``iter_time_ms[job]`` is the job's own iteration time (for the final
+    ``mod`` in Algorithm 1); ``perimeter_ms[link]`` is the unified-circle
+    perimeter of that link (used by the Theorem-1 correctness check).
+    """
+
+    jobs: set[JobId] = field(default_factory=set)
+    links: set[LinkId] = field(default_factory=set)
+    job_links: dict[JobId, list[LinkId]] = field(default_factory=dict)
+    link_jobs: dict[LinkId, list[JobId]] = field(default_factory=dict)
+    weights: dict[tuple[JobId, LinkId], float] = field(default_factory=dict)
+    iter_time_ms: dict[JobId, float] = field(default_factory=dict)
+    perimeter_ms: dict[LinkId, float] = field(default_factory=dict)
+
+    # -------------------------------------------------------------- #
+    def add_edge(
+        self, job: JobId, link: LinkId, weight_ms: float, iter_time_ms: float
+    ) -> None:
+        if job not in self.jobs:
+            self.jobs.add(job)
+            self.job_links[job] = []
+        if link not in self.links:
+            self.links.add(link)
+            self.link_jobs[link] = []
+        if link not in self.job_links[job]:
+            self.job_links[job].append(link)
+        if job not in self.link_jobs[link]:
+            self.link_jobs[link].append(job)
+        self.weights[(job, link)] = float(weight_ms)
+        self.iter_time_ms[job] = float(iter_time_ms)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.weights)
+
+    # -------------------------------------------------------------- #
+    def connected_components(self) -> list[tuple[set[JobId], set[LinkId]]]:
+        """Connected subgraphs ``H ∈ G`` (Algorithm 1 line 3)."""
+        seen_jobs: set[JobId] = set()
+        comps: list[tuple[set[JobId], set[LinkId]]] = []
+        for start in self.jobs:
+            if start in seen_jobs:
+                continue
+            cj: set[JobId] = {start}
+            cl: set[LinkId] = set()
+            dq: deque[JobId] = deque([start])
+            while dq:
+                j = dq.popleft()
+                for l in self.job_links.get(j, ()):
+                    cl.add(l)
+                    for k in self.link_jobs.get(l, ()):
+                        if k not in cj:
+                            cj.add(k)
+                            dq.append(k)
+            seen_jobs |= cj
+            comps.append((cj, cl))
+        return comps
+
+    def has_loop(self) -> bool:
+        """A connected component with ``|E| ≥ |U_H| + |V_H|`` contains a cycle
+        (tree check); CASSINI discards such placements (Alg. 2 line 13)."""
+        for cj, cl in self.connected_components():
+            edges = sum(
+                1 for (j, l) in self.weights if j in cj and l in cl
+            )
+            if edges >= len(cj) + len(cl):
+                return True
+        return False
+
+    # -------------------------------------------------------------- #
+    def bfs_time_shifts(self, *, seed: int | None = 0) -> dict[JobId, float]:
+        """Algorithm 1: unique time-shift per job (milliseconds).
+
+        ``seed`` picks the random reference vertex per component (line 6);
+        ``None`` uses the system RNG, an int gives reproducibility, and the
+        reference job always receives ``t = 0``.
+        """
+        rng = random.Random(seed)
+        out: dict[JobId, float] = {}
+        for cj, _cl in self.connected_components():
+            ordered = sorted(cj, key=repr)
+            u = rng.choice(ordered)
+            t: dict[JobId, float] = {u: 0.0}
+            visited: set[JobId] = {u}
+            dq: deque[JobId] = deque([u])
+            while dq:
+                j = dq.popleft()
+                for l in self.job_links.get(j, ()):
+                    w1 = self.weights[(j, l)]
+                    for k in self.link_jobs.get(l, ()):
+                        if k in visited:
+                            continue
+                        visited.add(k)
+                        w2 = self.weights[(k, l)]
+                        # line 17: t_k = (t_j − w_e1 + w_e2) % iter_time_k
+                        t[k] = (t[j] - w1 + w2) % self.iter_time_ms[k]
+                        dq.append(k)
+            out.update(t)
+        return out
+
+    # -------------------------------------------------------------- #
+    def check_theorem1(self, shifts: Mapping[JobId, float], unit_ms: float = 1e-3) -> bool:
+        """Theorem 1 correctness predicate, in its physically-meaningful form.
+
+        Delaying a job by a multiple of its own iteration time leaves its
+        periodic traffic unchanged, and delaying *all* jobs on a link by a
+        common δ leaves their interleaving unchanged.  So the link-level
+        solution ``{t^l_j}`` is preserved on link ``l`` iff the congruence
+        system
+
+            δ ≡ t_j − t^l_j   (mod iter_time_j)   for all j on l
+
+        is solvable for a single δ_l.  (The paper states Eq. 6 with
+        differences mod ``p^l`` — the same statement before Alg. 1 line 17's
+        harmless per-job ``mod iter_time`` reductions.)  Solvability is
+        decided by general-modulus CRT on integers in ``unit_ms`` units.
+        """
+
+        def to_int(x: float) -> int:
+            return int(round(x / unit_ms))
+
+        for l, js in self.link_jobs.items():
+            if len(js) < 2:
+                continue
+            # fold congruences δ ≡ r_j (mod m_j) one by one
+            r0, m0 = 0, 1
+            for j in js:
+                m = to_int(self.iter_time_ms[j])
+                r = to_int(shifts[j] - self.weights[(j, l)]) % m
+                g = math.gcd(m0, m)
+                if (r - r0) % g != 0:
+                    return False
+                # combine: δ ≡ r0 (mod m0) ∧ δ ≡ r (mod m)
+                lcm = m0 // g * m
+                # solve r0 + k·m0 ≡ r (mod m)  →  k ≡ (r−r0)/g · inv(m0/g) (mod m/g)
+                k = ((r - r0) // g * pow(m0 // g, -1, m // g)) % (m // g) if m // g > 1 else 0
+                r0, m0 = (r0 + k * m0) % lcm, lcm
+        return True
+
+
+def bfs_affinity_time_shifts(
+    edges: Iterable[tuple[JobId, LinkId, float, float]], *, seed: int | None = 0
+) -> dict[JobId, float]:
+    """Functional wrapper: ``edges`` are ``(job, link, t_j^l, iter_time_j)``."""
+    g = AffinityGraph()
+    for job, link, w, it in edges:
+        g.add_edge(job, link, w, it)
+    return g.bfs_time_shifts(seed=seed)

@@ -1,0 +1,251 @@
+"""CASSINI geometric abstraction (paper §3).
+
+A distributed training job's network demand is periodic with its training
+iteration.  We "roll" time around a circle whose perimeter equals the
+iteration time: every Up (communication-heavy) and Down (compute-heavy)
+phase then occupies a fixed arc of the circle, identical across iterations.
+
+Jobs with different iteration times are compared on a *unified circle*
+whose perimeter is the least common multiple (LCM) of the iteration times
+of all jobs sharing a link; job ``j`` wraps around the unified circle
+``r_j = perimeter / iter_time_j`` times (paper Fig. 3).
+
+Everything here is pure, deterministic, and unit-tested; the optimization
+over rotation angles lives in :mod:`repro.core.compat`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import reduce
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Phase",
+    "CommPattern",
+    "UnifiedCircle",
+    "quantize_ms",
+    "unified_perimeter",
+]
+
+# Default angular resolution: 5 degrees (paper Fig. 15 "sweet spot").
+DEFAULT_PRECISION_DEG: float = 5.0
+# Iteration times are quantized to this grid before computing LCMs so the
+# unified-circle perimeter stays bounded (profiled iteration times carry
+# measurement noise anyway; the paper's profiler has ~ms resolution).
+DEFAULT_QUANTUM_MS: float = 10.0
+# Bounds for the adaptive per-link circle (scalability guard, §4.1):
+MAX_PERIMETER_FACTOR: float = 12.0   # perimeter ≤ this × longest iteration
+MAX_ANGLES: int = 1440               # angle-grid cap
+
+
+@dataclass(frozen=True)
+class Phase:
+    """One communication (Up) phase inside a training iteration.
+
+    Attributes:
+      start_ms:    offset of the phase start from the iteration start.
+      duration_ms: length of the phase.
+      gbps:        bandwidth demand during the phase (Gbit/s).
+    """
+
+    start_ms: float
+    duration_ms: float
+    gbps: float
+
+    def __post_init__(self) -> None:
+        if self.duration_ms < 0:
+            raise ValueError(f"negative phase duration: {self.duration_ms}")
+        if self.gbps < 0:
+            raise ValueError(f"negative bandwidth demand: {self.gbps}")
+
+
+@dataclass(frozen=True)
+class CommPattern:
+    """Periodic per-iteration communication pattern of one job.
+
+    ``phases`` may overlap (hybrid-parallel jobs superimpose AllReduce,
+    all-to-all and pipeline traffic); overlapping demands add.
+    """
+
+    iter_time_ms: float
+    phases: tuple[Phase, ...] = ()
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if self.iter_time_ms <= 0:
+            raise ValueError(f"iteration time must be positive: {self.iter_time_ms}")
+        object.__setattr__(self, "phases", tuple(self.phases))
+
+    # ------------------------------------------------------------------ #
+    def demand_at(self, t_ms: np.ndarray | float) -> np.ndarray:
+        """Bandwidth demand (Gbps) at time(s) ``t_ms`` (wrapped into the
+        iteration)."""
+        t = np.asarray(t_ms, dtype=np.float64) % self.iter_time_ms
+        total = np.zeros_like(t)
+        for ph in self.phases:
+            s = ph.start_ms % self.iter_time_ms
+            e = s + ph.duration_ms
+            inside = (t >= s) & (t < e)
+            # phase may wrap around the iteration boundary
+            if e > self.iter_time_ms:
+                inside |= t < (e - self.iter_time_ms)
+            total = total + np.where(inside, ph.gbps, 0.0)
+        return total
+
+    def demand_series(self, num_samples: int) -> np.ndarray:
+        """Demand sampled at ``num_samples`` uniform points of one iteration."""
+        t = np.arange(num_samples, dtype=np.float64) * (self.iter_time_ms / num_samples)
+        return self.demand_at(t)
+
+    @property
+    def mean_gbps(self) -> float:
+        return float(sum(p.duration_ms * p.gbps for p in self.phases) / self.iter_time_ms)
+
+    @property
+    def peak_gbps(self) -> float:
+        if not self.phases:
+            return 0.0
+        return float(np.max(self.demand_series(720)))
+
+    def scaled(self, time_scale: float = 1.0, bw_scale: float = 1.0) -> "CommPattern":
+        """A new pattern with scaled iteration time and/or bandwidth (used by
+        schedulers when the worker count / batch size of a job changes)."""
+        return CommPattern(
+            iter_time_ms=self.iter_time_ms * time_scale,
+            phases=tuple(
+                Phase(p.start_ms * time_scale, p.duration_ms * time_scale, p.gbps * bw_scale)
+                for p in self.phases
+            ),
+            name=self.name,
+        )
+
+
+# ---------------------------------------------------------------------- #
+# Unified circle
+# ---------------------------------------------------------------------- #
+def quantize_ms(t_ms: float, quantum_ms: float = DEFAULT_QUANTUM_MS) -> int:
+    """Quantize an iteration time onto the grid (integer number of quanta).
+
+    Rounds *up*: the quantized period is what aligned workers are paced at,
+    and a job can always stretch to a longer period (wait at the slot
+    boundary) but can never run faster than its own compute+comm allows.
+    """
+    return max(1, int(math.ceil(t_ms / quantum_ms - 1e-9)))
+
+
+def unified_perimeter(
+    iter_times_ms: Sequence[float], quantum_ms: float = DEFAULT_QUANTUM_MS
+) -> float:
+    """LCM of the (quantized) iteration times, in milliseconds."""
+    ticks = [quantize_ms(t, quantum_ms) for t in iter_times_ms]
+    lcm = reduce(math.lcm, ticks, 1)
+    return lcm * quantum_ms
+
+
+@dataclass
+class UnifiedCircle:
+    """The unified circle for a set of jobs competing on one link.
+
+    ``bw`` is a dense ``(num_jobs, num_angles)`` array: ``bw[j, a]`` is job
+    ``j``'s bandwidth demand at discrete angle ``a`` of the unified circle
+    (paper Table 1's ``bw_circle_j(α)``).  ``wraps[j]`` is ``r_j``.
+    """
+
+    perimeter_ms: float
+    num_angles: int
+    patterns: tuple[CommPattern, ...]
+    bw: np.ndarray = field(repr=False)
+    wraps: tuple[int, ...] = ()
+
+    # -------------------------------------------------------------- #
+    @classmethod
+    def build(
+        cls,
+        patterns: Sequence[CommPattern],
+        *,
+        precision_deg: float = DEFAULT_PRECISION_DEG,
+        quantum_ms: float = DEFAULT_QUANTUM_MS,
+        min_time_res_ms: float | None = None,
+    ) -> "UnifiedCircle":
+        """Construct the unified circle for ``patterns``.
+
+        The number of discrete angles is ``360 / precision_deg`` but is
+        raised if needed so one angle step is no coarser than
+        ``min_time_res_ms`` (defaults to ``quantum_ms``) — large LCM
+        perimeters would otherwise alias away whole Up phases.
+        """
+        if not patterns:
+            raise ValueError("need at least one job pattern")
+        iters = [p.iter_time_ms for p in patterns]
+        # Adaptive quantization: mixed iteration times can make the LCM
+        # perimeter explode (the scalability concern of paper §4.1).  We
+        # coarsen the quantum until the perimeter is a small multiple of the
+        # longest iteration — per-link circles stay cheap, at the price of
+        # alignment precision on pathological period mixes.
+        perimeter = unified_perimeter(iters, quantum_ms)
+        cap = MAX_PERIMETER_FACTOR * max(iters)
+        while perimeter > cap and quantum_ms < max(iters):
+            quantum_ms *= 2.0
+            perimeter = unified_perimeter(iters, quantum_ms)
+        num_angles = int(round(360.0 / precision_deg))
+        res = quantum_ms if min_time_res_ms is None else min_time_res_ms
+        num_angles = max(num_angles, int(math.ceil(perimeter / res)))
+        num_angles = min(num_angles, MAX_ANGLES)
+
+        # quantized iteration time of each job, in ms, so wraps divide evenly
+        q_iter = [quantize_ms(p.iter_time_ms, quantum_ms) * quantum_ms for p in patterns]
+        wraps = tuple(int(round(perimeter / q)) for q in q_iter)
+        # make num_angles a multiple of lcm(wraps): rotating job j by
+        # num_angles / r_j steps (one private iteration) must be *exactly*
+        # the identity on the discrete circle.
+        wraps_lcm = reduce(math.lcm, wraps, 1)
+        num_angles = max(int(math.ceil(num_angles / wraps_lcm)), 1) * wraps_lcm
+
+        t = np.arange(num_angles, dtype=np.float64) * (perimeter / num_angles)
+        bw = np.stack(
+            [
+                # stretch the measured pattern onto its quantized period so it
+                # tiles the unified circle exactly r_j times
+                p.scaled(time_scale=q / p.iter_time_ms).demand_at(t)
+                for p, q in zip(patterns, q_iter)
+            ]
+        )
+        return cls(
+            perimeter_ms=perimeter,
+            num_angles=num_angles,
+            patterns=tuple(patterns),
+            bw=bw,
+            wraps=wraps,
+        )
+
+    # -------------------------------------------------------------- #
+    @property
+    def angle_step_ms(self) -> float:
+        return self.perimeter_ms / self.num_angles
+
+    def shift_grid(self, j: int) -> int:
+        """Number of *distinct* rotation steps for job ``j``: rotating by one
+        full private iteration (``num_angles / r_j`` steps) is the identity on
+        the unified circle (paper Eq. 4's bound ``Δ_j ≤ 2π / r_j``)."""
+        return max(1, self.num_angles // self.wraps[j])
+
+    def rotated(self, j: int, shift_steps: int) -> np.ndarray:
+        """Job ``j``'s demand rotated counter-clockwise by ``shift_steps``
+        discrete angles — i.e. the job is *delayed* by
+        ``shift_steps * angle_step_ms``."""
+        return np.roll(self.bw[j], shift_steps)
+
+    def total_demand(self, shifts: Sequence[int]) -> np.ndarray:
+        """Total demand at every angle given per-job shifts (in steps)."""
+        if len(shifts) != len(self.patterns):
+            raise ValueError("one shift per job required")
+        return np.sum([self.rotated(j, s) for j, s in enumerate(shifts)], axis=0)
+
+    def shift_steps_to_ms(self, j: int, shift_steps: int) -> float:
+        """Paper Eq. 5: time-shift = (Δ/2π · p) mod iter_time_j."""
+        t = (shift_steps / self.num_angles) * self.perimeter_ms
+        return float(t % self.patterns[j].iter_time_ms)

@@ -1,0 +1,244 @@
+"""CASSINI's pluggable scheduler module (paper §4.2, Algorithm 2).
+
+Host schedulers (Themis, Pollux, …) are modified to emit up to ``N``
+*candidate placements* instead of one; this module
+
+  1. builds the affinity graph of every candidate (jobs ↔ contended links),
+  2. discards candidates whose affinity graph has a loop (Theorem 1
+     precondition),
+  3. solves the Table-1 optimization on every contended link to obtain the
+     link's compatibility score and per-job link-level time-shifts,
+  4. ranks candidates by the mean link score (tail/other aggregations are
+     supported, cf. paper footnote 1),
+  5. runs Algorithm 1 on the winner to produce unique per-job time-shifts.
+
+The module is deliberately independent of any concrete cluster model: a
+candidate is fully described by ``job → links traversed``, per-link
+capacities and per-job communication patterns.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Hashable, Mapping, Sequence
+
+import numpy as np
+
+from .affinity import AffinityGraph, JobId, LinkId
+from .circle import CommPattern, DEFAULT_PRECISION_DEG, DEFAULT_QUANTUM_MS
+from .compat import CompatResult, find_rotations
+
+__all__ = ["PlacementCandidate", "CassiniDecision", "CassiniModule"]
+
+
+@dataclass
+class PlacementCandidate:
+    """One candidate placement returned by the host scheduler.
+
+    ``job_links`` maps every placed job to the network links its traffic
+    traverses (as computed by the host's topology/routing); ``meta`` carries
+    the host scheduler's own payload (e.g. the concrete server assignment)
+    through CASSINI untouched.
+    """
+
+    job_links: Mapping[JobId, Sequence[LinkId]]
+    meta: object = None
+    # filled in by CassiniModule:
+    score: float = float("nan")
+    link_scores: dict[LinkId, float] = field(default_factory=dict)
+    discarded_loop: bool = False
+
+
+@dataclass
+class CassiniDecision:
+    """Output of Algorithm 2."""
+
+    top_placement: PlacementCandidate
+    time_shifts_ms: dict[JobId, float]
+    link_results: dict[LinkId, CompatResult]
+    candidates: list[PlacementCandidate]  # all, with scores filled in
+    # per-job isochronous pacing period (max across the job's links):
+    paced_periods_ms: dict[JobId, float] = field(default_factory=dict)
+    # per-job minimum compatibility score across its contended links --
+    # pacing is only worth holding when interleaving can actually succeed
+    job_min_score: dict[JobId, float] = field(default_factory=dict)
+
+    @property
+    def score(self) -> float:
+        return self.top_placement.score
+
+
+class CassiniModule:
+    """Algorithm 2, reusable across host schedulers."""
+
+    def __init__(
+        self,
+        *,
+        precision_deg: float = DEFAULT_PRECISION_DEG,
+        quantum_ms: float = DEFAULT_QUANTUM_MS,
+        aggregate: Callable[[Sequence[float]], float] = None,
+        max_workers: int | None = None,
+        seed: int = 0,
+    ) -> None:
+        self.precision_deg = precision_deg
+        self.quantum_ms = quantum_ms
+        self.aggregate = aggregate or (lambda xs: float(np.mean(xs)))
+        self.max_workers = max_workers
+        self.seed = seed
+        # candidates at one epoch mostly share link job-sets: memoize the
+        # per-link optimization across candidates (and epochs).
+        self._link_cache: dict[tuple, CompatResult] = {}
+
+    # -------------------------------------------------------------- #
+    def contended_links(
+        self, cand: PlacementCandidate
+    ) -> dict[LinkId, list[JobId]]:
+        """Links carrying more than one job (the V vertex set)."""
+        by_link: dict[LinkId, list[JobId]] = {}
+        for job, links in cand.job_links.items():
+            for l in links:
+                by_link.setdefault(l, []).append(job)
+        return {l: js for l, js in by_link.items() if len(js) > 1}
+
+    @staticmethod
+    def merge_equivalent_links(
+        shared: Mapping[LinkId, Sequence[JobId]],
+        capacities: Mapping[LinkId, float],
+    ) -> tuple[dict[LinkId, list[JobId]], dict[LinkId, float]]:
+        """Collapse parallel links that carry an *identical* job set.
+
+        Two links with the same job set impose the same interleaving
+        constraint and would produce identical per-job time-shifts; keeping
+        both as affinity-graph vertices creates a spurious 2-cycle that
+        Algorithm 2 would needlessly discard (e.g. a job pair spanning the
+        same two racks shares both racks' uplinks).  We keep one merged
+        vertex per job set, with the group's *minimum* capacity (the most
+        constrained member governs).  True loops — cycles through links
+        with different job sets — are still detected and discarded.
+        """
+        groups: dict[tuple, list[LinkId]] = {}
+        for l, js in shared.items():
+            key = tuple(sorted(js, key=repr))
+            groups.setdefault(key, []).append(l)
+        merged_links: dict[LinkId, list[JobId]] = {}
+        merged_caps: dict[LinkId, float] = {}
+        for key, ls in groups.items():
+            rep = min(ls, key=repr)
+            merged_links[rep] = list(key)
+            merged_caps[rep] = min(capacities[l] for l in ls)
+        return merged_links, merged_caps
+
+    def _evaluate_candidate(
+        self,
+        cand: PlacementCandidate,
+        patterns: Mapping[JobId, CommPattern],
+        capacities: Mapping[LinkId, float],
+    ) -> tuple[PlacementCandidate, AffinityGraph | None, dict[LinkId, CompatResult]]:
+        """Lines 3–23 of Algorithm 2 for one candidate."""
+        shared, capacities = self.merge_equivalent_links(
+            self.contended_links(cand), capacities
+        )
+        graph = AffinityGraph()
+        link_results: dict[LinkId, CompatResult] = {}
+
+        # Build graph edges with weight 0 first (Alg. 2 line 11) so the loop
+        # check runs before paying for any optimization.
+        for l, js in shared.items():
+            for j in sorted(js, key=repr):
+                graph.add_edge(j, l, 0.0, patterns[j].iter_time_ms)
+        if graph.has_loop():
+            cand.discarded_loop = True
+            cand.score = -float("inf")
+            return cand, None, link_results
+
+        scores: list[float] = []
+        for l, js in sorted(shared.items(), key=lambda kv: repr(kv[0])):
+            js = sorted(js, key=repr)
+            key = (
+                tuple(
+                    (patterns[j].name, patterns[j].iter_time_ms, patterns[j].phases)
+                    for j in js
+                ),
+                capacities[l],
+            )
+            res = self._link_cache.get(key)
+            if res is None:
+                res = find_rotations(
+                    [patterns[j] for j in js],
+                    capacities[l],
+                    precision_deg=self.precision_deg,
+                    quantum_ms=self.quantum_ms,
+                    seed=self.seed,
+                )
+                self._link_cache[key] = res
+            link_results[l] = res
+            scores.append(res.score)
+            cand.link_scores[l] = res.score
+            graph.perimeter_ms[l] = res.circle.perimeter_ms
+            for j, t_ms in zip(js, res.shifts_ms):
+                # edge weight = link-level time-shift t_j^l (§4.1)
+                graph.add_edge(j, l, t_ms, patterns[j].iter_time_ms)
+
+        cand.score = self.aggregate(scores) if scores else 1.0
+        return cand, graph, link_results
+
+    # -------------------------------------------------------------- #
+    def decide(
+        self,
+        candidates: Sequence[PlacementCandidate],
+        patterns: Mapping[JobId, CommPattern],
+        capacities: Mapping[LinkId, float],
+    ) -> CassiniDecision:
+        """Algorithm 2 end-to-end."""
+        if not candidates:
+            raise ValueError("need at least one placement candidate")
+
+        if self.max_workers and len(candidates) > 1:
+            with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+                evaluated = list(
+                    pool.map(
+                        lambda c: self._evaluate_candidate(c, patterns, capacities),
+                        candidates,
+                    )
+                )
+        else:
+            evaluated = [
+                self._evaluate_candidate(c, patterns, capacities) for c in candidates
+            ]
+
+        # Sort decreasing by compatibility score; stable on input order.
+        order = sorted(
+            range(len(evaluated)), key=lambda i: evaluated[i][0].score, reverse=True
+        )
+        top_cand, top_graph, top_links = evaluated[order[0]]
+
+        if top_graph is None:
+            # every candidate had a loop: fall back to the first candidate
+            # with no time-shifts (plain host-scheduler behaviour).
+            top_cand = candidates[0]
+            return CassiniDecision(
+                top_placement=top_cand,
+                time_shifts_ms={},
+                link_results={},
+                candidates=[e[0] for e in evaluated],
+            )
+
+        shifts = top_graph.bfs_time_shifts(seed=self.seed)
+        paced: dict[JobId, float] = {}
+        min_score: dict[JobId, float] = {}
+        for l, res in top_links.items():
+            for j, pp in zip(
+                sorted(top_graph.link_jobs.get(l, []), key=repr),
+                res.paced_periods_ms,
+            ):
+                paced[j] = max(paced.get(j, 0.0), pp)
+                min_score[j] = min(min_score.get(j, 1.0), res.score)
+        return CassiniDecision(
+            top_placement=top_cand,
+            time_shifts_ms=shifts,
+            link_results=top_links,
+            candidates=[e[0] for e in evaluated],
+            paced_periods_ms=paced,
+            job_min_score=min_score,
+        )

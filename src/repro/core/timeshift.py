@@ -1,0 +1,70 @@
+"""Rotation-angle → time-shift conversion (paper Eq. 5) and the drift
+adjustment policy applied by per-server agents (paper §4.2 step 3, §5.7).
+
+Eq. 5:  t_j^l = (Δ_j^l / 2π · p^l) mod iter_time_j
+
+A worker applies its unique cluster-level time-shift by delaying the start
+of the next immediate training iteration.  Because servers drift (noise,
+stragglers), an agent re-aligns whenever the observed start of the
+communication phase deviates from its ideal position by more than
+``drift_tolerance`` (5 % of iteration time in the paper).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["rotation_to_time_shift", "DriftAdjuster"]
+
+
+def rotation_to_time_shift(
+    delta_rad: float, perimeter_ms: float, iter_time_ms: float
+) -> float:
+    """Paper Eq. 5."""
+    import math
+
+    if iter_time_ms <= 0:
+        raise ValueError("iteration time must be positive")
+    return (delta_rad / (2.0 * math.pi) * perimeter_ms) % iter_time_ms
+
+
+@dataclass
+class DriftAdjuster:
+    """Per-worker agent logic for keeping the applied time-shift aligned.
+
+    The agent records the observed start time of each iteration's
+    communication phase; the *ideal* start of iteration ``i`` is
+    ``epoch_start + time_shift + i · iter_time``.  When
+    ``|observed − ideal| > drift_tolerance · iter_time`` the agent issues an
+    adjustment (an extra delay of ``(ideal − observed) mod iter_time``) and
+    counts it — paper §5.7 reports < 2 adjustments/min for compatible jobs.
+    """
+
+    iter_time_ms: float
+    time_shift_ms: float
+    epoch_start_ms: float = 0.0
+    drift_tolerance: float = 0.05
+    adjustments: int = 0
+    history: list[float] = field(default_factory=list)
+
+    def ideal_start(self, iteration: int) -> float:
+        return self.epoch_start_ms + self.time_shift_ms + iteration * self.iter_time_ms
+
+    def observe(self, iteration: int, observed_start_ms: float) -> float:
+        """Record an observed comm-phase start; return the extra delay (ms)
+        the worker must insert before its next iteration (0.0 if within
+        tolerance)."""
+        self.history.append(observed_start_ms)
+        drift = observed_start_ms - self.ideal_start(iteration)
+        if abs(drift) <= self.drift_tolerance * self.iter_time_ms:
+            return 0.0
+        self.adjustments += 1
+        # delay (never "undelay": we cannot travel back) to the next ideal slot
+        return (-drift) % self.iter_time_ms
+
+    @property
+    def adjustments_per_minute(self) -> float:
+        if len(self.history) < 2:
+            return 0.0
+        span_min = (self.history[-1] - self.history[0]) / 60_000.0
+        return self.adjustments / span_min if span_min > 0 else 0.0

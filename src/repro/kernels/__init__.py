@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+- circle_score     — CASSINI compatibility scoring (paper Table 1 inner loop)
+- flash_attention  — blocked causal attention (32k-prefill enabler)
+- ssd_scan         — Mamba-2 state-space-duality chunk scan
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper), ref.py (pure-jnp oracle).  Validated in interpret mode on CPU;
+``interpret=False`` on the TPU target.
+"""

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for CASSINI compatibility scoring (paper Table 1).
+
+For every link row ``l`` and candidate rotation ``s``:
+
+    out[l, s] = Σ_α max(0, base[l, α] + cand[l, (α − s) mod A] − C)
+
+This is the inner loop of the rotation search (:mod:`repro.core.compat`) —
+a circular-shift correlation with a ReLU inside the reduction, evaluated
+for *all* A rotations of a candidate job against the already-placed demand
+``base``.  The scheduler evaluates thousands of (candidate × link) rows
+per epoch at 10 candidates × O(links) (Algorithm 2), so the batched form
+is the hot-spot.
+
+TPU mapping: the circle rows live in VMEM (A ≤ ~2k angles ⇒ a (BL, A)
+f32 tile is ≤ 1 MiB); rolls are realized as dynamic slices of a
+concatenated (BL, 2A) buffer — no gathers — and the shift loop is a
+``fori_loop`` so the kernel is O(A²) VPU work per row with a single HBM
+round-trip.  For Mosaic lowering pick ``A`` as a multiple of 128 (the
+unified-circle builder's angle counts can always be rounded up);
+interpret mode (CPU validation) accepts any A.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_L = 8
+
+
+def _circle_score_kernel(base_ref, cand_ref, cap_ref, out_ref):
+    base = base_ref[...].astype(jnp.float32)            # (BL, A)
+    cand = cand_ref[...].astype(jnp.float32)            # (BL, A)
+    cap = cap_ref[0].astype(jnp.float32)
+    bl, a = base.shape
+    cc = jnp.concatenate([cand, cand], axis=-1)         # (BL, 2A)
+
+    def body(s, _):
+        # rolled[α] = cand[(α − s) mod A] == concat[A − s : 2A − s]
+        rolled = jax.lax.dynamic_slice(cc, (0, a - s), (bl, a))
+        excess = jnp.maximum(base + rolled - cap, 0.0)
+        val = jnp.sum(excess, axis=-1, keepdims=True)   # (BL, 1)
+        pl.store(out_ref, (slice(None), pl.dslice(s, 1)), val)
+        return 0
+
+    jax.lax.fori_loop(0, a, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def circle_score_pallas(
+    base: jax.Array,      # (L, A) float32
+    cand: jax.Array,      # (L, A) float32
+    capacity: jax.Array,  # () or (1,) float32
+    *,
+    block_l: int = DEFAULT_BLOCK_L,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched scoring; returns (L, A) excess sums (lower = better)."""
+    l, a = base.shape
+    pad = (-l) % block_l
+    if pad:
+        base = jnp.pad(base, ((0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
+    lp = base.shape[0]
+    cap = jnp.reshape(jnp.asarray(capacity, jnp.float32), (1,))
+
+    out = pl.pallas_call(
+        _circle_score_kernel,
+        grid=(lp // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l, a), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, a), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_l, a), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp, a), jnp.float32),
+        interpret=interpret,
+    )(base.astype(jnp.float32), cand.astype(jnp.float32), cap)
+    return out[:l]

@@ -1,0 +1,25 @@
+"""Jitted public entry point for circle_score.
+
+``circle_score(base, cand, capacity)`` dispatches to the Pallas kernel
+(interpret mode on CPU — the TPU target compiles the same kernel with
+``interpret=False``) and is what :mod:`repro.core.compat` calls for large
+angle grids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import circle_score_pallas
+from .ref import circle_score_ref
+
+__all__ = ["circle_score", "circle_score_ref"]
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def circle_score(base, cand, capacity) -> jax.Array:
+    base = jnp.atleast_2d(jnp.asarray(base, jnp.float32))
+    cand = jnp.atleast_2d(jnp.asarray(cand, jnp.float32))
+    return circle_score_pallas(base, cand, capacity, interpret=not _ON_TPU)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the circle_score kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def circle_score_ref(base: jax.Array, cand: jax.Array, capacity) -> jax.Array:
+    """out[l, s] = Σ_α max(0, base[l,α] + cand[l,(α−s) mod A] − C)."""
+    l, a = base.shape
+    idx = (jnp.arange(a)[None, :] - jnp.arange(a)[:, None]) % a  # (S, A)
+    rolled = cand[:, idx]                                        # (L, S, A)
+    total = base[:, None, :] + rolled - jnp.asarray(capacity, base.dtype)
+    return jnp.maximum(total, 0.0).sum(axis=-1)

@@ -1,0 +1,39 @@
+"""Public entry point: GQA-aware flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)  — model layout
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Returns (B, S, H, D); repeats KV heads for grouped-query attention."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    groups = h // hkv
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=not _ON_TPU,
+    )
+    return out.transpose(0, 2, 1, 3)

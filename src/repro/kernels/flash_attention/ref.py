@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: dense softmax attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q/k/v: (B, H, S, D) → (B, H, S, D)."""
+    b, h, s, d = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / (d ** 0.5)
+    if causal:
+        pos = jnp.arange(s)
+        mask = pos[None, :] <= pos[:, None]
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

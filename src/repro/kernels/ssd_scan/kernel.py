@@ -1,0 +1,110 @@
+"""Mamba-2 SSD chunk-scan Pallas kernel.
+
+Grid: (batch·heads, num_chunks) with the chunk axis iterated sequentially;
+the inter-chunk SSM state (N × P) lives in fp32 VMEM scratch and is
+carried across grid steps (TPU grids iterate the trailing axis innermost,
+so each (b,h) row sees its chunks in order — the standard Pallas carry
+idiom).  Per chunk the kernel computes
+
+    intra: (C_l · B_m^T ⊙ decay[l,m]) · x_m     (chunk² matmuls → MXU)
+    inter: C_l · state_in · decay_in[l]
+    state_out = state_in · exp(Σ log a) + Σ B_l x_l decay_end[l]
+
+which is exactly :func:`repro.models.mamba.ssd_chunked` per chunk — the
+oracle in ``ref.py`` is the naive sequential recurrence both must match.
+
+VMEM budget per program: chunk=256, N=128, P=64 ⇒ x (256·64), B/C
+(256·128), decay (256·256) and state (128·64), all fp32 < 1 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref,
+                *, chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # (chunk, P)
+    dt = dt_ref[...].astype(jnp.float32)      # (chunk,)
+    a = a_ref[0].astype(jnp.float32)          # scalar: -exp(a_log) for head
+    Bm = b_ref[...].astype(jnp.float32)       # (chunk, N)
+    Cm = c_ref[...].astype(jnp.float32)       # (chunk, N)
+
+    log_decay = dt * a                        # (chunk,) ≤ 0
+    cum = jnp.cumsum(log_decay)
+    xdt = x * dt[:, None]
+
+    # intra-chunk: L[l, m] = exp(cum_l − cum_m) for m ≤ l
+    diff = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(mi <= li, jnp.exp(diff), 0.0)
+    scores = (Cm @ Bm.T) * L                  # (chunk, chunk)
+    intra = scores @ xdt                      # (chunk, P)
+
+    # inter-chunk from carried state
+    state = state_ref[...].astype(jnp.float32)  # (N, P)
+    decay_in = jnp.exp(cum)[:, None]            # (chunk, 1)
+    inter = (Cm @ state) * decay_in             # (chunk, P)
+
+    o_ref[...] = (intra + inter).astype(o_ref.dtype)
+
+    # state update for the next chunk
+    total = cum[-1]
+    decay_end = jnp.exp(total - cum)[:, None]   # (chunk, 1)
+    new_state = state * jnp.exp(total) + Bm.T @ (xdt * decay_end)
+    state_ref[...] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H) softplus'd
+    a_log: jax.Array,  # (H,)
+    Bm: jax.Array,     # (B, S, N)
+    Cm: jax.Array,     # (B, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+
+    # flatten (b, h) rows; broadcast B/C over heads
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    af = jnp.tile(a, b).reshape(b * h, 1)
+    Bf = jnp.broadcast_to(Bm[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    Cf = jnp.broadcast_to(Cm[:, None], (b, h, s, n)).reshape(b * h, s, n)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((None, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, Bf, Cf)
+    return out.reshape(b, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,17 @@
+"""Public entry point for the SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_scan_pallas
+from .ref import ssd_ref
+
+__all__ = ["ssd_scan", "ssd_ref"]
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def ssd_scan(x, dt, a_log, Bm, Cm, *, chunk: int = 256) -> jax.Array:
+    return ssd_scan_pallas(x, dt, a_log, Bm, Cm, chunk=chunk,
+                           interpret=not _ON_TPU)

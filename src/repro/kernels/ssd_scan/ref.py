@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: naive sequential SSM recurrence (the ground truth both
+the Pallas kernel and the model's chunked path must reproduce)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a_log, Bm, Cm) -> jax.Array:
+    """x: (B,S,H,P), dt: (B,S,H), a_log: (H,), Bm/Cm: (B,S,N) → (B,S,H,P).
+
+    state_{t} = state_{t-1}·exp(dt_t·a) + B_t ⊗ (x_t·dt_t);  y_t = C_t·state_t
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * a[None, :])          # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", bt, xt * dtt[..., None])
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        Bm.transpose(1, 0, 2).astype(jnp.float32),
+        Cm.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

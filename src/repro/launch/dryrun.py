@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against 512 host placeholder devices, and extract the roofline
+inputs from the compiled artifact.
+
+For each cell we record into a JSON cache (benchmarks/roofline reads it):
+
+- ``memory_analysis``  — bytes per device (argument/output/temp/peak),
+- ``cost_analysis``    — HLO FLOPs and bytes accessed,
+- ``collective_bytes`` — per-collective operand bytes parsed from the
+  post-SPMD HLO text, with while-loop bodies multiplied by their trip
+  counts (scan-over-layers puts the interesting collectives inside loops,
+  where a naive text scan would count them once).
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import SHAPES, build_model
+from repro.parallel.sharding import batch_spec, param_shardings
+from repro.models.common import make_spec
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+CACHE_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_cache"
+VERSION = 2  # bump to invalidate cached cells after analyzer changes
+
+# long_500k is only defined for sub-quadratic decoders (DESIGN.md §4)
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k-context decode is quadratic-history (skip per assignment; DESIGN.md §4)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------- #
+# HLO collective analysis
+# ---------------------------------------------------------------------- #
+_SHAPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_ARRAY_RE = re.compile(r"(f32|bf16|f16|f64|s32|u32|s64|u64|s8|u8|pred|f8e4m3fn)\[([0-9,]*)\]")
+
+
+def _first_array_bytes(line: str) -> int:
+    """Bytes of the result shape(s) on an HLO op line (covers tuples)."""
+    total = 0
+    # result is everything left of ' = '; ops like all-gather list result first
+    lhs = line.split(" = ", 1)
+    text = lhs[1] if len(lhs) == 2 else line
+    # take shapes up to the opcode's operand list start
+    head = text.split("(", 1)[0]
+    for m in _ARRAY_RE.finditer(head):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _SHAPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum collective result bytes, multiplying loop bodies by trip count."""
+    # split into computations
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{", line.strip())
+        if m and ("{" in line):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+
+    # find while ops: body=%name, and trip counts from cond constants
+    body_of: dict[str, str] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mb:
+                    body_of[mb.group(1)] = mc.group(1) if mc else ""
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = []
+        for line in lines:
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                consts.append(int(m.group(1)))
+        return max(consts) if consts else 1
+
+    multiplier = {name: trip_count(cond) for name, cond in body_of.items()}
+
+    per_op: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    count: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for cname, lines in comps.items():
+        mult = multiplier.get(cname, 1)
+        for line in lines:
+            ls = line.strip()
+            for c in _COLLECTIVES:
+                if re.search(rf"= [^=]*\b{c}\(", ls) or f" {c}(" in ls.split("=")[-1][:80]:
+                    b = _first_array_bytes(ls)
+                    per_op[c] += b * mult
+                    count[c] += mult
+                    break
+    per_op["total"] = sum(v for k, v in per_op.items())
+    return {"bytes": per_op, "count": count}
+
+
+# ---------------------------------------------------------------------- #
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Construct (jitted_fn, example_args) for one cell — no allocation."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg, mesh)
+    shape = SHAPES[shape_name]
+
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = param_shardings(params_shapes, mesh, num_experts=cfg.num_experts)
+
+    def arr_shardings(specs: dict):
+        out = {}
+        for k, v in specs.items():
+            ba = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            axes = (ba,) + (None,) * (len(v.shape) - 1)
+            out[k] = NamedSharding(mesh, make_spec(mesh, v.shape, axes))
+        return out
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(model.init_opt, params_shapes)
+        from repro.train.optimizer import AdamWState
+
+        # mu/nu mirror the parameter shardings; step is replicated
+        o_shard = AdamWState(
+            step=NamedSharding(mesh, P()),
+            mu=param_shardings(params_shapes, mesh, num_experts=cfg.num_experts),
+            nu=param_shardings(params_shapes, mesh, num_experts=cfg.num_experts),
+        )
+        batch_specs = model.input_specs(shape)
+        b_shard = arr_shardings(batch_specs)
+        fn = jax.jit(
+            model.train_step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            donate_argnums=(0, 1),
+        )
+        args = (params_shapes, opt_shapes, batch_specs)
+    elif shape.kind == "prefill":
+        batch_specs = model.input_specs(shape)
+        b_shard = arr_shardings(batch_specs)
+        fn = jax.jit(model.prefill_step, in_shardings=(p_shard, b_shard))
+        args = (params_shapes, batch_specs)
+    else:  # decode
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.family == "audio":
+            from repro.models import encdec
+
+            s_enc, _ = encdec.enc_seq_split(cfg, S)
+            frames = jax.ShapeDtypeStruct((B, s_enc, cfg.d_model), jnp.float32)
+            state_shapes = jax.eval_shape(
+                lambda p, f: model.init_decode_state(B, S, params=p, frames=f),
+                params_shapes, frames,
+            )
+        else:
+            state_shapes = jax.eval_shape(lambda: model.init_decode_state(B, S))
+        s_shard = model.decode_state_shardings(state_shapes, B)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        t_shard = NamedSharding(mesh, make_spec(mesh, (B, 1), (
+            tuple(a for a in ("pod", "data") if a in mesh.shape), None)))
+        fn = jax.jit(
+            model.serve_step,
+            in_shardings=(p_shard, t_shard, s_shard),
+            donate_argnums=(2,),
+        )
+        args = (params_shapes, tok, state_shapes)
+    return fn, args, mesh, model
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, cache_dir: Path) -> dict:
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    out_file = cache_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    if out_file.exists():
+        rec = json.loads(out_file.read_text())
+        if rec.get("status") in ("ok", "skip") and rec.get("version") == VERSION:
+            return rec
+
+    ok, why = cell_supported(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="skip", reason=why, version=VERSION)
+        out_file.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    try:
+        fn, args, mesh, model = build_cell(arch, shape_name, mesh_kind == "multi")
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            mem = None
+        try:
+            cost = compiled.cost_analysis()
+        except Exception:
+            cost = None
+        hlo = compiled.as_text()
+        stats = analyze_hlo(hlo)
+        coll = {
+            "bytes": {**stats.collective_by_op, "total": stats.collective_bytes},
+            "count": stats.collective_count,
+        }
+        rec.update(
+            status="ok",
+            version=VERSION,
+            devices=int(mesh.devices.size),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=(
+                {
+                    k: int(getattr(mem, k))
+                    for k in (
+                        "argument_size_in_bytes",
+                        "output_size_in_bytes",
+                        "temp_size_in_bytes",
+                        "peak_memory_in_bytes",
+                        "alias_size_in_bytes",
+                    )
+                    if hasattr(mem, k)
+                }
+                if mem is not None
+                else {}
+            ),
+            # per-device quantities from the call-graph HLO analyzer
+            # (cost_analysis() counts while bodies once; see hlo_analysis.py)
+            flops=stats.flops,
+            bytes_accessed=stats.bytes_accessed,
+            xla_cost_flops=float(cost.get("flops", -1)) if cost else -1,
+            xla_cost_bytes=float(cost.get("bytes accessed", -1)) if cost else -1,
+            collectives=coll,
+            while_trips=dict(stats.while_trip_counts),
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # record failures; they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    out_file.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cache", default=str(CACHE_DIR))
+    args = ap.parse_args()
+
+    cache = Path(args.cache)
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_cell(arch, shape, mk, cache)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skip"
+                n_err += tag == "error"
+                extra = ""
+                if tag == "ok":
+                    peak = rec["memory"].get("peak_memory_in_bytes", 0) / 2**30
+                    extra = (
+                        f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                        f"peak/dev {peak:.2f} GiB coll "
+                        f"{rec['collectives']['bytes']['total']/2**30:.2f} GiB"
+                    )
+                elif tag == "error":
+                    extra = rec["error"][:140]
+                print(f"[{tag:5s}] {arch} × {shape} × {mk}: {extra}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""Static roofline analysis of post-SPMD HLO text.
+
+``jax.stages.Compiled.cost_analysis()`` on the CPU backend counts each
+while-loop body **once**, but scan-over-layers puts ~all of a model's work
+inside a while loop — so FLOPs/bytes would be under-counted by ~num_layers.
+This module re-derives the roofline inputs from the HLO text itself:
+
+- builds the computation call graph (while bodies weighted by their trip
+  count, parsed from the loop condition's comparison constant; fusions and
+  calls weighted 1),
+- FLOPs: every ``dot`` contributes ``2 · |result| · |contracted dims|``
+  (via a per-computation symbol table for operand shapes), times its
+  computation's multiplier,
+- bytes: result + operand bytes of *buffer-level* ops (dot, fusion,
+  slices/updates, copies, reduces, transposes, gathers, collectives) —
+  top-level elementwise ops are skipped since the TPU target fuses them;
+  this is an HBM-traffic estimate, documented as such,
+- collective bytes: result bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, same multipliers.
+
+All quantities are **per device** (the HLO is the partitioned module).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_BUFFER_OPS = _COLLECTIVES + (
+    "dot", "fusion", "dynamic-slice", "dynamic-update-slice", "copy",
+    "reduce", "reduce-window", "transpose", "gather", "scatter", "sort",
+    "convolution", "custom-call", "cholesky", "triangular-solve",
+)
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: dict = field(default_factory=dict)
+    collective_count: dict = field(default_factory=dict)
+    while_trip_counts: dict = field(default_factory=dict)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _parse_computations(hlo: str) -> dict[str, list[tuple[str, str, str, str]]]:
+    """name -> list of (op_name, result_type_text, opcode, rest_of_line).
+
+    Robust to tuple result types with ``/*index=N*/`` comments (while ops):
+    the opcode is the first ``word(`` token after ``=``, the result-type
+    text is everything before it.
+    """
+    comps: dict[str, list] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+            if m and "(" in line and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is None or " = " not in line:
+            continue
+        m = _NAME_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        om = _OPCODE_RE.search(rest)
+        if not om:
+            continue
+        rtype = rest[: om.start()]
+        opcode = om.group(1)
+        tail = rest[om.end():]
+        comps[cur].append((name, rtype, opcode, tail))
+    return comps
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps = _parse_computations(hlo)
+
+    # ---- call graph: who calls whom, with what weight ---------------- #
+    callers: dict[str, list[tuple[str, float]]] = {}
+    cond_of_body: dict[str, str] = {}
+    for cname, ops in comps.items():
+        for (_, _, opcode, rest) in ops:
+            for ref in re.finditer(
+                r"(?:body|to_apply|calls)=\{?%?([\w\.\-]+)", rest
+            ):
+                callers.setdefault(ref.group(1), []).append((cname, 1.0))
+            m = re.search(r"condition=%?([\w\.\-]+)", rest)
+            mb = re.search(r"body=%?([\w\.\-]+)", rest)
+            if m and mb:
+                cond_of_body[mb.group(1)] = m.group(1)
+            # branch computations of conditionals
+            for ref in re.finditer(
+                r"(?:branch_computations|true_computation|false_computation)="
+                r"\{?%?([\w\.\-]+)", rest
+            ):
+                callers.setdefault(ref.group(1), []).append((cname, 1.0))
+
+    trip: dict[str, int] = {}
+    for body, cond in cond_of_body.items():
+        consts = []
+        for (_, _, opcode, rest) in comps.get(cond, []):
+            if opcode == "constant":
+                m = re.match(r"\s*(\d+)\s*\)", rest)
+                if m:
+                    consts.append(int(m.group(1)))
+        # the loop bound is usually the largest compare constant
+        trip[body] = max(consts) if consts else 1
+
+    mult_cache: dict[str, float] = {}
+
+    def multiplier(cname: str) -> float:
+        if cname in mult_cache:
+            return mult_cache[cname]
+        mult_cache[cname] = 0.0  # break cycles
+        if cname not in callers:      # ENTRY (or dead)
+            m = 1.0
+        else:
+            m = 0.0
+            for caller, w in callers[cname]:
+                m += w * multiplier(caller)
+        if cname in trip:
+            m *= trip[cname]
+        mult_cache[cname] = m
+        return m
+
+    # ---- walk ops ----------------------------------------------------- #
+    st = HloStats(while_trip_counts=dict(trip))
+    st.collective_by_op = {c: 0.0 for c in _COLLECTIVES}
+    st.collective_count = {c: 0 for c in _COLLECTIVES}
+
+    for cname, ops in comps.items():
+        mult = multiplier(cname)
+        if mult == 0.0:
+            continue
+        symbols = {name: rtype for (name, rtype, _, _) in ops}
+        in_fusion = cname.startswith("fused_") or ".fused" in cname
+
+        for (name, rtype, opcode, rest) in ops:
+            if opcode == "dot":
+                res_dims = _shape_dims(rtype)
+                lhs_m = re.match(r"\s*%?([\w\.\-]+)", rest)
+                lc_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+                lhs_dims = _shape_dims(symbols.get(lhs_m.group(1), "")) if lhs_m else []
+                contract = 1
+                if lc_m and lhs_dims:
+                    for idx in lc_m.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+                res_n = 1
+                for d in res_dims:
+                    res_n *= d
+                st.flops += mult * 2.0 * res_n * contract
+
+            if in_fusion:
+                continue  # fused ops don't touch HBM; the fusion op counts
+
+            for c in _COLLECTIVES:
+                if opcode == c:
+                    b = _shape_bytes(rtype)
+                    st.collective_bytes += mult * b
+                    st.collective_by_op[c] += mult * b
+                    st.collective_count[c] += int(mult)
+                    break
+
+            if opcode in _BUFFER_OPS:
+                if opcode in ("dynamic-slice", "slice", "gather"):
+                    # reads only the sliced region, writes the result:
+                    # counting the (possibly layer-stacked) source operand
+                    # would charge the whole stack per loop trip
+                    b = 2 * _shape_bytes(rtype)
+                elif opcode == "dynamic-update-slice":
+                    # reads + writes the update region; the full-array
+                    # "result" aliases the input buffer in place
+                    ops_refs = re.findall(r"%([\w\.\-]+)", rest.split(")", 1)[0])
+                    upd = symbols.get(ops_refs[1], "") if len(ops_refs) > 1 else ""
+                    b = 2 * _shape_bytes(upd)
+                else:
+                    b = _shape_bytes(rtype)
+                    for ref in re.finditer(r"%([\w\.\-]+)", rest.split(")", 1)[0]):
+                        b += _shape_bytes(symbols.get(ref.group(1), ""))
+                st.bytes_accessed += mult * b
+
+    return st

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then builds these meshes out of host placeholder devices.
+
+Target: TPU v5e pods — 16×16 = 256 chips per pod; the multi-pod mesh adds
+a leading "pod" axis (2 pods = 512 chips for the dry-run; scaling the pod
+count is config-only).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(num_devices: int | None = None):
+    """Small mesh over whatever devices exist (tests: 1 CPU device)."""
+    n = num_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2):
+        if n % m == 0 and n >= m:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,60 @@
+"""Single-job training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --batch 8 --seq 256 [--reduced] [--resume]
+
+On a real cluster this process is what the CASSINI-augmented scheduler
+starts per job; ``--time-shift-ms`` is how the scheduler's unique per-job
+shift (Algorithm 1) reaches the worker (paper Fig. 7 "apply time-shifts").
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.models.api import build_model
+from repro.train.data import SyntheticLM
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-sized sibling config (CPU-friendly)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--time-shift-ms", type=float, default=0.0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(remat="none")
+    model = build_model(cfg)
+    model.opt = type(model.opt)(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=max(10, args.steps // 20))
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch)
+    trainer = Trainer(
+        model, data,
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every,
+                      time_shift_ms=args.time_shift_ms),
+    )
+    res = trainer.run()
+    print(f"arch={cfg.name} steps={res.steps_run} restored_from={res.restored_from}")
+    print("losses:", " ".join(f"{l:.3f}" for l in res.losses))
+    if len(res.losses) >= 2:
+        print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+              f"({'improved' if res.losses[-1] < res.losses[0] else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""JAX model zoo for the assigned architectures."""
+
+from .api import SHAPES, Model, ShapeSpec, build_model
+from .common import ArchConfig
+
+__all__ = ["SHAPES", "Model", "ShapeSpec", "build_model", "ArchConfig"]

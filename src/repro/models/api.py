@@ -1,0 +1,223 @@
+"""Unified model API: build a :class:`Model` from an :class:`ArchConfig`
+and get ``init`` / ``train_step`` / ``serve_step`` / ``input_specs``.
+
+``input_specs(shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for every
+input of the step function — weak-type-correct and shardable, with **no
+device allocation** — which is what the multi-pod dry-run lowers against.
+
+Shape registry (assignment):
+    train_4k     seq 4,096   global_batch 256   → train_step
+    prefill_32k  seq 32,768  global_batch 32    → prefill (forward)
+    decode_32k   seq 32,768  global_batch 128   → serve_step (1 new token)
+    long_500k    seq 524,288 global_batch 1     → serve_step, ssm/hybrid only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+from . import encdec, hybrid, transformer
+from .common import ArchConfig, batch_axes, shard
+
+__all__ = ["SHAPES", "ShapeSpec", "Model", "build_model"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Causal-LM loss; positions with label < 0 are masked (vlm patches,
+    padding).  Padded-vocab logits are masked to −inf.
+
+    Written gather-free: ``take_along_axis`` over a vocab-sharded logits
+    tensor makes GSPMD all-gather the full (tokens × vocab) array; the
+    max/logsumexp reductions and the one-hot contraction all partition
+    cleanly over both the batch and vocab axes instead.
+    """
+    v_pad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v_pad > vocab:
+        vmask = jnp.arange(v_pad) < vocab
+        logits = jnp.where(vmask, logits, -1e30)
+    mx = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=-1)) + mx[..., 0]
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    onehot = jax.nn.one_hot(safe, v_pad, dtype=logits.dtype)
+    label_logit = jnp.einsum("...v,...v->...", logits, onehot)
+    nll = lse - label_logit
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------- #
+class Model:
+    """Family-dispatching wrapper produced by :func:`build_model`."""
+
+    def __init__(self, cfg: ArchConfig, mesh=None, opt: AdamWConfig | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.opt = opt or AdamWConfig()
+
+    # ---------------- parameters ---------------------------------- #
+    def init(self, rng: jax.Array):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return hybrid.init_hybrid(rng, cfg)
+        if cfg.family == "audio":
+            return encdec.init_encdec(rng, cfg)
+        return transformer.init_lm(rng, cfg)
+
+    def init_opt(self, params) -> AdamWState:
+        return init_adamw(params, moments_dtype=self.cfg.opt_moments_dtype)
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    # ---------------- forward / loss ------------------------------- #
+    def forward(self, params, batch: dict) -> jax.Array:
+        cfg, mesh = self.cfg, self.mesh
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_forward(params, cfg, mesh, batch["tokens"])
+        if cfg.family == "audio":
+            return encdec.encdec_forward(
+                params, cfg, mesh, batch["frames"], batch["tokens"]
+            )
+        return transformer.lm_forward(
+            params, cfg, mesh, batch["tokens"],
+            patch_embeds=batch.get("patches"),
+        )
+
+    def loss_fn(self, params, batch: dict) -> jax.Array:
+        logits = self.forward(params, batch)
+        labels = batch["labels"]
+        if self.cfg.num_patches:  # vlm: logits cover patches + tokens
+            pad = -jnp.ones(
+                (labels.shape[0], self.cfg.num_patches), labels.dtype
+            )
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return cross_entropy(logits, labels, self.cfg.vocab)
+
+    # ---------------- steps --------------------------------------- #
+    def train_step(self, params, opt_state: AdamWState, batch: dict):
+        loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+        new_params, new_opt, metrics = adamw_update(
+            self.opt, grads, params, opt_state
+        )
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    def prefill_step(self, params, batch: dict) -> jax.Array:
+        return self.forward(params, batch)
+
+    def serve_step(self, params, tokens, state):
+        cfg, mesh = self.cfg, self.mesh
+        if cfg.family == "hybrid":
+            return hybrid.hybrid_decode_step(params, cfg, mesh, tokens, state)
+        if cfg.family == "audio":
+            return encdec.encdec_decode_step(params, cfg, mesh, tokens, state)
+        return transformer.lm_decode_step(params, cfg, mesh, tokens, state)
+
+    def init_decode_state(self, batch: int, max_seq: int, params=None, frames=None):
+        cfg, mesh = self.cfg, self.mesh
+        if cfg.family == "hybrid":
+            return hybrid.init_hybrid_decode_state(cfg, batch, max_seq, mesh)
+        if cfg.family == "audio":
+            return encdec.init_encdec_decode_state(
+                params, cfg, batch, max_seq, frames, mesh
+            )
+        return transformer.init_decode_state(cfg, batch, max_seq, mesh)
+
+    def decode_state_shardings(self, state_shapes, batch: int):
+        """NamedSharding pytree for a decode state (mirrors the sharding
+        logic of the init_*_decode_state functions — needed as jit
+        in_shardings so dry-run memory analysis sees distributed caches)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from .common import make_spec
+
+        cfg, mesh = self.cfg, self.mesh
+        ba = batch_axes(mesh)
+        model_size = mesh.shape.get("model", 1) if mesh else 1
+        seq_ax = "data" if batch == 1 else None
+
+        def kv_axes(rank):  # (L, B, S, H|hd sharded)
+            head_ok = cfg.num_kv_heads % model_size == 0
+            axes = (None, ba, seq_ax, "model", None) if head_ok else (
+                None, ba, seq_ax, None, "model")
+            return axes[-rank:] if rank <= 5 else (None,) * (rank - 5) + axes
+
+        def assign(path, leaf):
+            name = ""
+            for p in path:
+                if hasattr(p, "name"):
+                    name = p.name
+                    break
+                if hasattr(p, "idx"):
+                    name = type(state_shapes)._fields[p.idx]
+                    break
+            rank = len(leaf.shape)
+            if name == "kv" or name == "enc_kv":
+                axes = kv_axes(rank)
+            elif name.startswith("ssm"):
+                axes = (None,) * (rank - 4) + (ba, "model", None, None)
+            elif name.startswith("conv"):
+                axes = (None,) * (rank - 3) + (ba, None, None)
+            else:
+                axes = (None,) * rank
+            return NamedSharding(mesh, make_spec(mesh, leaf.shape, axes))
+
+        return jax.tree_util.tree_map_with_path(assign, state_shapes)
+
+    # ---------------- dry-run input specs -------------------------- #
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        """ShapeDtypeStruct stand-ins for the step inputs (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda s: jax.ShapeDtypeStruct((B, s), jnp.int32)
+        d = cfg.d_model
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "audio":
+                s_enc, s_dec = encdec.enc_seq_split(cfg, S)
+                out = {
+                    "frames": jax.ShapeDtypeStruct((B, s_enc, d), jnp.float32),
+                    "tokens": tok(s_dec),
+                }
+                if shape.kind == "train":
+                    out["labels"] = tok(s_dec)
+                return out
+            s_text = S - cfg.num_patches if cfg.num_patches else S
+            out = {"tokens": tok(s_text)}
+            if cfg.num_patches:
+                out["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_patches, d), jnp.float32
+                )
+            if shape.kind == "train":
+                out["labels"] = tok(s_text)
+            return out
+        # decode: one new token against a cache of S
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def build_model(cfg: ArchConfig, mesh=None, opt: AdamWConfig | None = None) -> Model:
+    return Model(cfg, mesh, opt)

@@ -1,0 +1,253 @@
+"""Grouped-query attention: full, q-chunked (long prefill), and cached
+single-token decode.  Pure JAX (XLA attention); the Pallas flash kernel in
+``repro.kernels.flash_attention`` is a drop-in for the TPU target and is
+validated against the same math in interpret mode.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, rope
+
+NEG_INF = -1e30
+CHUNK_THRESHOLD = 8192   # above this seq length, scan over query chunks
+Q_CHUNK = 1024
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, Hkv, D) → (B, S, Hkv*groups, D) by head-group broadcast."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)).reshape(
+        b, s, h * groups, d
+    )
+
+
+def _mask_bias(q_pos, k_pos, window: int = 0):
+    """(…, Q, K) additive causal (+ optional sliding-window) bias."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        causal &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(causal, 0.0, NEG_INF)
+
+
+def full_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    window: int = 0,
+    causal: bool = True,
+) -> jax.Array:
+    """Dense softmax attention; fine up to ~8k sequence.
+
+    §Perf iteration 3: the (B,H,S,S) score/prob buffers stay in the compute
+    dtype (bf16) — reductions (max, normalizer) use fp32 *accumulators*
+    without materializing an fp32 copy of the score tensor, which halves
+    the dominant memory-roofline buffers of every 4k-train cell.  Safe:
+    probs ∈ [0,1] after max-subtraction; only the normalizer needs range.
+    """
+    b, s, h, d = q.shape
+    groups = h // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        pos = jnp.arange(s)
+        scores = scores + _mask_bias(pos, pos, window).astype(scores.dtype)
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m)                                   # compute dtype
+    l = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32) # f32 accumulate
+    probs = (p / l.astype(p.dtype))
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def streaming_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention scanned over KV blocks — the flash-attention
+    algorithm expressed in XLA: scores exist only per (S, kv_chunk) tile and
+    never hit HBM at (S, S) size.  §Perf iteration 1: this removes the
+    fp32 (B,H,S,S) buffers that dominate the memory roofline term of every
+    full-attention training cell (the Pallas kernel is the TPU-native form;
+    this is its scan lowering for targets where Mosaic is unavailable)."""
+    b, s, h, d = q.shape
+    groups = h // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    nk = s // kv_chunk
+    assert nk * kv_chunk == s, (s, kv_chunk)
+    qt = (q / jnp.sqrt(d).astype(q.dtype)).transpose(0, 2, 1, 3)   # (B,H,S,D)
+    kc = k.transpose(0, 2, 1, 3).reshape(b, h, nk, kv_chunk, d)
+    vc = v.transpose(0, 2, 1, 3).reshape(b, h, nk, kv_chunk, d)
+    q_pos = jnp.arange(s)
+
+    # jax.checkpoint on the step: the backward pass recomputes each tile's
+    # scores instead of saving (B,H,S,kv_chunk) residuals per step — this
+    # is exactly the flash-attention VJP strategy, expressed in XLA.
+    @jax.checkpoint
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, idx = inp                                   # (B,H,C,D), idx
+        srs = jnp.einsum(
+            "bhqd,bhkd->bhqk", qt, kb, preferred_element_type=jnp.float32
+        )
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        srs = jnp.where(mask, srs, NEG_INF)
+        m_new = jnp.maximum(m, srs.max(-1, keepdims=True))
+        p = jnp.exp(srs - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, h, s, 1), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, s, 1), jnp.float32),
+        jnp.zeros((b, h, s, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        step, init,
+        (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4), jnp.arange(nk)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0
+) -> jax.Array:
+    """Causal attention scanned over query chunks — the XLA analogue of
+    flash attention: per-step score tensors are (B, H, Q_CHUNK, S), so the
+    32k-prefill working set stays bounded regardless of sequence length."""
+    b, s, h, d = q.shape
+    groups = h // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    nchunk = s // Q_CHUNK
+    assert nchunk * Q_CHUNK == s, f"seq {s} not divisible by {Q_CHUNK}"
+    qc = q.reshape(b, nchunk, Q_CHUNK, h, d).transpose(1, 0, 2, 3, 4)
+    k_pos = jnp.arange(s)
+
+    def step(_, inp):
+        qi, idx = inp
+        q_pos = idx * Q_CHUNK + jnp.arange(Q_CHUNK)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qi, k) / jnp.sqrt(d).astype(q.dtype)
+        bias = jnp.where(
+            (k_pos[None, :] <= q_pos[:, None])
+            & ((window <= 0) | (k_pos[None, :] > q_pos[:, None] - window)),
+            0.0,
+            NEG_INF,
+        )
+        scores = scores + bias.astype(scores.dtype)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return None, jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    _, out = jax.lax.scan(step, None, (qc, jnp.arange(nchunk)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array | int,  # number of valid positions
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention over the KV cache."""
+    b, s, hkv, d = k_cache.shape
+    h = q.shape[2]
+    groups = h // hkv
+    k = _repeat_kv(k_cache, groups)
+    v = _repeat_kv(v_cache, groups)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    pos = jnp.arange(s)
+    valid = pos[None, None, None, :] < cache_len
+    if window > 0:
+        valid &= pos[None, None, None, :] >= (cache_len - window)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------- #
+def attention_block(
+    params: dict,
+    x: jax.Array,            # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array | None = None,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_len: jax.Array | int | None = None,
+    causal: bool = True,
+    use_rope: bool = True,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """One attention sublayer: qkv proj → rope → attention → out proj.
+
+    In decode mode (``kv_cache`` given, S == 1) the new K/V are written at
+    ``cache_len`` and attention runs over the cache; returns updated cache.
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        kc, vc = kv_cache
+        idx = cache_len if cache_len is not None else 0
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, idx, 0, 0))
+        new_cache = (kc, vc)
+        out = decode_attention(q, kc, vc, idx + s, window=cfg.sliding_window)
+    elif causal and cfg.streaming_attn and s >= 2 * cfg.attn_kv_chunk:
+        out = streaming_attention(
+            q, k, v, window=cfg.sliding_window, kv_chunk=cfg.attn_kv_chunk
+        )
+    elif causal and s > CHUNK_THRESHOLD:
+        out = chunked_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        out = full_attention(q, k, v, window=cfg.sliding_window, causal=causal)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_attention(key, cfg: ArchConfig, dtype):
+    from .common import dense_init, split_keys
+
+    hd = cfg.hd
+    k1, k2, k3, k4 = split_keys(key, 4)
+    p = {
+        "wq": dense_init(k1, (cfg.d_model, cfg.num_heads, hd), dtype, cfg.d_model),
+        "wk": dense_init(k2, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model),
+        "wv": dense_init(k3, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model),
+        "wo": dense_init(k4, (cfg.num_heads, hd, cfg.d_model), dtype, cfg.num_heads * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+    return p

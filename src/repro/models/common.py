@@ -1,0 +1,239 @@
+"""Shared model-zoo foundations: architecture config, parameter init,
+norms, rotary embeddings and divisibility-aware sharding helpers.
+
+Design rules (they matter at 512 devices):
+
+- per-layer parameters are **stacked along a leading layer axis** and the
+  forward pass is a ``jax.lax.scan`` over layers — the HLO stays O(1) in
+  depth, which keeps 61-layer × 512-device dry-run compiles tractable;
+- every weight/activation gets a :func:`shard` constraint derived from
+  logical rules, with graceful fallback to replication when a dimension is
+  not divisible by the mesh axis (e.g. 9 attention heads on a 16-way model
+  axis) — ``.compile()`` must succeed for every assigned architecture;
+- vocabularies are padded to a multiple of 256 so embedding/unembedding
+  shard cleanly on the model axis; logits at padded positions are masked.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any  # pytree of arrays
+
+VOCAB_PAD = 256
+
+
+# ---------------------------------------------------------------------- #
+# configuration
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (src/repro/configs/<id>.py instantiates)."""
+
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    # attention
+    head_dim: int = 0            # 0 → d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0      # 0 → full causal (mixtral: 4096)
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2): one shared attention block applied every N slots
+    attn_every: int = 0
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    # vlm (internvl2)
+    num_patches: int = 0
+    # parallelism
+    seq_shard: bool = True       # sequence-parallel residual stream (Megatron-SP)
+    streaming_attn: bool = False # online-softmax attention (flash-in-XLA)
+    attn_kv_chunk: int = 512
+    # training
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    opt_moments_dtype: Any = jnp.float32
+    remat: str = "full"          # none | full | dots
+    use_scan: bool = True
+    tie_embeddings: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return int(math.ceil(self.vocab / VOCAB_PAD)) * VOCAB_PAD
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.family == "hybrid"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context? (ssm/hybrid only)"""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A smoke-test-sized sibling of this config (same family/topology,
+        tiny dims) for CPU tests."""
+        small = dict(
+            # hybrids need at least one full (mamba…+attn) group + a tail
+            num_layers=7 if self.attn_every else min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=(
+                min(4, max(1, self.num_kv_heads * 4 // self.num_heads))
+                if self.num_heads > 0
+                else 0
+            ),
+            d_ff=256,
+            vocab=512,
+            head_dim=32,
+            num_experts=min(self.num_experts, 4) if self.is_moe else 0,
+            top_k=min(self.top_k, 2) if self.is_moe else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16,
+            ssm_chunk=32,
+            attn_every=3 if self.attn_every else 0,
+            enc_layers=min(self.enc_layers, 2) if self.enc_layers else 0,
+            enc_seq=32,
+            num_patches=16 if self.num_patches else 0,
+            remat="none",
+            name=self.name + "-smoke",
+        )
+        small.update(overrides)
+        return replace(self, **small)
+
+
+# ---------------------------------------------------------------------- #
+# sharding helpers
+# ---------------------------------------------------------------------- #
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def make_spec(mesh: Mesh | None, shape: Sequence[int], axes: Sequence) -> P:
+    """PartitionSpec over ``axes`` with replication fallback: a dim keeps its
+    mesh axis only when its size is divisible by the axis size."""
+    if mesh is None:
+        return P()
+    spec = []
+    for dim, ax in zip(shape, axes):
+        if ax is not None and dim % _axis_size(mesh, ax) == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def shard(x: jax.Array, mesh: Mesh | None, *axes) -> jax.Array:
+    """``with_sharding_constraint`` via logical axes (None = replicated)."""
+    if mesh is None:
+        return x
+    spec = make_spec(mesh, x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+BATCH_AXES = ("pod", "data")   # flattened where the mesh lacks "pod"
+
+
+def batch_axes(mesh: Mesh | None):
+    if mesh is None:
+        return None
+    present = tuple(a for a in BATCH_AXES if a in mesh.shape)
+    return present if present else None
+
+
+# ---------------------------------------------------------------------- #
+# numerics
+# ---------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# parameter init
+# ---------------------------------------------------------------------- #
+def cast_block_params(params, dtype):
+    """Cast matmul weights (ndim ≥ 2) to the compute dtype; 1-d params
+    (norm scales, biases, dt/a_log) stay in their storage dtype — the
+    numerically-sensitive ops handle their own fp32 upcasts."""
+    import jax as _jax
+
+    return _jax.tree.map(
+        lambda a: a.astype(dtype) if hasattr(a, "ndim") and a.ndim >= 2 else a,
+        params,
+    )
+
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / math.sqrt(max(1, fan))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

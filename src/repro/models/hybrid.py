@@ -1,0 +1,204 @@
+"""Zamba-2-style hybrid stack (arXiv:2411.15242): a Mamba-2 backbone with a
+single *shared* attention block applied periodically.
+
+Layer slots 0..L−1: every ``cfg.attn_every``-th slot runs the shared
+attention block (one set of weights reused at each application — Zamba's
+parameter-efficiency trick), all other slots are Mamba-2 blocks.  The
+mamba layers are organized as ``(groups, per_group)`` stacks so the
+forward is an outer scan over groups with an inner scan over the group's
+mamba layers — HLO stays compact at 81 slots.
+
+Decode: each shared-attention *application* keeps its own KV cache
+(weights shared, state not); mamba layers carry (ssm, conv) state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, init_attention
+from .common import (ArchConfig, batch_axes, cast_block_params, dense_init,
+                     rms_norm, shard, split_keys)
+from .mamba import init_mamba, mamba_block
+
+
+def hybrid_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(num_groups, mamba_per_group, trailing_mamba): slots =
+    groups × (per_group mamba + 1 shared attn) + trailing mamba."""
+    k = cfg.attn_every
+    groups = cfg.num_layers // k
+    trailing = cfg.num_layers - groups * k
+    return groups, k - 1, trailing
+
+
+def init_hybrid(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype
+    groups, per_group, trailing = hybrid_layout(cfg)
+    n_mamba = groups * per_group + trailing
+    keys = split_keys(key, n_mamba + 4)
+
+    def mk_mamba(i):
+        p = dict(init_mamba(keys[i], cfg, dtype))
+        p["ln1"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+
+    grouped = jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape(groups, per_group, *xs[0].shape),
+        *[mk_mamba(i) for i in range(groups * per_group)],
+    )
+    params = {
+        "mamba_groups": grouped,
+        "shared_attn": {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attention(keys[-4], cfg, dtype),
+        },
+        "embed": dense_init(keys[-3], (cfg.padded_vocab, cfg.d_model), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(keys[-2], (cfg.d_model, cfg.padded_vocab), dtype,
+                              cfg.d_model),
+    }
+    if trailing:
+        params["mamba_tail"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[mk_mamba(groups * per_group + i) for i in range(trailing)],
+        )
+    return params
+
+
+def _mamba_scan(stack_params, x, cfg, mesh, remat: bool):
+    def body(xx, lp):
+        lp = cast_block_params(lp, cfg.dtype)
+        h, _, _ = mamba_block(lp, rms_norm(xx, lp["ln1"]), cfg)
+        seq_ax = "model" if cfg.seq_shard else None
+        out = shard(xx + h, mesh, batch_axes(mesh), seq_ax, None)
+        return out, None
+
+    fn = jax.checkpoint(lambda xx, lp: body(xx, lp)[0]) if remat else None
+    if remat:
+        return jax.lax.scan(lambda xx, lp: (fn(xx, lp), None), x, stack_params)[0]
+    return jax.lax.scan(body, x, stack_params)[0]
+
+
+def hybrid_forward(params, cfg: ArchConfig, mesh, tokens: jax.Array) -> jax.Array:
+    ba = batch_axes(mesh)
+    groups, per_group, trailing = hybrid_layout(cfg)
+    remat = cfg.remat != "none"
+    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    x = shard(x, mesh, ba, None, None)
+
+    sa = cast_block_params(params["shared_attn"], cfg.dtype)
+
+    def group_body(xx, gp):
+        xx = _mamba_scan(gp, xx, cfg, mesh, remat)
+        h, _ = attention_block(sa["attn"], rms_norm(xx, sa["ln1"]), cfg)
+        xx = shard(xx + h, mesh, ba, "model" if cfg.seq_shard else None, None)
+        return xx, None
+
+    gb = jax.checkpoint(lambda xx, gp: group_body(xx, gp)[0]) if remat else None
+    if remat:
+        x = jax.lax.scan(lambda xx, gp: (gb(xx, gp), None), x,
+                         params["mamba_groups"])[0]
+    else:
+        x = jax.lax.scan(group_body, x, params["mamba_groups"])[0]
+    if trailing:
+        x = _mamba_scan(params["mamba_tail"], x, cfg, mesh, remat)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cfg.dtype))
+    return shard(logits, mesh, ba, None, "model")
+
+
+class HybridDecodeState(NamedTuple):
+    ssm_groups: Any    # (G, per_group, B, H, N, P)
+    conv_groups: Any   # (G, per_group, B, K-1, C)
+    ssm_tail: Any
+    conv_tail: Any
+    kv: Any            # (G, B, S, Hkv, hd) ×2 — per shared-attn application
+    pos: jax.Array
+
+
+def init_hybrid_decode_state(cfg: ArchConfig, batch: int, max_seq: int, mesh=None):
+    groups, per_group, trailing = hybrid_layout(cfg)
+    ba = batch_axes(mesh)
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+
+    def mk_ssm(n):
+        s = jnp.zeros((*n, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                      jnp.float32)
+        c = jnp.zeros((*n, batch, cfg.conv_width - 1, conv_ch), cfg.dtype)
+        return s, c
+
+    ssm_g, conv_g = mk_ssm((groups, per_group))
+    ssm_t, conv_t = mk_ssm((trailing,)) if trailing else (None, None)
+    k = jnp.zeros((groups, batch, max_seq, cfg.num_kv_heads, cfg.hd), cfg.dtype)
+    v = jnp.zeros_like(k)
+    if mesh is not None:
+        seq_ax = "data" if batch == 1 else None
+        model_size = mesh.shape.get("model", 1)
+        kv_axes = (
+            (None, ba, seq_ax, "model", None)
+            if cfg.num_kv_heads % model_size == 0
+            else (None, ba, seq_ax, None, "model")
+        )
+        k, v = shard(k, mesh, *kv_axes), shard(v, mesh, *kv_axes)
+        ssm_g = shard(ssm_g, mesh, None, None, ba, "model", None, None)
+    return HybridDecodeState(
+        ssm_groups=ssm_g, conv_groups=conv_g, ssm_tail=ssm_t, conv_tail=conv_t,
+        kv=(k, v), pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def hybrid_decode_step(params, cfg: ArchConfig, mesh, tokens, state):
+    groups, per_group, trailing = hybrid_layout(cfg)
+    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    positions = jnp.broadcast_to(state.pos, (tokens.shape[0], 1))
+    sa = cast_block_params(params["shared_attn"], cfg.dtype)
+
+    def mamba_step(xx, lp, ssm, conv):
+        lp = cast_block_params(lp, cfg.dtype)
+        h, new_ssm, new_conv = mamba_block(
+            lp, rms_norm(xx, lp["ln1"]), cfg, ssm_state=ssm, conv_cache=conv
+        )
+        return xx + h, new_ssm, new_conv
+
+    def group_step(xx, inp):
+        gp, ssm_g, conv_g, kv_k, kv_v = inp
+
+        # inner scan over the group's mamba layers
+        def inner_body(c, inp2):
+            lp, ssm_l, conv_l = inp2
+            c2, ns, nc = mamba_step(c, lp, ssm_l, conv_l)
+            return c2, (ns, nc)
+
+        xx, (new_ssm, new_conv) = jax.lax.scan(inner_body, xx, (gp, ssm_g, conv_g))
+        h, new_kv = attention_block(
+            sa["attn"], rms_norm(xx, sa["ln1"]), cfg,
+            positions=positions, kv_cache=(kv_k, kv_v), cache_len=state.pos,
+        )
+        return xx + h, (new_ssm, new_conv, new_kv[0], new_kv[1])
+
+    x, (ssm_g, conv_g, kc, vc) = jax.lax.scan(
+        group_step, x,
+        (params["mamba_groups"], state.ssm_groups, state.conv_groups,
+         state.kv[0], state.kv[1]),
+    )
+    ssm_t = conv_t = None
+    if trailing:
+        def tail_body(c, inp2):
+            lp, ssm_l, conv_l = inp2
+            c2, ns, nc = mamba_step(c, lp, ssm_l, conv_l)
+            return c2, (ns, nc)
+
+        x, (ssm_t, conv_t) = jax.lax.scan(
+            tail_body, x, (params["mamba_tail"], state.ssm_tail, state.conv_tail)
+        )
+    x = rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cfg.dtype))
+    new_state = HybridDecodeState(
+        ssm_groups=ssm_g, conv_groups=conv_g, ssm_tail=ssm_t, conv_tail=conv_t,
+        kv=(kc, vc), pos=state.pos + 1,
+    )
+    return logits, new_state

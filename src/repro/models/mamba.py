@@ -1,0 +1,198 @@
+"""Mamba-2 (state-space duality) block — Dao & Gu 2024 (arXiv:2405.21060).
+
+SSD computes, per head, ``y_t = Σ_{s≤t} C_t · (Π_{r=s+1..t} a_r) · B_s x_s``
+plus a skip ``D·x_t``.  Three execution paths:
+
+- **chunked prefill** (training / long prefill): split the sequence into
+  chunks of ``cfg.ssm_chunk``; the intra-chunk term is a masked quadratic
+  attention-like product, inter-chunk states are carried by a
+  ``jax.lax.scan`` (the TPU-friendly formulation — chunk matmuls feed the
+  MXU; a Pallas kernel with the same math lives in
+  ``repro.kernels.ssd_scan``);
+- **single-step decode**: O(1) recurrent state update — this is why the
+  ssm/hybrid architectures run the 500k-context decode shape;
+- pure recurrence (``ref``-grade) lives in the kernel's ``ref.py``.
+
+Layout notes: x is expanded to ``d_inner = expand·d_model`` and split into
+``ssm_heads`` heads of ``ssm_head_dim``; B/C are shared across heads
+(n_groups = 1), ``dt`` and the decay ``A`` are per-head scalars.  A short
+depthwise causal conv precedes the SSM, as in the reference model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, dense_init, rms_norm, split_keys
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """(…, L) per-step log-decay → (…, L, L) cumulative decay matrix:
+    ``out[t, s] = Σ_{r=s+1..t} log_a_r`` for s ≤ t, −inf above diagonal."""
+    L = log_a.shape[-1]
+    cum = jnp.cumsum(log_a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)   values
+    dt: jax.Array,     # (B, S, H)      per-head step (softplus'd)
+    a_log: jax.Array,  # (H,)           log of -A (decay strength)
+    Bm: jax.Array,     # (B, S, N)      input matrix (shared across heads)
+    Cm: jax.Array,     # (B, S, N)      output matrix
+    chunk: int,
+) -> jax.Array:
+    """Chunked SSD scan.  Returns (B, S, H, P)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} % chunk {chunk} != 0"
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (H,) negative
+    log_decay = dt.astype(jnp.float32) * a                  # (B, S, H)
+    xdt = x * dt[..., None].astype(x.dtype)                 # fold dt into x
+
+    # chunked views: (B, NC, L, ...)
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    dc = log_decay.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    # intra-chunk (quadratic, matmul-friendly)
+    L = jnp.exp(_segsum(dc.transpose(0, 1, 3, 2)))          # (B,NC,H,L,L)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)          # (B,NC,L,L)
+    intra = jnp.einsum(
+        "bchlm,bclm,bcmhp->bclhp",
+        L.transpose(0, 1, 2, 3, 4),
+        scores.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )
+
+    # chunk-final states: (B, NC, H, N, P)
+    dc_sum = dc.sum(axis=2)                                  # (B,NC,H)
+    # decay from position l to end of chunk: exp(Σ_{r>l} logdecay)
+    decay_end = jnp.exp(dc_sum[:, :, None, :] - jnp.cumsum(dc, axis=2))  # (B,NC,L,H)
+    states = jnp.einsum(
+        "bcln,bclh,bclhp->bchnp",
+        Bc.astype(jnp.float32),
+        decay_end.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )
+
+    # inter-chunk recurrence over chunk states
+    def scan_fn(carry, inp):
+        st, chunk_decay = inp                                # (B,H,N,P), (B,H)
+        new = carry * jnp.exp(chunk_decay)[..., None, None] + st
+        return new, carry                                    # emit state BEFORE this chunk
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), dc_sum.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,NC,H,N,P)
+
+    # contribution of carried-in state to each position
+    decay_in = jnp.exp(jnp.cumsum(dc, axis=2))               # (B,NC,L,H)
+    inter = jnp.einsum(
+        "bcln,bclh,bchnp->bclhp",
+        Cc.astype(jnp.float32),
+        decay_in.astype(jnp.float32),
+        prev_states,
+    )
+    y = (intra + inter).reshape(b, s, h, p)
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, N, P) carried SSM state
+    x: jax.Array,      # (B, 1, H, P)
+    dt: jax.Array,     # (B, 1, H)
+    a_log: jax.Array,  # (H,)
+    Bm: jax.Array,     # (B, 1, N)
+    Cm: jax.Array,     # (B, 1, N)
+) -> tuple[jax.Array, jax.Array]:
+    """O(1) recurrent update: state' = decay·state + B x dt; y = C·state'."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0].astype(jnp.float32) * a)        # (B, H)
+    upd = jnp.einsum(
+        "bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+        (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+    )
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), new_state)
+    return new_state, y[:, None].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# full block: in_proj → conv → SSD → gated norm → out_proj
+# ---------------------------------------------------------------------- #
+def _causal_conv(x: jax.Array, w: jax.Array, cache: jax.Array | None = None):
+    """Depthwise causal conv along seq. x: (B, S, C), w: (K, C).
+    With a cache (decode): cache holds the last K−1 inputs."""
+    k = w.shape[0]
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)         # (B, K, C)
+        y = jnp.einsum("bkc,kc->bc", window[:, -k:], w)[:, None]
+        return y, window[:, -(k - 1):]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return y, None
+
+
+def mamba_block(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    ssm_state: jax.Array | None = None,   # (B, H, N, P) decode carry
+    conv_cache: jax.Array | None = None,  # (B, K-1, conv_ch)
+):
+    """Returns (y, new_ssm_state, new_conv_cache)."""
+    b, s, _ = x.shape
+    d_in, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z = zxbcdt[..., :d_in]                       # gate
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]   # conv channels (x, B, C)
+    dt = zxbcdt[..., 2 * d_in + 2 * n :]         # (B, S, H) step sizes
+    xbc, conv_cache = _causal_conv(xbc, params["conv_w"], conv_cache)
+    xbc = jax.nn.silu(xbc + params["conv_b"].astype(xbc.dtype))
+    xs = xbc[..., :d_in].reshape(b, s, h, hd)
+    Bm = xbc[..., d_in : d_in + n]
+    Cm = xbc[..., d_in + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    if ssm_state is not None:
+        new_state, y = ssd_decode_step(ssm_state, xs, dt, params["a_log"], Bm, Cm)
+    else:
+        y = ssd_chunked(xs, dt, params["a_log"], Bm, Cm, cfg.ssm_chunk)
+        new_state = None
+    y = y + xs * params["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, new_state, conv_cache
+
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = d_in + 2 * n
+    proj_out = d_in + conv_ch + h
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "in_proj": dense_init(k1, (cfg.d_model, proj_out), dtype, cfg.d_model),
+        "conv_w": dense_init(k2, (cfg.conv_width, conv_ch), dtype, cfg.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),               # A = -1 initially
+        "d_skip": jnp.ones((h,), dtype),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(k3, (d_in, cfg.d_model), dtype, d_in),
+    }

@@ -1,0 +1,144 @@
+"""Feed-forward sublayers: SwiGLU dense MLP and token-choice top-k MoE.
+
+The MoE uses the GShard/Switch grouped-dispatch formulation adapted for the
+(pod, data, model) mesh:
+
+- tokens are processed in groups of ``MOE_GROUP`` so the one-hot dispatch
+  mask is O(group · E · C) instead of O(N · E · C);
+- dispatched activations carry explicit sharding constraints — expert dim
+  on the model axis when divisible (kimi-k2: 384 experts), otherwise the
+  expert FFN's hidden dim shards on the model axis (mixtral: 8 experts);
+- capacity ``C = group · top_k / E · capacity_factor`` with residual
+  passthrough for dropped tokens.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, batch_axes, dense_init, shard, split_keys
+
+MOE_GROUP = 512
+
+
+# ---------------------------------------------------------------------- #
+# dense SwiGLU
+# ---------------------------------------------------------------------- #
+def mlp_block(params: dict, x: jax.Array, mesh=None) -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = jax.nn.silu(gate) * up
+    h = shard(h, mesh, batch_axes(mesh), None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+def init_mlp(key, cfg: ArchConfig, dtype, d_ff: int | None = None):
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(k1, (cfg.d_model, f), dtype, cfg.d_model),
+        "w_up": dense_init(k2, (cfg.d_model, f), dtype, cfg.d_model),
+        "w_down": dense_init(k3, (f, cfg.d_model), dtype, f),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# mixture of experts
+# ---------------------------------------------------------------------- #
+def moe_capacity(cfg: ArchConfig, group: int) -> int:
+    cap = int(math.ceil(group * cfg.top_k / cfg.num_experts * cfg.capacity_factor))
+    return max(4, cap)
+
+
+def moe_block(params: dict, x: jax.Array, cfg: ArchConfig, mesh=None) -> jax.Array:
+    """Token-choice top-k MoE with grouped capacity dispatch.
+
+    x: (B, S, D) → (B, S, D); aux losses returned via params-free closure
+    would complicate the scan carry, so the load-balancing loss is folded
+    into the output as a stop-gradient-free scalar stored by the caller.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    n = b * s
+    g = math.gcd(n, MOE_GROUP)
+    group = MOE_GROUP if n % MOE_GROUP == 0 else g
+    ngroups = n // group
+    cap = moe_capacity(cfg, group)
+
+    xt = x.reshape(ngroups, group, d)
+    ba = batch_axes(mesh)
+    xt = shard(xt, mesh, ba, None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xt, params["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                     # (G, n, E)
+    topv, topi = jax.lax.top_k(gates, k)                        # (G, n, k)
+    topv = topv / (topv.sum(-1, keepdims=True) + 1e-9)
+
+    # position of each (token, choice) within its expert's capacity
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)         # (G, n, k, E)
+    pos = jnp.cumsum(onehot.sum(2), axis=1) - onehot.sum(2)     # (G, n, E)
+    pos_per_choice = jnp.einsum("gnke,gne->gnk", onehot, pos)   # (G, n, k)
+    keep = pos_per_choice < cap
+    gate_kept = topv * keep
+
+    # dispatch: (G, n, k) choices → (G, E, C) slots
+    cap_oh = jax.nn.one_hot(pos_per_choice.astype(jnp.int32), cap, dtype=x.dtype)
+    disp = jnp.einsum("gnke,gnkc->gnec", onehot.astype(x.dtype), cap_oh)
+    # expert-parallel layout: experts over the data axes when divisible
+    # (weights resident; token dispatch = all-to-all over data), else
+    # experts over model with FSDP-D weights (small expert counts).
+    ba_n = 1
+    if mesh is not None:
+        for a in (ba or ()):
+            ba_n *= mesh.shape[a]
+    from repro.parallel.sharding import EXPERT_RESIDENT
+
+    expert_par = EXPERT_RESIDENT and mesh is not None and ba and e % ba_n == 0
+    if expert_par:
+        # dispatch stays token(g)-major; the E-major constraint on xe makes
+        # GSPMD insert the all-to-all (tokens travel to resident experts)
+        disp = shard(disp, mesh, ba, None, None, None)
+        xe = jnp.einsum("gnec,gnd->gecd", disp, xt)             # (G, E, C, D)
+        xe = shard(xe, mesh, None, ba, None, None)
+        gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+        h = jax.nn.silu(gate) * up
+        h = shard(h, mesh, None, ba, None, "model")
+        ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # (G, E, C, D)
+        ye = shard(ye, mesh, None, ba, None, None)
+    else:
+        disp = shard(disp, mesh, ba, None, "model" if e % 16 == 0 else None, None)
+        xe = jnp.einsum("gnec,gnd->gecd", disp, xt)             # (G, E, C, D)
+        xe = shard(xe, mesh, ba, "model", None, None)
+        gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+        h = jax.nn.silu(gate) * up
+        h = shard(h, mesh, ba, "model", None, None if e % 16 == 0 else "model")
+        ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # (G, E, C, D)
+        ye = shard(ye, mesh, ba, "model", None, None)
+
+    # combine: tokens gather their (gated) expert outputs back from slots.
+    # cap_oh is all-zero for overflow positions, so dropped tokens simply
+    # pass through as zeros (residual connection preserves them upstream).
+    comb_w = jnp.einsum(
+        "gnk,gnke,gnkc->gnec",
+        gate_kept.astype(x.dtype),
+        onehot.astype(x.dtype),
+        cap_oh,
+    )
+    y = jnp.einsum("gnec,gecd->gnd", comb_w, ye)
+    return y.reshape(b, s, d)
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    e, f = cfg.num_experts, cfg.d_ff
+    k0, k1, k2, k3 = split_keys(key, 4)
+    return {
+        "router": dense_init(k0, (cfg.d_model, e), dtype, cfg.d_model),
+        "w_gate": dense_init(k1, (e, cfg.d_model, f), dtype, cfg.d_model),
+        "w_up": dense_init(k2, (e, cfg.d_model, f), dtype, cfg.d_model),
+        "w_down": dense_init(k3, (e, f, cfg.d_model), dtype, f),
+    }

@@ -1,0 +1,270 @@
+"""Decoder-only LM assembly (dense / MoE / Mamba-2), scan-over-layers.
+
+One homogeneous block stack: per-layer params are stacked on a leading
+axis and the stack runs under ``jax.lax.scan`` (+ optional remat), so HLO
+size is independent of depth.  The block kind is fixed per config
+(dense-attn+MLP, attn+MoE, or mamba), which covers mamba2-1.3b, the MoE
+and dense LMs, and internvl2's language backbone (patch embeddings are
+concatenated in front of the token embeddings).  Heterogeneous stacks
+(zamba2) live in :mod:`repro.models.hybrid`; enc-dec (whisper) in
+:mod:`repro.models.encdec`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, init_attention
+from .common import (
+    ArchConfig,
+    batch_axes,
+    dense_init,
+    rms_norm,
+    shard,
+    split_keys,
+)
+from .mamba import init_mamba, mamba_block
+from .mlp import init_mlp, init_moe, mlp_block, moe_block
+
+
+# ---------------------------------------------------------------------- #
+# one decoder block (params are per-layer slices)
+# ---------------------------------------------------------------------- #
+def decoder_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    mesh,
+    *,
+    positions=None,
+    kv_cache=None,
+    cache_len=None,
+    ssm_state=None,
+    conv_cache=None,
+):
+    """Pre-norm block. Returns (x, new_kv_cache, new_ssm_state, new_conv)."""
+    from .common import cast_block_params
+
+    params = cast_block_params(params, cfg.dtype)
+    ba = batch_axes(mesh)
+    seq_ax = "model" if cfg.seq_shard else None
+    if cfg.is_ssm or (cfg.is_hybrid and "in_proj" in params):
+        h, new_ssm, new_conv = mamba_block(
+            params["mix"] if "mix" in params else params,
+            rms_norm(x, params["ln1"]),
+            cfg,
+            ssm_state=ssm_state,
+            conv_cache=conv_cache,
+        )
+        x = x + h
+        x = shard(x, mesh, ba, seq_ax, None)
+        return x, None, new_ssm, new_conv
+
+    h, new_cache = attention_block(
+        params["attn"],
+        rms_norm(x, params["ln1"]),
+        cfg,
+        positions=positions,
+        kv_cache=kv_cache,
+        cache_len=cache_len,
+    )
+    x = x + h
+    x = shard(x, mesh, ba, seq_ax, None)
+    h2 = rms_norm(x, params["ln2"])
+    if cfg.is_moe:
+        h2 = moe_block(params["moe"], h2, cfg, mesh)
+    else:
+        h2 = mlp_block(params["mlp"], h2, mesh)
+    x = x + h2
+    x = shard(x, mesh, ba, seq_ax, None)
+    return x, new_cache, None, None
+
+
+def init_decoder_block(key, cfg: ArchConfig, dtype):
+    if cfg.is_ssm:
+        p = dict(init_mamba(key, cfg, dtype))
+        p["ln1"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+    k1, k2 = split_keys(key, 2)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------- #
+# whole model
+# ---------------------------------------------------------------------- #
+def init_lm(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype
+    keys = split_keys(key, cfg.num_layers + 3)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_decoder_block(keys[i], cfg, dtype) for i in range(cfg.num_layers)],
+    )
+    params = {
+        "embed": dense_init(keys[-3], (cfg.padded_vocab, cfg.d_model), dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            keys[-2], (cfg.d_model, cfg.padded_vocab), dtype, cfg.d_model
+        )
+    if cfg.num_patches:
+        params["patch_proj"] = dense_init(
+            keys[-1], (cfg.d_model, cfg.d_model), dtype, cfg.d_model
+        )
+    return params
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def lm_forward(
+    params: dict,
+    cfg: ArchConfig,
+    mesh,
+    tokens: jax.Array,                      # (B, S) int32
+    *,
+    patch_embeds: jax.Array | None = None,  # (B, Np, D) vlm stub frontend
+) -> jax.Array:
+    """Training/prefill forward → logits (B, S_total, padded_vocab)."""
+    ba = batch_axes(mesh)
+    x = params["embed"][tokens] * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    x = x.astype(cfg.dtype)
+    if patch_embeds is not None:
+        pe = jnp.einsum("bnd,de->bne", patch_embeds.astype(cfg.dtype),
+                        params["patch_proj"].astype(cfg.dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    x = shard(x, mesh, ba, "model" if cfg.seq_shard else None, None)
+
+    if cfg.use_scan:
+        block = _remat(
+            lambda xx, layer_params: decoder_block(layer_params, xx, cfg, mesh)[0],
+            cfg,
+        )
+        x = jax.lax.scan(
+            lambda xx, lp: (block(xx, lp), None), x, params["layers"]
+        )[0]
+    else:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x = decoder_block(lp, x, cfg, mesh)[0]
+
+    x = rms_norm(x, params["ln_f"])
+    w_out = params.get("unembed")
+    if w_out is None:
+        w_out = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(cfg.dtype))
+    logits = shard(logits, mesh, ba, None, "model")
+    return logits
+
+
+class DecodeState(NamedTuple):
+    """Carried state for autoregressive decoding."""
+
+    kv: Any            # (L, B, S, Hkv, hd) ×2 for attn archs, else None
+    ssm: Any           # (L, B, H, N, P) for ssm archs, else None
+    conv: Any          # (L, B, K-1, C) for ssm archs, else None
+    pos: jax.Array     # scalar int32: current cache length
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int, mesh=None):
+    L = cfg.num_layers
+    ba = batch_axes(mesh)
+    kv = ssm = conv = None
+    if cfg.is_ssm:
+        ssm = jnp.zeros(
+            (L, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+        )
+        conv = jnp.zeros(
+            (L, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state), cfg.dtype
+        )
+        if mesh is not None:
+            ssm = shard(ssm, mesh, None, ba, "model", None, None)
+            conv = shard(conv, mesh, None, ba, None, None)
+    else:
+        mk = lambda: jnp.zeros((L, batch, max_seq, cfg.num_kv_heads, cfg.hd), cfg.dtype)
+        k, v = mk(), mk()
+        if mesh is not None:
+            # batch=1 long-context: shard the cache sequence over data.
+            # GQA KV heads often don't divide the model axis (kv=8 on a
+            # 16-way axis); shard head_dim instead so the cache still
+            # distributes (hd is 64/112/128 across the zoo — all divisible).
+            seq_ax = "data" if batch == 1 else None
+            model_size = mesh.shape.get("model", 1)
+            if cfg.num_kv_heads % model_size == 0:
+                axes = (None, ba, seq_ax, "model", None)
+            else:
+                axes = (None, ba, seq_ax, None, "model")
+            k = shard(k, mesh, *axes)
+            v = shard(v, mesh, *axes)
+        kv = (k, v)
+    return DecodeState(kv=kv, ssm=ssm, conv=conv, pos=jnp.zeros((), jnp.int32))
+
+
+def lm_decode_step(
+    params: dict,
+    cfg: ArchConfig,
+    mesh,
+    tokens: jax.Array,          # (B, 1) next token ids
+    state: DecodeState,
+) -> tuple[jax.Array, DecodeState]:
+    """One decode step → (logits (B, 1, V), new state)."""
+    ba = batch_axes(mesh)
+    x = params["embed"][tokens] * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    x = x.astype(cfg.dtype)
+    positions = jnp.broadcast_to(state.pos, (tokens.shape[0], 1))
+
+    def step(carry, inp):
+        xx = carry
+        lp, kv_l, ssm_l, conv_l = inp
+        out, new_kv, new_ssm, new_conv = decoder_block(
+            lp, xx, cfg, mesh,
+            positions=positions,
+            kv_cache=kv_l,
+            cache_len=state.pos,
+            ssm_state=ssm_l,
+            conv_cache=conv_l,
+        )
+        return out, (new_kv, new_ssm, new_conv)
+
+    if cfg.is_ssm:
+        x, (new_kv, new_ssm, new_conv) = jax.lax.scan(
+            lambda xx, inp: step(xx, (inp[0], None, inp[1], inp[2])),
+            x,
+            (params["layers"], state.ssm, state.conv),
+        )
+        new_state = DecodeState(kv=None, ssm=new_ssm, conv=new_conv,
+                                pos=state.pos + 1)
+    else:
+        x, (new_kv, _, _) = jax.lax.scan(
+            lambda xx, inp: step(xx, (inp[0], (inp[1], inp[2]), None, None)),
+            x,
+            (params["layers"], state.kv[0], state.kv[1]),
+        )
+        new_state = DecodeState(kv=new_kv, ssm=None, conv=None, pos=state.pos + 1)
+
+    x = rms_norm(x, params["ln_f"])
+    w_out = params.get("unembed")
+    if w_out is None:
+        w_out = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(cfg.dtype))
+    return logits, new_state

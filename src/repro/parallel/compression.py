@@ -1,0 +1,90 @@
+"""Gradient compression hooks (distributed-optimization toolbox).
+
+Two classic schemes with **error feedback** so compression noise does not
+bias convergence:
+
+- ``int8_compress``  — per-tensor scale + int8 quantization (4× over f32);
+- ``topk_compress``  — keep the top-k fraction of entries by magnitude.
+
+``CompressedState`` carries the residual; apply around the DP AllReduce:
+
+    c, st = int8_compress(g, st)      # before the all-reduce
+    g_hat  = decompress(c)            # after
+
+In the dry-run roofline these shrink the DP-gradient collective term
+proportionally (§Perf discusses when that matters: only when the
+collective term dominates and links are DCN-grade, not ICI).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "EFState",
+    "init_ef",
+    "int8_compress",
+    "int8_decompress",
+    "topk_compress",
+    "topk_decompress",
+]
+
+
+class EFState(NamedTuple):
+    residual: Any  # same pytree as grads
+
+
+def init_ef(grads) -> EFState:
+    return EFState(jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+# ----------------------------- int8 ----------------------------------- #
+def int8_compress(grads, ef: EFState):
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_r = x - q.astype(jnp.float32) * scale
+        return (q, scale), new_r
+
+    pairs = jax.tree.map(one, grads, ef.residual)
+    is_pair = lambda t: isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], tuple)
+    comp = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    resid = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return comp, EFState(resid)
+
+
+def int8_decompress(comp):
+    is_qs = lambda t: isinstance(t, tuple) and len(t) == 2
+    return jax.tree.map(
+        lambda t: t[0].astype(jnp.float32) * t[1], comp, is_leaf=is_qs
+    )
+
+
+# ----------------------------- top-k ----------------------------------- #
+def topk_compress(grads, ef: EFState, frac: float = 0.1):
+    def one(g, r):
+        x = (g.astype(jnp.float32) + r).reshape(-1)
+        k = max(1, int(x.size * frac))
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        kept = x[idx]
+        new_r = x.at[idx].set(0.0).reshape(g.shape)
+        return (kept, idx, g.shape), new_r
+
+    pairs = jax.tree.map(one, grads, ef.residual)
+    is_p = lambda t: isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], tuple)
+    comp = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_p)
+    resid = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_p)
+    return comp, EFState(resid)
+
+
+def topk_decompress(comp):
+    is_c = lambda t: isinstance(t, tuple) and len(t) == 3
+    def one(t):
+        kept, idx, shape = t
+        flat = jnp.zeros(int(jnp.prod(jnp.array(shape))), jnp.float32)
+        return flat.at[idx].set(kept).reshape(shape)
+    return jax.tree.map(one, comp, is_leaf=is_c)

@@ -1,0 +1,149 @@
+"""Parameter/optimizer-state sharding rules for the (pod, data, model) mesh.
+
+``param_shardings(params, mesh)`` walks the parameter pytree and assigns a
+NamedSharding per array from its *key name* (embed, wq, w_gate, …) and
+rank.  Two axes are used:
+
+- "model" — tensor-parallel dim (heads / d_ff / experts / vocab),
+- ba = ("pod","data") — **FSDP/ZeRO dim**: a second weight dimension
+  (usually d_model) shards over the data axes, so parameters and Adam
+  moments are *fully* sharded across all 512 devices; XLA inserts the
+  per-layer weight all-gathers (classic FSDP) which the roofline
+  accounts under the collective term.
+
+Per-dimension divisibility fallback: a dim that does not divide its mesh
+axis is replicated (GQA KV heads fall back to sharding head_dim; small
+expert counts fall back to sharding the expert FFN hidden dim).  Leading
+layer-stack dimensions (from scan stacking) are never sharded.
+
+Optimizer state (AdamW mu/nu mirror the params) reuses the same function.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import make_spec
+
+__all__ = ["param_shardings", "batch_spec", "named"]
+
+
+def _rules(key: str, shape: tuple[int, ...], model: int, ba, fsdp: bool):
+    """Logical axes for the array (len == rank); leading stack dims None."""
+    r = len(shape)
+    last = lambda *axes: (None,) * (r - len(axes)) + tuple(axes)
+    dp = ba if fsdp else None
+    if r <= 1:
+        return (None,) * r
+
+    if key == "embed":
+        return last("model", dp)
+    if key in ("unembed", "in_proj", "patch_proj", "frame_proj"):
+        return last(dp, "model")
+    if key == "out_proj":
+        return last("model", dp)
+    if key == "conv_w":
+        return last(None, "model")
+    if key == "wq":
+        h = shape[-2]
+        return last(dp, "model", None) if h % model == 0 else last(dp, None, "model")
+    if key in ("wk", "wv"):
+        kv = shape[-2]
+        return last(dp, "model", None) if kv % model == 0 else last(dp, None, "model")
+    if key == "wo":
+        h = shape[-3]
+        return last("model", None, dp) if h % model == 0 else last(None, "model", dp)
+    if key in ("w_gate", "w_up"):
+        if _looks_expert(shape):
+            return _expert_axes(shape, model, ba, order="df")
+        return last(dp, "model")
+    if key == "w_down":
+        if _looks_expert(shape):
+            return _expert_axes(shape, model, ba, order="fd")
+        return last("model", dp)
+    if key in ("router", "enc_pos", "bq", "bk", "bv"):
+        return (None,) * r
+    return (None,) * r
+
+
+# §Perf iteration (kimi-k2): expert-resident weights + token all-to-all
+# (Switch/GShard-style EP) were hypothesized to beat FSDP weight gathers.
+# MEASURED RESULT: refuted on this GSPMD version — the dispatch einsum's
+# backward inserts E-major all-gathers (6.4 TB/dev) and replicates compute
+# (+60 % FLOPs).  The FSDP layout stays the default; flip this flag to
+# reproduce the experiment (EXPERIMENTS.md §Perf, kimi iterations 1-2).
+EXPERT_RESIDENT = False
+
+
+def _expert_axes(shape, model, ba, *, order: str):
+    """Expert-stacked FFN weights (…, E, D, F) / (…, E, F, D).
+
+    Preferred layout (§Perf iteration: 'resident expert weights'): shard
+    the expert dim over the data axes and the FFN hidden dim over the model
+    axis — weights never move; the token dispatch becomes an all-to-all
+    over the data axis (tokens travel to their experts), which is orders of
+    magnitude less traffic than FSDP-regathering TBs of expert weights
+    every layer.  Falls back to expert-over-model + FSDP-D when the expert
+    count does not divide the data axes (mixtral: 8 experts).
+    """
+    r = len(shape)
+    last = lambda *axes: (None,) * (r - len(axes)) + tuple(axes)
+    e = shape[-3]
+    ff_axis = "model"
+    if EXPERT_RESIDENT and ba is not None and e % _axes_size_hint.get(ba, 0) == 0:
+        return last(ba, None, ff_axis) if order == "df" else last(ba, ff_axis, None)
+    if e % model == 0:
+        return last("model", ba, None) if order == "df" else last("model", None, ba)
+    return last(None, ba, "model") if order == "df" else last(None, "model", ba)
+
+
+# populated by param_shardings with the actual mesh axis sizes
+_axes_size_hint: dict = {}
+
+_EXPERT_HINT: set[int] = set()
+
+
+def _looks_expert(shape: tuple[int, ...]) -> bool:
+    """(…, E, D, F) expert stacks have E in the known expert counts."""
+    return len(shape) >= 3 and shape[-3] in _EXPERT_HINT
+
+
+def param_shardings(
+    params: Any, mesh: Mesh, *, num_experts: int = 0, fsdp: bool = True
+):
+    """NamedSharding pytree matching ``params``."""
+    if num_experts:
+        _EXPERT_HINT.add(num_experts)
+    model = mesh.shape.get("model", 1)
+    ba = tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+    if ba is not None:
+        n = 1
+        for a in ba:
+            n *= mesh.shape[a]
+        _axes_size_hint[ba] = n
+
+    def assign(path, leaf):
+        key = ""
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                key = str(p.key)
+                break
+        axes = _rules(key, leaf.shape, model, ba, fsdp)
+        return NamedSharding(mesh, make_spec(mesh, leaf.shape, axes))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def batch_spec(mesh: Mesh, shape: tuple[int, ...]) -> NamedSharding:
+    """Batch-sharded input spec: dim0 over (pod, data), divisibility-safe."""
+    ba = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return NamedSharding(
+        mesh, make_spec(mesh, shape, (ba,) + (None,) * (len(shape) - 1))
+    )
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))

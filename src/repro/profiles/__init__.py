@@ -1,0 +1,9 @@
+"""DNN workload communication profiles (paper Table 3 + Fig. 1)."""
+
+from .from_dryrun import available_archs, dryrun_pattern
+from .models import PROFILES, ModelProfile, get_profile, paper_models
+
+__all__ = [
+    "PROFILES", "ModelProfile", "get_profile", "paper_models",
+    "dryrun_pattern", "available_archs",
+]

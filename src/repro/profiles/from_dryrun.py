@@ -1,0 +1,83 @@
+"""Bridge between the two halves of the system: derive a CASSINI
+communication profile for an *assigned architecture* from its own multi-pod
+dry-run artifact.
+
+The dry-run cache records, per (arch × shape), the per-device HLO FLOPs and
+collective bytes of one training step on the production mesh.  On the
+TPU-v5e target those give the step's compute time and its DCN-visible
+communication burst — exactly the (iteration time, Up-phase) pair CASSINI's
+geometric abstraction consumes.  This is how a production deployment would
+profile tenants: from their compiled step, not from NIC counters.
+
+    >>> pattern = dryrun_pattern("llama3.2-1b")     # CommPattern
+    >>> find_rotations([pattern, other], capacity_gbps=50.0)
+
+The DP-gradient fraction of the collective bytes is what crosses pod
+boundaries (DCN) in a multi-pod job — we expose ``dcn_fraction`` to scale
+the Up phase for cluster-level scheduling of pod-sized workers.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.circle import CommPattern, Phase
+
+PEAK_FLOPS = 197e12
+ICI_BW = 50e9
+
+CACHE = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_cache"
+
+__all__ = ["dryrun_pattern", "available_archs"]
+
+
+def _load(arch: str, shape: str, mesh: str):
+    f = CACHE / f"{arch}__{shape}__{mesh}.json"
+    if not f.exists():
+        return None
+    rec = json.loads(f.read_text())
+    return rec if rec.get("status") == "ok" else None
+
+
+def available_archs() -> list[str]:
+    return sorted(
+        {f.name.split("__")[0] for f in CACHE.glob("*__train_4k__single.json")}
+    )
+
+
+def dryrun_pattern(
+    arch: str,
+    *,
+    shape: str = "train_4k",
+    mesh: str = "single",
+    nic_gbps: float = 50.0,
+    dcn_fraction: float = 0.15,
+) -> CommPattern:
+    """CommPattern of one training iteration, derived from the dry-run.
+
+    iteration time ≈ max(compute, collective) term of the compiled step;
+    the Up phase carries the DCN-crossing share of the collective bytes at
+    the job's NIC rate, placed at the end of the iteration (DP gradient
+    sync after backprop — the Fig. 1(a) shape).
+    """
+    rec = _load(arch, shape, mesh)
+    if rec is None:
+        raise FileNotFoundError(
+            f"no dry-run cell for {arch}×{shape}×{mesh}; run "
+            f"`python -m repro.launch.dryrun --arch {arch}`"
+        )
+    t_comp = rec["flops"] / PEAK_FLOPS * 1e3                      # ms
+    coll_bytes = rec["collectives"]["bytes"]["total"]
+    t_coll = coll_bytes / ICI_BW * 1e3                            # ms
+    iter_ms = max(t_comp, t_coll, 1.0)
+
+    dcn_gbit = coll_bytes * dcn_fraction * 8e-9
+    up_ms = max(1.0, dcn_gbit / (nic_gbps * 0.9) * 1e3)
+    iter_ms = max(iter_ms, up_ms * 1.25)
+    return CommPattern(
+        iter_time_ms=iter_ms,
+        phases=(Phase(start_ms=iter_ms - up_ms, duration_ms=up_ms,
+                      gbps=nic_gbps * 0.9),),
+        name=f"{arch}:{shape}",
+    )

@@ -1,0 +1,170 @@
+"""Communication profiles of the paper's 13 DNN workloads (§5.1, Table 3).
+
+The paper profiles each job on the testbed with InfiniBand port counters;
+we generate the same information analytically:
+
+- **data-parallel** models (VGG/ResNet/BERT families): one compute (Down)
+  segment followed by one AllReduce (Up) segment per iteration — Fig. 1(a).
+  Up bytes = ring-AllReduce traffic ``2 · P · (n−1)/n`` at the model's
+  achievable NIC utilization.
+- **model/hybrid-parallel** models (GPT family, DLRM): multi-phase patterns
+  transcribed from Fig. 1(b)–(d) (activation peaks during forward, heavy
+  AllReduce / all-to-all phases), scaled to the model's iteration time.
+
+Solo iteration times are anchored to the paper's Table 2 snapshot numbers
+(≈ 55–300 ms) at the listed reference batch sizes.  The scheduler may change
+worker counts / batch sizes; patterns rescale accordingly.
+
+Duty cycles reproduce the paper's compatibility structure, e.g.
+WideResNet101+VGG16 fully compatible, BERT+VGG19 only partially (§2.2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.circle import CommPattern, Phase
+
+__all__ = ["ModelProfile", "PROFILES", "get_profile", "paper_models"]
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    """Analytic communication profile of one DNN workload.
+
+    ``phases_frac`` are (start_frac, dur_frac, gbps) templates on the solo
+    iteration; data-parallel models instead derive their single Up phase
+    from ``param_mb`` (ring AllReduce bytes) and ``peak_gbps``.
+    """
+
+    name: str
+    kind: str                    # "vision" | "language" | "recommendation"
+    parallelism: str             # "dp" | "mp"
+    param_mb: float              # Table 3 memory requirement
+    ref_batch: int               # reference per-GPU batch size
+    ref_workers: int = 4
+    compute_ms: float = 100.0    # Down-phase duration at ref batch
+    peak_gbps: float = 45.0      # achievable NIC demand during Up phases
+    comm_efficiency: float = 0.9 # fraction of peak actually sustained
+    phases_frac: tuple[tuple[float, float, float], ...] = ()  # mp only
+    mp_iter_ms: float = 0.0      # solo iteration time for mp templates
+
+    # -------------------------------------------------------------- #
+    def allreduce_gbit(self, num_workers: int) -> float:
+        """Ring AllReduce bytes per NIC per iteration, in Gbit."""
+        n = max(2, num_workers)
+        return 2.0 * self.param_mb * 8e-3 * (n - 1) / n
+
+    def comm_ms(self, num_workers: int) -> float:
+        rate = self.peak_gbps * self.comm_efficiency
+        return self.allreduce_gbit(num_workers) / rate * 1e3
+
+    def iter_time_ms(
+        self, num_workers: int | None = None, batch_per_gpu: int | None = None
+    ) -> float:
+        n = num_workers or self.ref_workers
+        b = batch_per_gpu or self.ref_batch
+        if self.parallelism == "mp":
+            return self.mp_iter_ms * (0.5 + 0.5 * b / self.ref_batch)
+        return self.compute_ms * (b / self.ref_batch) + self.comm_ms(n)
+
+    # -------------------------------------------------------------- #
+    def pattern(
+        self,
+        num_workers: int | None = None,
+        batch_per_gpu: int | None = None,
+    ) -> CommPattern:
+        """The job's :class:`CommPattern` at the given configuration."""
+        n = num_workers or self.ref_workers
+        b = batch_per_gpu or self.ref_batch
+        iter_ms = self.iter_time_ms(n, b)
+        if self.parallelism == "mp":
+            phases = tuple(
+                Phase(start_ms=f0 * iter_ms, duration_ms=fd * iter_ms, gbps=g)
+                for (f0, fd, g) in self.phases_frac
+            )
+        else:
+            compute = self.compute_ms * (b / self.ref_batch)
+            phases = (Phase(start_ms=compute, duration_ms=self.comm_ms(n),
+                            gbps=self.peak_gbps),)
+        return CommPattern(iter_time_ms=iter_ms, phases=phases, name=self.name)
+
+    @property
+    def duty_cycle(self) -> float:
+        p = self.pattern()
+        return sum(ph.duration_ms for ph in p.phases) / p.iter_time_ms
+
+
+# ---------------------------------------------------------------------- #
+# The 13 workloads (Table 3).  compute_ms / peak_gbps calibrated to the
+# paper's measured iteration times and compatibility structure (§2.2,
+# Table 2): VGG family ≈ 45 % duty, WideResNet101 ≈ 50 %, ResNet50 light,
+# BERT-family 60–75 % duty (only partially compatible with VGGs),
+# GPT/DLRM multi-phase hybrid-parallel templates from Fig. 1.
+# ---------------------------------------------------------------------- #
+PROFILES: dict[str, ModelProfile] = {
+    p.name: p
+    for p in [
+        # --- vision, data parallel ---------------------------------- #
+        # compute_ms chosen so solo iteration times at the reference config
+        # land on a small set of period classes (320 / 160 / 210 / 260 ms):
+        # jobs the paper calls compatible share a (quantized) period class,
+        # so their unified circles stay small and interleaving is feasible.
+        ModelProfile("vgg11", "vision", "dp", param_mb=507, ref_batch=1400,
+                     compute_ms=176.0, peak_gbps=45.0, comm_efficiency=0.94),
+        ModelProfile("vgg16", "vision", "dp", param_mb=528, ref_batch=1400,
+                     compute_ms=170.2, peak_gbps=45.0, comm_efficiency=0.94),
+        ModelProfile("vgg19", "vision", "dp", param_mb=549, ref_batch=1400,
+                     compute_ms=163.9, peak_gbps=45.0, comm_efficiency=0.94),
+        ModelProfile("resnet50", "vision", "dp", param_mb=98, ref_batch=1600,
+                     compute_ms=51.0, peak_gbps=12.0),
+        ModelProfile("wideresnet101", "vision", "dp", param_mb=243, ref_batch=800,
+                     compute_ms=239.0, peak_gbps=40.0),
+        # --- language, data parallel -------------------------------- #
+        ModelProfile("bert", "language", "dp", param_mb=450, ref_batch=8,
+                     compute_ms=90.0, peak_gbps=40.0),
+        ModelProfile("roberta", "language", "dp", param_mb=800, ref_batch=12,
+                     compute_ms=150.0, peak_gbps=42.0),
+        ModelProfile("camembert", "language", "dp", param_mb=266, ref_batch=8,
+                     compute_ms=113.3, peak_gbps=38.0),
+        ModelProfile("xlm", "language", "dp", param_mb=1116, ref_batch=8,
+                     compute_ms=82.9, peak_gbps=42.0),
+        # --- language + recommendation, model/hybrid parallel -------- #
+        # phase templates transcribed from Fig. 1(b)–(d); low-bandwidth
+        # forward/activation peaks can co-exist on a link, the heavy
+        # AllReduce/all-to-all arcs are what interleaving must separate.
+        # Period classes drive compatibility: GPT-1/GPT-2 live on the
+        # 320 ms class, GPT-3/DLRM on the 560 ms class.  Matched periods
+        # interleave (high score); mismatched periods precess across the
+        # unified circle and collide in most iterations (low score) — the
+        # paper's ⟨GPT-1,GPT-2⟩ / ⟨GPT-3,DLRM⟩ vs ⟨GPT-3,GPT-2⟩ /
+        # ⟨GPT-1,DLRM⟩ structure (§5.2, §5.4).
+        ModelProfile("gpt1", "language", "mp", param_mb=9000, ref_batch=48,
+                     mp_iter_ms=320.0,
+                     phases_frac=((0.05, 0.07, 15.0), (0.48, 0.45, 40.0))),
+        ModelProfile("gpt2", "language", "mp", param_mb=27000, ref_batch=48,
+                     mp_iter_ms=320.0,
+                     phases_frac=((0.04, 0.04, 15.0), (0.11, 0.04, 15.0),
+                                  (0.18, 0.04, 15.0), (0.55, 0.40, 42.0))),
+        ModelProfile("gpt3", "language", "mp", param_mb=155000, ref_batch=32,
+                     mp_iter_ms=560.0,
+                     phases_frac=((0.00, 0.09, 25.0), (0.105, 0.08, 35.0),
+                                  (0.20, 0.12, 20.0), (0.50, 0.09, 40.0),
+                                  (0.605, 0.08, 30.0), (0.70, 0.12, 45.0))),
+        ModelProfile("dlrm", "recommendation", "mp", param_mb=1962, ref_batch=512,
+                     mp_iter_ms=560.0,
+                     phases_frac=((0.05, 0.17, 45.0), (0.55, 0.17, 45.0))),
+    ]
+}
+
+
+def get_profile(name: str) -> ModelProfile:
+    try:
+        return PROFILES[name.lower()]
+    except KeyError:
+        raise KeyError(f"unknown model profile {name!r}; have {sorted(PROFILES)}")
+
+
+def paper_models() -> Sequence[str]:
+    return tuple(PROFILES)

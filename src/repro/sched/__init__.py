@@ -1,0 +1,19 @@
+"""Cluster schedulers: Themis, Pollux, Random, Ideal + CASSINI wrapper."""
+
+from .base import ClusterState, Decision, Scheduler, pack_placement
+from .baselines import IdealScheduler, RandomScheduler
+from .cassini_augmented import CassiniAugmented
+from .pollux import PolluxScheduler
+from .themis import ThemisScheduler
+
+__all__ = [
+    "ClusterState",
+    "Decision",
+    "Scheduler",
+    "pack_placement",
+    "ThemisScheduler",
+    "PolluxScheduler",
+    "RandomScheduler",
+    "IdealScheduler",
+    "CassiniAugmented",
+]

@@ -1,0 +1,232 @@
+"""Scheduler interfaces shared by Themis / Pollux / Random / Ideal and the
+CASSINI augmentation layer.
+
+A host scheduler produces *placements* (job → servers).  To be CASSINI-
+augmentable (paper §4.2 step 1) it must also be able to propose up to ``N``
+*candidate* placements that are equivalent under its own objective
+(finish-time fairness for Themis, goodput for Pollux) but differ in which
+servers — and therefore which links — each job uses.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Mapping, Sequence
+
+if TYPE_CHECKING:  # avoid a runtime cycle with repro.cluster.__init__
+    from repro.cluster.job import Job
+    from repro.cluster.topology import Topology
+
+__all__ = [
+    "ClusterState",
+    "Decision",
+    "Scheduler",
+    "pack_placement",
+    "sticky_placement",
+]
+
+PlacementMap = dict[str, tuple[int, ...]]  # job_id -> server ids
+
+
+@dataclass
+class ClusterState:
+    """Scheduler-visible snapshot of the cluster."""
+
+    topology: Topology
+    now_ms: float
+    running: list[Job]
+    pending: list[Job]
+
+    @property
+    def jobs(self) -> list[Job]:
+        return self.running + self.pending
+
+    def gpus_free(self, placements: Mapping[str, Sequence[int]] | None = None) -> int:
+        used = 0
+        if placements:
+            used = sum(len(v) for v in placements.values())
+        return self.topology.num_gpus - used
+
+
+@dataclass
+class Decision:
+    """Scheduling decision for one epoch."""
+
+    placements: PlacementMap
+    time_shifts_ms: dict[str, float] = field(default_factory=dict)
+    compat_score: float = float("nan")
+    meta: dict = field(default_factory=dict)
+
+
+class Scheduler(abc.ABC):
+    """Host scheduler interface."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def allocate_workers(self, state: ClusterState) -> dict[str, int]:
+        """Decide how many workers each job gets this epoch (its own
+        objective: fairness, goodput, …)."""
+
+    @abc.abstractmethod
+    def propose(
+        self, state: ClusterState, workers: dict[str, int], k: int
+    ) -> list[PlacementMap]:
+        """Up to ``k`` candidate placements realizing ``workers``."""
+
+    # -------------------------------------------------------------- #
+    def schedule(self, state: ClusterState) -> Decision:
+        """Default: first (locality-preferred) candidate, no time-shifts."""
+        workers = self.allocate_workers(state)
+        cands = self.propose(state, workers, k=1)
+        return Decision(placements=cands[0] if cands else {})
+
+
+# ---------------------------------------------------------------------- #
+# shared placement helper
+# ---------------------------------------------------------------------- #
+def sticky_placement(
+    topo: Topology,
+    jobs_workers: Sequence[tuple[Job, int]],
+    *,
+    rack_order: Sequence[int] | None = None,
+    job_order: Sequence[int] | None = None,
+) -> PlacementMap | None:
+    """Lease-respecting placement: running jobs keep their current servers
+    (shrinking from the least-populated rack first when their allocation
+    shrank); new jobs / grown jobs take servers from whatever is *free* —
+    which, after a history of arrivals and departures, is fragmented across
+    racks.  This models Themis/Pollux lease semantics: neither scheduler
+    migrates every job every epoch, and fragmented placements are exactly
+    where CASSINI's compatibility-aware candidate choice matters (§4.1).
+
+    Candidate diversity comes from permuting ``rack_order`` (which racks new
+    workers prefer) and ``job_order`` (who picks first).
+    """
+    rack_pref = list(rack_order) if rack_order is not None else list(range(topo.num_racks))
+    order = list(job_order) if job_order is not None else list(range(len(jobs_workers)))
+
+    taken: set[int] = set()
+    kept: dict[str, list[int]] = {}
+    for job, w in jobs_workers:
+        cur = [s for s in job.placement]
+        if not cur or w <= 0:
+            continue
+        if len(cur) > w:
+            # shed from racks where the job has the fewest servers
+            by_rack: dict[int, list[int]] = {}
+            for s in cur:
+                by_rack.setdefault(topo.rack_of(s), []).append(s)
+            racks_sorted = sorted(by_rack, key=lambda r: len(by_rack[r]))
+            while len(cur) > w and racks_sorted:
+                r = racks_sorted[0]
+                cur.remove(by_rack[r].pop())
+                if not by_rack[r]:
+                    racks_sorted.pop(0)
+        kept[job.job_id] = cur[:w] if len(cur) > w else cur
+        taken.update(kept[job.job_id])
+
+    free_by_rack: dict[int, list[int]] = {r: [] for r in range(topo.num_racks)}
+    for g in range(topo.num_gpus):
+        if g not in taken:
+            free_by_rack[topo.rack_of(g)].append(g)
+
+    placements: PlacementMap = {}
+    for idx in order:
+        job, w = jobs_workers[idx]
+        if w <= 0:
+            continue
+        got = list(kept.get(job.job_id, []))
+        if len(got) < w:
+            # prefer racks where the job already sits, then preference order
+            own_racks = {topo.rack_of(s) for s in got}
+            racks = sorted(
+                rack_pref,
+                key=lambda r: (r not in own_racks, -len(free_by_rack[r])),
+            )
+            for r in racks:
+                while free_by_rack[r] and len(got) < w:
+                    got.append(free_by_rack[r].pop(0))
+                if len(got) == w:
+                    break
+        if len(got) < w:
+            return None
+        placements[job.job_id] = tuple(sorted(got))
+    return placements
+
+
+def propose_candidates(
+    topo: Topology,
+    jobs_workers: Sequence[tuple[Job, int]],
+    k: int,
+    rng,
+) -> list[PlacementMap]:
+    """Shared candidate generator: the lease-respecting placement under
+    permuted rack preferences and job orders (paper §4.2 step 1)."""
+    import itertools as _it
+
+    seen: set[tuple] = set()
+    out: list[PlacementMap] = []
+    rack_orders = list(_it.permutations(range(topo.num_racks)))
+    if len(rack_orders) > 24:
+        rng.shuffle(rack_orders)
+        rack_orders = rack_orders[:24]
+    job_orders = [sorted(range(len(jobs_workers)), key=lambda i: -jobs_workers[i][1])]
+    for _ in range(k):
+        alt = list(range(len(jobs_workers)))
+        rng.shuffle(alt)
+        job_orders.append(alt)
+    for ro, jo in _it.product(rack_orders, job_orders):
+        pl = sticky_placement(topo, jobs_workers, rack_order=list(ro), job_order=jo)
+        if pl is None:
+            continue
+        key = tuple(sorted((jid, srv) for jid, srv in pl.items()))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(pl)
+        if len(out) >= k:
+            break
+    return out
+
+
+def pack_placement(
+    topo: Topology,
+    jobs_workers: Sequence[tuple[Job, int]],
+    *,
+    rack_order: Sequence[int] | None = None,
+    job_order: Sequence[int] | None = None,
+) -> PlacementMap | None:
+    """Locality-first packing: place each job on the fewest racks possible,
+    preferring racks with the most free servers.  ``rack_order`` /
+    ``job_order`` permute tie-breaking — that is how distinct candidate
+    placements with identical worker counts are generated.
+
+    Returns None if the jobs cannot fit.
+    """
+    free: dict[int, list[int]] = {r: [] for r in range(topo.num_racks)}
+    for g in range(topo.num_gpus):
+        free[topo.rack_of(g)].append(g)
+    rack_pref = list(rack_order) if rack_order is not None else list(range(topo.num_racks))
+    order = list(job_order) if job_order is not None else list(range(len(jobs_workers)))
+    placements: PlacementMap = {}
+    for idx in order:
+        job, w = jobs_workers[idx]
+        if w <= 0:
+            continue
+        got: list[int] = []
+        # racks sorted: preference order, then most-free-first (best fit for
+        # locality), single rack if it fits entirely
+        racks = sorted(
+            rack_pref, key=lambda r: (-(len(free[r]) >= w - len(got)), -len(free[r]))
+        )
+        for r in racks:
+            while free[r] and len(got) < w:
+                got.append(free[r].pop(0))
+            if len(got) == w:
+                break
+        if len(got) < w:
+            return None
+        placements[job.job_id] = tuple(sorted(got))
+    return placements

@@ -1,0 +1,86 @@
+"""Random and Ideal baseline schedulers (paper §5.1)."""
+
+from __future__ import annotations
+
+import random
+
+from repro.sched.base import ClusterState, PlacementMap, Scheduler
+
+__all__ = ["RandomScheduler", "IdealScheduler"]
+
+
+class RandomScheduler(Scheduler):
+    """Places workers uniformly at random — highest network overhead,
+    no locality, no compatibility (paper's worst baseline)."""
+
+    name = "random"
+
+    def __init__(self, *, seed: int = 0) -> None:
+        self.seed = seed
+
+    def allocate_workers(self, state: ClusterState) -> dict[str, int]:
+        jobs = [j for j in state.running if j.remaining_iters() > 0]
+        alloc: dict[str, int] = {}
+        budget = state.topology.num_gpus
+        for j in jobs:
+            take = min(j.num_workers, budget)
+            if take > 0:
+                alloc[j.job_id] = take
+                budget -= take
+        return alloc
+
+    def propose(
+        self, state: ClusterState, workers: dict[str, int], k: int
+    ) -> list[PlacementMap]:
+        rng = random.Random(self.seed + int(state.now_ms) % 100_000)
+        out: list[PlacementMap] = []
+        for _ in range(k):
+            servers = list(range(state.topology.num_gpus))
+            rng.shuffle(servers)
+            pl: PlacementMap = {}
+            pos = 0
+            ok = True
+            for j in state.running:
+                w = workers.get(j.job_id, 0)
+                if w == 0:
+                    continue
+                if pos + w > len(servers):
+                    ok = False
+                    break
+                pl[j.job_id] = tuple(sorted(servers[pos : pos + w]))
+                pos += w
+            if ok and pl:
+                out.append(pl)
+        return out
+
+
+class IdealScheduler(Scheduler):
+    """Dedicated-cluster reference: every job is placed as if alone (the
+    simulator is run with one job at a time, so there is never contention).
+
+    Used through :func:`repro.cluster.ideal.ideal_metrics` which runs each
+    job in isolation; as a Scheduler it simply packs with maximum locality.
+    """
+
+    name = "ideal"
+
+    def allocate_workers(self, state: ClusterState) -> dict[str, int]:
+        jobs = [j for j in state.running if j.remaining_iters() > 0]
+        alloc: dict[str, int] = {}
+        budget = state.topology.num_gpus
+        for j in jobs:
+            take = min(j.num_workers, budget)
+            if take > 0:
+                alloc[j.job_id] = take
+                budget -= take
+        return alloc
+
+    def propose(
+        self, state: ClusterState, workers: dict[str, int], k: int
+    ) -> list[PlacementMap]:
+        from repro.sched.base import pack_placement
+
+        jobs = [j for j in state.running if workers.get(j.job_id, 0) > 0]
+        jw = [(j, workers[j.job_id]) for j in jobs]
+        pl = pack_placement(state.topology, jw)
+        return [pl] if pl else []

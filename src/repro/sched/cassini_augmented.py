@@ -1,0 +1,89 @@
+"""CASSINI augmentation of a host scheduler (paper §4.2, Fig. 7).
+
+``CassiniAugmented(host)`` keeps the host's worker allocation untouched
+(CASSINI "respects the hyper-parameters decided by Themis"), asks the host
+for up to N candidate placements, scores them with the CASSINI module
+(Algorithm 2) and returns the top placement together with unique per-job
+time-shifts (Algorithm 1)."""
+
+from __future__ import annotations
+
+from repro.core.circle import CommPattern
+from repro.core.plugin import CassiniModule, PlacementCandidate
+from repro.sched.base import ClusterState, Decision, PlacementMap, Scheduler
+
+__all__ = ["CassiniAugmented"]
+
+
+class CassiniAugmented(Scheduler):
+    def __init__(
+        self,
+        host: Scheduler,
+        *,
+        num_candidates: int = 10,
+        precision_deg: float = 5.0,
+        quantum_ms: float = 10.0,
+        pace_threshold: float = 0.9,
+        seed: int = 0,
+    ) -> None:
+        # pacing (isochronous grid) is only armed for jobs whose every
+        # contended link scored >= pace_threshold: holding the grid on a
+        # sub-interleavable link burns time on re-alignment (§5.7: "CASSINI
+        # avoids placing jobs with low compatibility score on the same
+        # link"; when it cannot, the shift is applied once, un-paced).
+        self.pace_threshold = pace_threshold
+        self.host = host
+        self.num_candidates = num_candidates
+        self.module = CassiniModule(
+            precision_deg=precision_deg, quantum_ms=quantum_ms, seed=seed
+        )
+        self.name = f"{host.name}+cassini"
+
+    # delegate the host scheduler's own objective ------------------- #
+    def allocate_workers(self, state: ClusterState) -> dict[str, int]:
+        return self.host.allocate_workers(state)
+
+    def propose(
+        self, state: ClusterState, workers: dict[str, int], k: int
+    ) -> list[PlacementMap]:
+        return self.host.propose(state, workers, k)
+
+    # -------------------------------------------------------------- #
+    def schedule(self, state: ClusterState) -> Decision:
+        workers = self.allocate_workers(state)
+        placements = self.propose(state, workers, self.num_candidates)
+        if not placements:
+            return Decision(placements={})
+
+        topo = state.topology
+        by_id = {j.job_id: j for j in state.running}
+        patterns: dict[str, CommPattern] = {}
+        capacities: dict[str, float] = {}
+        candidates: list[PlacementCandidate] = []
+        for pl in placements:
+            job_links: dict[str, list[str]] = {}
+            for jid, servers in pl.items():
+                links = topo.job_links(servers)
+                job_links[jid] = [l.name for l in links]
+                for l in links:
+                    capacities[l.name] = l.capacity_gbps
+                if jid not in patterns:
+                    patterns[jid] = by_id[jid].pattern(num_workers=len(servers))
+            candidates.append(PlacementCandidate(job_links=job_links, meta=pl))
+
+        decision = self.module.decide(candidates, patterns, capacities)
+        chosen: PlacementMap = decision.top_placement.meta  # the host's map
+        return Decision(
+            placements=chosen,
+            time_shifts_ms=dict(decision.time_shifts_ms),
+            compat_score=decision.top_placement.score,
+            meta={
+                "link_scores": dict(decision.top_placement.link_scores),
+                "num_candidates": len(placements),
+                "paced_ms": dict(decision.paced_periods_ms),
+                "align_ok": {
+                    j: s >= self.pace_threshold
+                    for j, s in decision.job_min_score.items()
+                },
+            },
+        )

@@ -1,0 +1,34 @@
+"""Fixed-placement scheduler for snapshot experiments (paper Fig. 2,
+Table 2, Fig. 12): the placement is pinned (typically *forcing* jobs to
+share ToR uplinks, as fragmentation does in a busy cluster) and only the
+time-shifts differ between the baseline and the CASSINI-augmented run."""
+
+from __future__ import annotations
+
+from repro.sched.base import ClusterState, Decision, PlacementMap, Scheduler
+
+__all__ = ["FixedPlacementScheduler"]
+
+
+class FixedPlacementScheduler(Scheduler):
+    name = "fixed"
+
+    def __init__(self, placements: PlacementMap) -> None:
+        self.placements = dict(placements)
+
+    def allocate_workers(self, state: ClusterState) -> dict[str, int]:
+        return {
+            j.job_id: len(self.placements.get(j.job_id, ()))
+            for j in state.running
+            if j.job_id in self.placements
+        }
+
+    def propose(
+        self, state: ClusterState, workers: dict[str, int], k: int
+    ) -> list[PlacementMap]:
+        pl = {
+            j.job_id: tuple(self.placements[j.job_id])
+            for j in state.running
+            if j.job_id in self.placements
+        }
+        return [pl] if pl else []

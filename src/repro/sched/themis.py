@@ -1,0 +1,83 @@
+"""Themis-style finish-time-fairness scheduler (Mahajan et al., NSDI'20),
+reimplemented at the granularity CASSINI needs (paper §4.2).
+
+Themis's arbiter runs periodic auctions in which jobs bid for GPU leases;
+winners are chosen to maximize aggregate improvement of the finish-time
+fairness metric ρ = T_shared / T_ideal (estimated finish time under the
+current allocation vs. under a dedicated 1/N share).  We reproduce the
+auction's *outcome structure*: GPUs are handed out one at a time to the job
+whose ρ is currently worst, bounded by each job's requested worker count —
+long-term fair, locality-preferring, and network-oblivious (that is
+CASSINI's opening).
+
+``propose`` emits up to N placement candidates that all realize the same
+worker allocation (hence the same fairness) but permute rack preference and
+job packing order — paper §4.2 step 1 ("return up to N candidate
+placements", ≈300 LoC change to Themis).
+"""
+
+from __future__ import annotations
+
+import random
+
+from repro.cluster.job import Job
+from repro.sched.base import (ClusterState, PlacementMap, Scheduler,
+                              propose_candidates)
+
+__all__ = ["ThemisScheduler"]
+
+
+class ThemisScheduler(Scheduler):
+    name = "themis"
+
+    def __init__(self, *, num_candidates: int = 10, seed: int = 0) -> None:
+        self.num_candidates = num_candidates
+        self.seed = seed
+
+    # -------------------------------------------------------------- #
+    def _rho(self, job: Job, workers: int, fair: float) -> float:
+        """Finish-time fairness ρ = T_shared(workers)/T_ideal(fair share)."""
+        if workers <= 0:
+            return float("inf")
+        t_shared = job.remaining_iters() * job.profile.iter_time_ms(workers) * (
+            job.num_workers / workers
+        )
+        t_ideal = job.remaining_iters() * job.profile.iter_time_ms(
+            max(1, int(fair))
+        ) * (job.num_workers / max(fair, 1e-9))
+        return t_shared / max(t_ideal, 1e-9)
+
+    def allocate_workers(self, state: ClusterState) -> dict[str, int]:
+        jobs = [j for j in state.running if j.remaining_iters() > 0]
+        if not jobs:
+            return {}
+        total = state.topology.num_gpus
+        fair = total / len(jobs)
+        alloc = {j.job_id: 0 for j in jobs}
+        budget = total
+        # hand out GPUs one at a time to the worst-ρ job (auction outcome)
+        by_id = {j.job_id: j for j in jobs}
+        while budget > 0:
+            candidates = [
+                jid for jid, a in alloc.items() if a < by_id[jid].num_workers
+            ]
+            if not candidates:
+                break
+            worst = max(candidates, key=lambda jid: self._rho(by_id[jid], alloc[jid], fair))
+            alloc[worst] += 1
+            budget -= 1
+        return {jid: a for jid, a in alloc.items() if a > 0}
+
+    # -------------------------------------------------------------- #
+    def propose(
+        self, state: ClusterState, workers: dict[str, int], k: int
+    ) -> list[PlacementMap]:
+        jobs = [j for j in state.running if workers.get(j.job_id, 0) > 0]
+        jw = [(j, workers[j.job_id]) for j in jobs]
+        rng = random.Random(self.seed + int(state.now_ms) % 100_000)
+        out = propose_candidates(state.topology, jw, k, rng)
+        if not out:
+            shrunk = {jid: max(1, w - 1) for jid, w in workers.items()}
+            if shrunk != workers:
+                return self.propose(state, shrunk, k)
+        return out

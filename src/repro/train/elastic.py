@@ -1,0 +1,89 @@
+"""Elastic scaling / failure handling: re-mesh planning.
+
+When hosts fail mid-run, the job must restart on the surviving device set
+with a coherent mesh (and resharded state).  ``plan_remesh`` picks the
+largest usable (pod, data, model) factorization of the surviving devices
+subject to keeping the model axis intact (weight shards must still tile),
+then reports the per-axis changes.  ``reshard`` moves a checkpointed state
+onto the new mesh's shardings — with our npz checkpoints that is simply a
+restore-with-new-shardings, which is exactly how production JAX stacks
+(e.g. Orbax single-controller) handle elastic restarts.
+
+Straggler mitigation is the CASSINI drift-adjustment agent (§5.7): slow
+workers re-align their communication phase rather than dragging the
+collective; see repro/cluster/network.py and repro/train/timeshift_agent.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+__all__ = ["RemeshPlan", "plan_remesh"]
+
+
+@dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    dropped_devices: int
+    data_scale: float          # batch rescale factor (new/old data parallelism)
+
+    @property
+    def viable(self) -> bool:
+        return all(s >= 1 for s in self.new_shape)
+
+
+def plan_remesh(
+    old_shape: tuple[int, ...],
+    axes: tuple[str, ...],
+    failed: int,
+    *,
+    keep_model_axis: bool = True,
+) -> RemeshPlan:
+    """Plan the new mesh after ``failed`` devices die.
+
+    Shrinks the data axis first (gradient accumulation makes up the batch),
+    then the pod axis; the model axis is preserved so weight shards remain
+    valid (changing TP degree requires a full reshard of every tensor).
+    """
+    sizes = dict(zip(axes, old_shape))
+    total = 1
+    for s in old_shape:
+        total *= s
+    alive = total - failed
+
+    model = sizes.get("model", 1)
+    if keep_model_axis and alive < model:
+        raise ValueError(f"cannot keep model axis {model} with {alive} devices")
+    rest = alive // model if keep_model_axis else alive
+
+    pod = sizes.get("pod", 1)
+    data = sizes.get("data", 1)
+    # shrink data, then pods, to the largest factorization ≤ rest
+    new_pod, new_data = pod, data
+    while new_pod * new_data > rest and new_data > 1:
+        new_data -= 1
+    while new_pod * new_data > rest and new_pod > 1:
+        new_pod -= 1
+        new_data = data
+        while new_pod * new_data > rest and new_data > 1:
+            new_data -= 1
+
+    new_sizes = dict(sizes)
+    if "data" in new_sizes:
+        new_sizes["data"] = new_data
+    if "pod" in new_sizes:
+        new_sizes["pod"] = new_pod
+    new_shape = tuple(new_sizes[a] for a in axes)
+    old_dp = pod * data
+    new_dp = new_pod * new_data
+    return RemeshPlan(
+        old_shape=tuple(old_shape),
+        new_shape=new_shape,
+        axes=tuple(axes),
+        dropped_devices=failed,
+        data_scale=new_dp / old_dp,
+    )

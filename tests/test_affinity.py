@@ -1,0 +1,91 @@
+"""Affinity graph tests: Algorithm 1 + Theorem 1 (property-based)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.affinity import AffinityGraph
+
+
+def _chain_graph():
+    g = AffinityGraph()
+    g.add_edge("j1", "l1", 0.0, 40.0)
+    g.add_edge("j2", "l1", 15.0, 60.0)
+    g.add_edge("j2", "l2", 5.0, 60.0)
+    g.add_edge("j3", "l2", 25.0, 80.0)
+    return g
+
+
+def test_chain_no_loop_and_theorem1():
+    g = _chain_graph()
+    assert not g.has_loop()
+    shifts = g.bfs_time_shifts(seed=0)
+    assert set(shifts) == {"j1", "j2", "j3"}
+    assert g.check_theorem1(shifts)
+
+
+def test_loop_detection():
+    g = _chain_graph()
+    g.add_edge("j1", "l2", 3.0, 40.0)  # j1–l1–j2–l2–j1 cycle
+    assert g.has_loop()
+
+
+def test_corrupted_shift_fails_theorem1():
+    g = _chain_graph()
+    shifts = g.bfs_time_shifts(seed=0)
+    bad = dict(shifts)
+    bad["j3"] = (bad["j3"] + 7.0) % 80.0
+    assert not g.check_theorem1(bad)
+
+
+def test_disconnected_components_handled():
+    g = _chain_graph()
+    g.add_edge("j4", "l9", 11.0, 100.0)
+    g.add_edge("j5", "l9", 31.0, 100.0)
+    shifts = g.bfs_time_shifts(seed=1)
+    assert set(shifts) == {"j1", "j2", "j3", "j4", "j5"}
+    assert g.check_theorem1(shifts)
+
+
+def test_reference_seed_changes_are_still_correct():
+    g = _chain_graph()
+    for seed in range(5):
+        shifts = g.bfs_time_shifts(seed=seed)
+        assert g.check_theorem1(shifts), f"seed {seed}"
+
+
+# -------------------- property: random loop-free trees ----------------- #
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_theorem1_on_random_trees(data):
+    """Build a random bipartite TREE (jobs/links), random weights and
+    iteration times; Algorithm 1's output must satisfy Theorem 1."""
+    rng = random.Random(data.draw(st.integers(0, 10_000)))
+    n_jobs = data.draw(st.integers(2, 8))
+    iter_times = [rng.choice([40.0, 60.0, 80.0, 100.0, 120.0]) for _ in range(n_jobs)]
+
+    g = AffinityGraph()
+    # attach each new job to an existing job through a fresh link (tree!)
+    for j in range(1, n_jobs):
+        k = rng.randrange(j)  # existing job
+        link = f"l{j}"
+        w_k = rng.uniform(0, iter_times[k])
+        w_j = rng.uniform(0, iter_times[j])
+        g.add_edge(f"j{k}", link, w_k, iter_times[k])
+        g.add_edge(f"j{j}", link, w_j, iter_times[j])
+        # occasionally add a third job to the same link (star pattern)
+        if j >= 2 and rng.random() < 0.3:
+            m = rng.randrange(j)
+            if f"j{m}" not in g.link_jobs[link]:
+                g.add_edge(f"j{m}", link, rng.uniform(0, iter_times[m]),
+                           iter_times[m])
+
+    if g.has_loop():  # star additions can close cycles; skip those draws
+        return
+    shifts = g.bfs_time_shifts(seed=0)
+    assert set(shifts) == set(g.jobs)
+    assert g.check_theorem1(shifts, unit_ms=1e-4)
+    # uniqueness: every job got exactly one value in [0, iter_time)
+    for j, t in shifts.items():
+        assert 0.0 <= t < g.iter_time_ms[j] + 1e-9

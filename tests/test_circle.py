@@ -1,0 +1,86 @@
+"""Unit + property tests for the geometric abstraction (paper §3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circle import CommPattern, Phase, UnifiedCircle, unified_perimeter
+
+
+def test_pattern_demand_basic():
+    p = CommPattern(100.0, (Phase(40.0, 30.0, 45.0),))
+    assert p.demand_at(10.0) == 0.0
+    assert p.demand_at(45.0) == 45.0
+    assert p.demand_at(69.9) == 45.0
+    assert p.demand_at(70.0) == 0.0
+    # periodic
+    assert p.demand_at(145.0) == 45.0
+    assert p.mean_gbps == pytest.approx(45.0 * 0.3)
+
+
+def test_pattern_overlapping_phases_add():
+    p = CommPattern(100.0, (Phase(0.0, 50.0, 20.0), Phase(25.0, 50.0, 25.0)))
+    assert p.demand_at(10.0) == 20.0
+    assert p.demand_at(30.0) == 45.0
+    assert p.demand_at(60.0) == 25.0
+
+
+def test_pattern_wrapping_phase():
+    p = CommPattern(100.0, (Phase(80.0, 40.0, 10.0),))  # wraps to [0, 20)
+    assert p.demand_at(90.0) == 10.0
+    assert p.demand_at(10.0) == 10.0
+    assert p.demand_at(30.0) == 0.0
+
+
+def test_unified_perimeter_lcm():
+    # paper Fig. 3: 40 ms and 60 ms → 120 ms
+    assert unified_perimeter([40.0, 60.0], 10.0) == pytest.approx(120.0)
+
+
+def test_unified_circle_wraps():
+    j1 = CommPattern(40.0, (Phase(20.0, 20.0, 40.0),))
+    j2 = CommPattern(60.0, (Phase(30.0, 30.0, 40.0),))
+    c = UnifiedCircle.build([j1, j2])
+    assert c.perimeter_ms == pytest.approx(120.0)
+    assert c.wraps == (3, 2)
+    # demand integral is conserved on the circle
+    mean1 = c.bw[0].mean()
+    assert mean1 == pytest.approx(j1.mean_gbps, rel=0.1)
+
+
+def test_rotation_identity_after_full_private_iteration():
+    j1 = CommPattern(40.0, (Phase(20.0, 20.0, 40.0),))
+    j2 = CommPattern(60.0, (Phase(30.0, 30.0, 40.0),))
+    c = UnifiedCircle.build([j1, j2])
+    g0 = c.shift_grid(0)
+    np.testing.assert_allclose(c.rotated(0, g0 * c.wraps[0] // c.wraps[0]),
+                               np.roll(c.bw[0], g0))
+    # rotating by one private iteration is the identity
+    np.testing.assert_allclose(c.rotated(0, g0), np.roll(c.bw[0], g0))
+    np.testing.assert_allclose(np.roll(c.bw[0], g0), c.bw[0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    iters=st.lists(
+        st.integers(min_value=2, max_value=30).map(lambda k: k * 20.0),
+        min_size=1, max_size=4,
+    )
+)
+def test_perimeter_is_multiple_of_each_iteration(iters):
+    p = unified_perimeter(iters, 10.0)
+    for t in iters:
+        ratio = p / (round(t / 10.0) * 10.0)
+        assert abs(ratio - round(ratio)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    start=st.floats(0, 300), dur=st.floats(1, 200), gbps=st.floats(0.5, 50),
+    iter_ms=st.floats(50, 400),
+)
+def test_demand_series_integral_conserved(start, dur, gbps, iter_ms):
+    dur = min(dur, iter_ms)  # a phase can cover at most the iteration
+    p = CommPattern(iter_ms, (Phase(start, dur, gbps),))
+    series = p.demand_series(4096)
+    assert series.mean() == pytest.approx(gbps * dur / iter_ms, rel=0.05, abs=0.05)

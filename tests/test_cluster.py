@@ -1,0 +1,100 @@
+"""Cluster substrate tests: topology, fluid network model, end-to-end
+interleaving gains (the paper's Fig. 2 scenario as an executable test)."""
+
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    FluidNetworkSim,
+    Topology,
+    ideal_metrics,
+    snapshot_trace,
+)
+from repro.cluster.network import segments_from_pattern
+from repro.core.circle import CommPattern, Phase
+from repro.profiles import get_profile
+from repro.sched import CassiniAugmented
+from repro.sched.fixed import FixedPlacementScheduler
+
+
+def test_topology_paths():
+    t = Topology.paper_testbed()
+    assert t.num_servers == 24
+    assert t.path(0, 1)  # same rack: host links only
+    assert all(l.name.startswith("host") for l in t.path(0, 1))
+    cross = t.path(0, 6)
+    assert any(l.name.startswith("up") for l in cross)
+    # deterministic routing
+    assert [l.name for l in t.path(0, 6)] == [l.name for l in t.path(0, 6)]
+
+
+def test_job_links_ring():
+    t = Topology.paper_testbed()
+    links = t.job_links((0, 1, 6))
+    names = {l.name for l in links}
+    assert "host:r0s0" in names and "host:r1s0" in names
+    assert any(n.startswith("up:r0") for n in names)
+
+
+def test_segments_from_pattern_roundtrip():
+    p = CommPattern(100.0, (Phase(40.0, 30.0, 45.0),))
+    segs = segments_from_pattern(p)
+    assert [s.kind for s in segs] == ["compute", "comm", "compute"]
+    assert sum(s.duration_ms for s in segs) == pytest.approx(100.0)
+    assert segs[1].gbits == pytest.approx(45.0 * 0.03)
+
+
+def test_solo_job_runs_at_solo_speed():
+    t = Topology.paper_testbed()
+    jobs = snapshot_trace([("vgg19", 4, 1400)], iters=20)
+    jobs[0].placement = (0, 1, 6, 7)
+    jobs[0].state = jobs[0].state.RUNNING
+    sim = FluidNetworkSim(t)
+    sim.configure(jobs)
+    sim.advance(60_000)
+    assert jobs[0].iters_done == 20
+    for it in jobs[0].iter_times_ms:
+        assert it == pytest.approx(jobs[0].solo_iter_ms, rel=0.01)
+
+
+def test_contention_stretches_iterations_and_marks_ecn():
+    t = Topology.paper_testbed()
+    jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=30)
+    jobs[0].placement = (0, 6)
+    jobs[1].placement = (1, 7)  # same rack pair → same uplink
+    for j in jobs:
+        j.state = j.state.RUNNING
+    sim = FluidNetworkSim(t)
+    sim.configure(jobs)
+    sim.advance(120_000)
+    mean = sum(jobs[0].iter_times_ms) / len(jobs[0].iter_times_ms)
+    assert mean > jobs[0].solo_iter_ms * 1.15  # congestion hurts
+    assert sum(jobs[0].ecn_marks) > 0
+
+
+def test_cassini_timeshift_removes_contention():
+    """Fig. 2: the same placement with CASSINI shifts runs ~solo speed."""
+    t = Topology.paper_testbed()
+    pl = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+
+    def run(with_cassini):
+        jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=100)
+        sched = FixedPlacementScheduler(pl)
+        if with_cassini:
+            sched = CassiniAugmented(sched, num_candidates=1)
+        sim = ClusterSimulator(t, sched)
+        return sim.run(jobs, horizon_ms=3_600_000)
+
+    base = run(False)
+    cass = run(True)
+    assert cass.avg_iter_ms < base.avg_iter_ms * 0.85
+    assert cass.ecn_per_iter() < base.ecn_per_iter() * 0.2
+
+
+def test_ideal_metrics_no_contention():
+    t = Topology.paper_testbed()
+    jobs = snapshot_trace([("bert", 4, 8), ("vgg19", 4, 1400)], iters=10)
+    m = ideal_metrics(t, jobs)
+    for j in m.jobs:
+        assert j.iters_done == 10
+        assert j.mean_iter_ms() == pytest.approx(j.solo_iter_ms, rel=0.02)

@@ -1,0 +1,85 @@
+"""Tests for the compatibility optimization (paper Table 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circle import CommPattern, Phase
+from repro.core.compat import find_rotations, score_all_shifts
+
+
+def _job(iter_ms, start, dur, gbps=45.0):
+    return CommPattern(iter_ms, (Phase(start, dur, gbps),))
+
+
+def test_two_identical_jobs_interleave():
+    # two 50 %-duty jobs on one link: perfect antiphase exists
+    j = _job(240.0, 120.0, 110.0, 45.0)
+    res = find_rotations([j, j], 50.0)
+    assert res.score == pytest.approx(1.0)
+    # the relative shift is ~half the iteration
+    assert abs(res.shifts_ms[1] - 120.0) < 20.0
+
+
+def test_incompatible_jobs_low_score():
+    j = _job(200.0, 20.0, 160.0, 45.0)  # 80 % duty
+    res = find_rotations([j, j], 50.0)
+    assert res.score < 0.8
+
+
+def test_score_upper_bound_and_single_job():
+    j = _job(100.0, 10.0, 50.0)
+    res = find_rotations([j], 50.0)
+    assert res.score == pytest.approx(1.0)
+    assert res.shifts_ms == (0.0,)
+
+
+def test_low_demand_job_coexists():
+    # paper Fig. 12(b): a light job can overlap without hurting the score
+    heavy = _job(320.0, 160.0, 150.0, 45.0)
+    light = _job(160.0, 50.0, 100.0, 4.0)
+    res = find_rotations([heavy, heavy, light], 50.0)
+    assert res.score > 0.95
+
+
+def test_reference_job_shift_is_zero():
+    j1 = _job(320.0, 160.0, 140.0)
+    j2 = _job(320.0, 180.0, 120.0)
+    res = find_rotations([j1, j2], 50.0)
+    assert res.shifts_steps[0] == 0
+
+
+def test_paced_periods_cover_iteration():
+    j1 = _job(332.0, 100.0, 100.0)
+    j2 = _job(342.0, 120.0, 100.0)
+    res = find_rotations([j1, j2], 50.0)
+    # pacing periods must be at least the true iteration times (ceil quantization)
+    assert res.paced_periods_ms[0] >= 332.0 - 1e-6
+    assert res.paced_periods_ms[1] >= 342.0 - 1e-6
+
+
+def test_score_all_shifts_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    base = rng.random(72) * 60
+    cand = rng.random(72) * 60
+    out = score_all_shifts(base, cand, 50.0)
+    for s in [0, 1, 17, 40, 71]:
+        expect = np.maximum(base + np.roll(cand, s) - 50.0, 0).sum()
+        assert out[s] == pytest.approx(expect, rel=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dur1=st.floats(10, 300), dur2=st.floats(10, 300),
+    g1=st.floats(1, 50), g2=st.floats(1, 50),
+)
+def test_score_never_above_one_and_rotation_sane(dur1, dur2, g1, g2):
+    j1 = CommPattern(320.0, (Phase(0.0, min(dur1, 320), g1),))
+    j2 = CommPattern(320.0, (Phase(0.0, min(dur2, 320), g2),))
+    res = find_rotations([j1, j2], 50.0)
+    assert res.score <= 1.0 + 1e-9
+    for j, s in enumerate(res.shifts_steps):
+        assert 0 <= s < res.circle.num_angles
+    # fully-overlapping low-demand jobs must be fully compatible
+    if g1 + g2 <= 50.0:
+        assert res.score == pytest.approx(1.0)

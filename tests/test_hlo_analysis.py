@@ -1,0 +1,50 @@
+"""Unit tests for the HLO roofline analyzer (launch/hlo_analysis.py)."""
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ivn = s32[] add(%iv, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ivn, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv, %k), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_counts_multiply_flops_and_collectives():
+    st = analyze_hlo(HLO)
+    # dot: 2 * 8*8 (result) * 8 (contraction) = 1024 flops, x5 trips
+    assert st.flops == 1024 * 5
+    # all-reduce result: 8*8*4 bytes, x5 trips
+    assert st.collective_bytes == 256 * 5
+    assert st.collective_count["all-reduce"] == 5
+    assert 5 in st.while_trip_counts.values()
+
+
+def test_bytes_include_dot_operands_once_per_trip():
+    st = analyze_hlo(HLO)
+    # per trip: dot reads two 256B operands + writes 256B, all-reduce 256+256
+    assert st.bytes_accessed >= (256 * 3 + 512) * 5

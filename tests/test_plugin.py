@@ -1,0 +1,86 @@
+"""CassiniModule (Algorithm 2) tests."""
+
+import pytest
+
+from repro.core.circle import CommPattern, Phase
+from repro.core.plugin import CassiniModule, PlacementCandidate
+
+
+def _patterns():
+    return {
+        "a": CommPattern(320.0, (Phase(160.0, 140.0, 45.0),), "a"),
+        "b": CommPattern(320.0, (Phase(170.0, 130.0, 45.0),), "b"),
+        "c": CommPattern(200.0, (Phase(40.0, 150.0, 45.0),), "c"),  # 75 % duty
+    }
+
+
+def test_prefers_compatible_candidate():
+    pats = _patterns()
+    caps = {"l1": 50.0, "l2": 50.0}
+    good = PlacementCandidate(job_links={"a": ["l1"], "b": ["l1"], "c": []})
+    bad = PlacementCandidate(job_links={"a": ["l1"], "c": ["l1"], "b": []})
+    mod = CassiniModule()
+    decision = mod.decide([bad, good], pats, caps)
+    assert decision.top_placement is good
+    assert decision.score > mod.decide([bad], pats, caps).score
+    # unique shifts for the contending pair, reference at 0
+    assert set(decision.time_shifts_ms) == {"a", "b"}
+
+
+def test_loop_candidate_discarded():
+    pats = _patterns()
+    caps = {"l1": 50.0, "l2": 50.0, "l3": 50.0}
+    # a–l1–b, b–l2–c, c–l3–a: a 3-cycle with DIFFERENT job pairs per link
+    loopy = PlacementCandidate(
+        job_links={"a": ["l1", "l3"], "b": ["l1", "l2"], "c": ["l2", "l3"]}
+    )
+    clean = PlacementCandidate(job_links={"a": ["l1"], "b": ["l1"], "c": []})
+    mod = CassiniModule()
+    decision = mod.decide([loopy, clean], pats, caps)
+    assert decision.top_placement is clean
+    assert loopy.discarded_loop
+
+
+def test_all_loops_falls_back_to_first():
+    pats = _patterns()
+    caps = {"l1": 50.0, "l2": 50.0, "l3": 50.0}
+    loopy = PlacementCandidate(
+        job_links={"a": ["l1", "l3"], "b": ["l1", "l2"], "c": ["l2", "l3"]}
+    )
+    mod = CassiniModule()
+    decision = mod.decide([loopy], pats, caps)
+    assert decision.time_shifts_ms == {}
+
+
+def test_parallel_links_with_identical_jobset_merged_not_discarded():
+    pats = _patterns()
+    caps = {"up1": 50.0, "up2": 50.0}
+    # both jobs traverse BOTH uplinks (same rack pair): a 2-cycle that must
+    # be merged into one constraint, not discarded
+    cand = PlacementCandidate(job_links={"a": ["up1", "up2"], "b": ["up1", "up2"]})
+    mod = CassiniModule()
+    decision = mod.decide([cand], pats, caps)
+    assert not cand.discarded_loop
+    assert decision.score == pytest.approx(1.0, abs=0.05)
+    assert set(decision.time_shifts_ms) == {"a", "b"}
+
+
+def test_no_contention_scores_one():
+    pats = _patterns()
+    cand = PlacementCandidate(job_links={"a": ["l1"], "b": ["l2"], "c": []})
+    mod = CassiniModule()
+    decision = mod.decide([cand], pats, {"l1": 50.0, "l2": 50.0})
+    assert decision.score == pytest.approx(1.0)
+    assert decision.time_shifts_ms == {}
+
+
+def test_link_cache_reused_across_candidates():
+    pats = _patterns()
+    caps = {"l1": 50.0}
+    cands = [
+        PlacementCandidate(job_links={"a": ["l1"], "b": ["l1"]})
+        for _ in range(4)
+    ]
+    mod = CassiniModule()
+    mod.decide(cands, pats, caps)
+    assert len(mod._link_cache) == 1

@@ -1,0 +1,88 @@
+"""Scheduler invariants: Themis / Pollux / Random + CASSINI augmentation."""
+
+import pytest
+
+from repro.cluster import Topology
+from repro.cluster.job import Job, JobState
+from repro.sched import (
+    CassiniAugmented,
+    PolluxScheduler,
+    RandomScheduler,
+    ThemisScheduler,
+)
+from repro.sched.base import ClusterState
+
+
+def _state(topo, n_jobs=5, workers=7):
+    jobs = [
+        Job(job_id=f"j{i}", model=["vgg16", "bert", "gpt1", "resnet50", "dlrm"][i % 5],
+            num_workers=workers, duration_iters=100)
+        for i in range(n_jobs)
+    ]
+    for j in jobs:
+        j.state = JobState.RUNNING
+    return ClusterState(topology=topo, now_ms=0.0, running=jobs, pending=[])
+
+
+@pytest.mark.parametrize("sched_cls", [ThemisScheduler, PolluxScheduler, RandomScheduler])
+def test_allocation_never_oversubscribes(sched_cls):
+    topo = Topology.paper_testbed()
+    state = _state(topo, n_jobs=6, workers=9)  # 54 demanded > 24 GPUs
+    sched = sched_cls()
+    alloc = sched.allocate_workers(state)
+    assert sum(alloc.values()) <= topo.num_gpus
+    assert all(v >= 1 for v in alloc.values())
+
+
+@pytest.mark.parametrize("sched_cls", [ThemisScheduler, PolluxScheduler])
+def test_placements_disjoint_and_complete(sched_cls):
+    topo = Topology.paper_testbed()
+    state = _state(topo)
+    sched = sched_cls()
+    workers = sched.allocate_workers(state)
+    cands = sched.propose(state, workers, k=8)
+    assert cands, "must produce at least one candidate"
+    for pl in cands:
+        used = [s for servers in pl.values() for s in servers]
+        assert len(used) == len(set(used)), "server assigned twice"
+        for jid, servers in pl.items():
+            assert len(servers) == workers[jid]
+
+
+def test_candidates_are_distinct():
+    topo = Topology.paper_testbed()
+    state = _state(topo, n_jobs=4, workers=7)
+    sched = ThemisScheduler()
+    workers = sched.allocate_workers(state)
+    cands = sched.propose(state, workers, k=10)
+    keys = {tuple(sorted((j, s) for j, s in pl.items())) for pl in cands}
+    assert len(keys) == len(cands) >= 2
+
+
+def test_sticky_placement_respects_leases():
+    """Running jobs keep their servers when their allocation is unchanged."""
+    topo = Topology.paper_testbed()
+    state = _state(topo, n_jobs=3, workers=6)
+    state.running[0].placement = (0, 1, 2, 3, 4, 5)
+    sched = ThemisScheduler()
+    workers = sched.allocate_workers(state)
+    if workers.get("j0", 0) == 6:
+        cands = sched.propose(state, workers, k=3)
+        for pl in cands:
+            assert pl["j0"] == (0, 1, 2, 3, 4, 5)
+
+
+def test_cassini_wrapper_respects_host_allocation():
+    topo = Topology.paper_testbed()
+    state = _state(topo)
+    host = ThemisScheduler()
+    wrapped = CassiniAugmented(host, num_candidates=5)
+    assert wrapped.allocate_workers(state) == host.allocate_workers(state)
+    decision = wrapped.schedule(state)
+    host_workers = host.allocate_workers(state)
+    for jid, servers in decision.placements.items():
+        assert len(servers) == host_workers[jid]
+    # every assigned shift is within the job's iteration time
+    by_id = {j.job_id: j for j in state.running}
+    for jid, t in decision.time_shifts_ms.items():
+        assert 0 <= t <= by_id[jid].solo_iter_ms + 1e-6

@@ -1,0 +1,110 @@
+"""End-to-end system behaviour: the paper's headline claims as tests."""
+
+import pytest
+
+from repro.cluster import ClusterSimulator, Topology, dynamic_trace, snapshot_trace
+from repro.core import find_rotations
+from repro.profiles import PROFILES, get_profile
+from repro.sched import CassiniAugmented, ThemisScheduler
+from repro.sched.fixed import FixedPlacementScheduler
+
+
+def test_all_13_paper_models_have_profiles():
+    expected = {
+        "vgg11", "vgg16", "vgg19", "resnet50", "wideresnet101",
+        "bert", "roberta", "camembert", "xlm",
+        "gpt1", "gpt2", "gpt3", "dlrm",
+    }
+    assert set(PROFILES) == expected
+
+
+def test_paper_compatibility_structure():
+    """§2.2/§5 pairings: compatible pairs score higher than incompatible."""
+    def score(a, b):
+        return find_rotations(
+            [get_profile(a).pattern(4), get_profile(b).pattern(4)], 50.0
+        ).score
+
+    assert score("wideresnet101", "vgg16") == pytest.approx(1.0, abs=0.01)
+    assert score("vgg19", "vgg16") == pytest.approx(1.0, abs=0.01)
+    assert score("bert", "vgg19") < 0.85          # "no suitable time-shift"
+    # GPT/DLRM pairing preference (§5.4)
+    good = score("gpt1", "gpt2") + score("gpt3", "dlrm")
+    bad = score("gpt3", "gpt2") + score("gpt1", "dlrm")
+    assert good > bad + 0.1
+
+
+def test_snapshot5_partial_compatibility():
+    pats = [get_profile(m).pattern(4) for m in ("bert", "vgg19", "wideresnet101")]
+    res = find_rotations(pats, 50.0)
+    assert 0.45 < res.score < 0.75  # paper: 0.6
+
+
+def test_fig2_interleaving_end_to_end():
+    """Two VGG19 jobs forced onto one uplink: CASSINI's time-shift recovers
+    near-solo iteration time and slashes ECN marks (paper Fig. 2: 1.26×)."""
+    topo = Topology.paper_testbed()
+    pl = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+
+    def run(with_cassini):
+        jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=150)
+        sched = FixedPlacementScheduler(pl)
+        if with_cassini:
+            sched = CassiniAugmented(sched, num_candidates=1)
+        sim = ClusterSimulator(topo, sched)
+        return sim.run(jobs, horizon_ms=3_600_000)
+
+    themis = run(False)
+    cassini = run(True)
+    speedup = themis.avg_iter_ms / cassini.avg_iter_ms
+    assert speedup > 1.2, f"expected ≥1.2× (paper 1.26×), got {speedup:.2f}"
+    assert cassini.ecn_per_iter() < themis.ecn_per_iter() * 0.1
+
+
+def test_dynamic_trace_cassini_reduces_ecn():
+    """Fig. 10/11 scenario: ECN marks drop by an order of magnitude."""
+    topo = Topology.paper_testbed()
+
+    def run(mk):
+        jobs = dynamic_trace(
+            topo, base_models=("vgg19", "wideresnet101", "gpt1"),
+            burst_models=("dlrm", "resnet50"), workers=7, iters=250,
+        )
+        for j in jobs:
+            if j.job_id.startswith("burst"):
+                j.num_workers = 5
+        sim = ClusterSimulator(topo, mk(), epoch_ms=300_000, compute_jitter=0.005)
+        return sim.run(jobs, horizon_ms=3_600_000)
+
+    themis = run(ThemisScheduler)
+    cassini = run(lambda: CassiniAugmented(ThemisScheduler()))
+    assert cassini.ecn_per_iter() < themis.ecn_per_iter() * 0.25
+
+
+def test_drift_adjustments_are_rare_for_compatible_jobs():
+    """§5.7 / Fig. 14: with realistic jitter, aligned compatible jobs adjust
+    less than ~2×/min (we allow < 4 for CI noise)."""
+    topo = Topology.paper_testbed()
+    pl = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+    jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=300)
+    sched = CassiniAugmented(FixedPlacementScheduler(pl), num_candidates=1)
+    sim = ClusterSimulator(topo, sched, compute_jitter=0.003)
+    m = sim.run(jobs, horizon_ms=3_600_000)
+    total_min = max(j.finish_ms or 0 for j in m.jobs) / 60_000.0
+    adj_per_min = sum(j.drift_adjustments for j in m.jobs) / max(total_min, 1e-9)
+    assert adj_per_min < 4.0
+
+
+def test_dryrun_profiles_schedule_assigned_archs():
+    """Bridge test: CASSINI schedules the assigned JAX architectures using
+    profiles derived from their own dry-run artifacts."""
+    pytest.importorskip("repro.profiles.from_dryrun")
+    from repro.profiles.from_dryrun import available_archs, dryrun_pattern
+
+    archs = available_archs()
+    if len(archs) < 2:
+        pytest.skip("dry-run cache not populated")
+    pats = [dryrun_pattern(a) for a in archs[:2]]
+    res = find_rotations(pats, 50.0)
+    assert -1.0 <= res.score <= 1.0
+    assert all(t >= 0 for t in res.shifts_ms)
