@@ -6,17 +6,11 @@ import statistics
 import time
 from typing import Callable
 
-from repro.cluster import ClusterSimulator, Topology, ideal_metrics
-from repro.sched import CassiniAugmented, PolluxScheduler, RandomScheduler, ThemisScheduler
-from repro.sched.fixed import FixedPlacementScheduler
+from repro.cluster import ClusterSimulator
+from repro.engine.scenarios import default_scheduler_factories
 
-SCHEDULERS: dict[str, Callable] = {
-    "themis": lambda: ThemisScheduler(),
-    "th+cassini": lambda: CassiniAugmented(ThemisScheduler()),
-    "pollux": lambda: PolluxScheduler(),
-    "po+cassini": lambda: CassiniAugmented(PolluxScheduler()),
-    "random": lambda: RandomScheduler(),
-}
+# the paper's scheduler line-up, shared with the scenario registry
+SCHEDULERS: dict[str, Callable] = default_scheduler_factories()
 
 
 def pct(xs, q):

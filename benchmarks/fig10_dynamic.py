@@ -1,52 +1,34 @@
 """Paper Fig. 10: dynamic trace — DLRM + ResNet50 arrive into a busy
 cluster (the congestion stress test).  Reports slowdowns (iter/solo) and
-ECN marks per iteration (paper: 27-33x fewer marks under CASSINI)."""
+ECN marks per iteration (paper: 27-33x fewer marks under CASSINI).
+
+Driven by the ``dynamic-burst`` entry of the scenario registry."""
 
 from __future__ import annotations
 
-from repro.cluster import Topology, dynamic_trace
-
-from .common import SCHEDULERS, pct, run_trace
-
-
-def _jobs(topo):
-    # 3 base jobs x 7 workers fragment across racks; the burst takes the
-    # scattered leftovers - the paper's "busy cluster" arrival scenario.
-    jobs = dynamic_trace(
-        topo,
-        base_models=("vgg19", "wideresnet101", "gpt1"),
-        burst_models=("dlrm", "resnet50"),
-        burst_at_ms=90_000.0,
-        workers=7,
-        iters=350,
-    )
-    for j in jobs:
-        if j.job_id.startswith("burst"):
-            j.num_workers = 4
-    return jobs
+from repro.engine import get_scenario
 
 
 def run() -> list[dict]:
-    topo = Topology.paper_testbed()
+    scenario = get_scenario("dynamic-burst")
     rows = []
     res = {}
     for name in ("themis", "th+cassini", "pollux", "po+cassini"):
-        jobs = _jobs(topo)
-        m, wall, _ = run_trace(topo, jobs, SCHEDULERS[name]())
-        sl = m.slowdowns()
+        r = scenario.run(name)
+        m = r.metrics
         res[name] = dict(
             avg=m.avg_iter_ms, sl_avg=m.avg_slowdown, sl_p99=m.pct_slowdown(99),
             ecn=m.ecn_per_iter(),
             ecn_dlrm=m.ecn_per_iter("dlrm"),
             ecn_resnet=m.ecn_per_iter("resnet50"),
         )
-        r = res[name]
+        d = res[name]
         rows.append({
-            "name": f"fig10/{name}", "us_per_call": wall * 1e6,
+            "name": f"fig10/{name}", "us_per_call": r.wall_s * 1e6,
             "derived": (
-                f"avg={r['avg']:.0f}ms slowdown avg={r['sl_avg']:.3f} "
-                f"p99={r['sl_p99']:.2f} ecn={r['ecn']:.0f} "
-                f"ecn_dlrm={r['ecn_dlrm']:.0f} ecn_resnet={r['ecn_resnet']:.0f}"
+                f"avg={d['avg']:.0f}ms slowdown avg={d['sl_avg']:.3f} "
+                f"p99={d['sl_p99']:.2f} ecn={d['ecn']:.0f} "
+                f"ecn_dlrm={d['ecn_dlrm']:.0f} ecn_resnet={d['ecn_resnet']:.0f}"
             ),
         })
     for a, b in (("themis", "th+cassini"), ("pollux", "po+cassini")):

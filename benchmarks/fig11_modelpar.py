@@ -1,37 +1,28 @@
 """Paper Fig. 11: all-model-parallel trace (GPT family + DLRM).  CASSINI
-must steer toward the compatible ⟨GPT-1,GPT-2⟩ / ⟨GPT-3,DLRM⟩ pairings."""
+must steer toward the compatible ⟨GPT-1,GPT-2⟩ / ⟨GPT-3,DLRM⟩ pairings.
+
+Driven by the ``modelpar-burst`` entry of the scenario registry."""
 
 from __future__ import annotations
 
-from repro.cluster import Topology, dynamic_trace
+from repro.engine import get_scenario
 
-from .common import SCHEDULERS, pct, run_trace
+from .common import pct
 
 
 def run() -> list[dict]:
-    topo = Topology.paper_testbed()
+    scenario = get_scenario("modelpar-burst")
     rows = []
     res = {}
     for name in ("themis", "th+cassini"):
-        jobs = dynamic_trace(
-            topo,
-            base_models=("gpt1", "gpt2", "gpt3"),
-            burst_models=("dlrm", "gpt2"),
-            burst_at_ms=120_000.0,
-            workers=7,
-            iters=300,
-        )
-        for j in jobs:
-            if j.job_id.startswith("burst"):
-                j.num_workers = 5
-        m, wall, sim = run_trace(topo, jobs, SCHEDULERS[name]())
-        its = m.iter_times()
+        r = scenario.run(name)
+        its = r.metrics.iter_times()
         res[name] = dict(avg=sum(its) / len(its), p99=pct(its, 99),
-                         ecn=m.ecn_per_iter())
-        r = res[name]
+                         ecn=r.metrics.ecn_per_iter())
+        d = res[name]
         rows.append({
-            "name": f"fig11/{name}", "us_per_call": wall * 1e6,
-            "derived": f"avg={r['avg']:.0f}ms p99={r['p99']:.0f}ms ecn={r['ecn']:.0f}",
+            "name": f"fig11/{name}", "us_per_call": r.wall_s * 1e6,
+            "derived": f"avg={d['avg']:.0f}ms p99={d['p99']:.0f}ms ecn={d['ecn']:.0f}",
         })
     a, b = res["themis"], res["th+cassini"]
     rows.append({

@@ -1,40 +1,28 @@
 """Paper Fig. 13: multi-GPU-per-server topology (6 servers × 2 GPUs).
 Jobs larger than one server still cross the network; CASSINI's placement
-choice + time-shifts beat network-oblivious Themis."""
+choice + time-shifts beat network-oblivious Themis.
+
+Driven by the ``multigpu`` entry of the scenario registry."""
 
 from __future__ import annotations
 
-from repro.cluster import Topology, dynamic_trace
-
-from .common import SCHEDULERS, pct, run_trace
+from repro.engine import get_scenario
 
 
 def run() -> list[dict]:
-    # 3 racks × 2 servers × 2 GPUs = 12 GPUs (the paper rewires to 6×2)
-    topo = Topology(num_racks=3, servers_per_rack=2, gpus_per_server=2)
+    scenario = get_scenario("multigpu")
     rows = {}
     out = []
     for name in ("themis", "th+cassini"):
-        jobs = dynamic_trace(
-            topo,
-            base_models=("xlm", "resnet50"),
-            burst_models=("dlrm",),
-            burst_at_ms=60_000.0,
-            workers=5,
-            iters=300,
-        )
-        for j in jobs:
-            if j.job_id.startswith("burst"):
-                j.num_workers = 4
-        m, wall, _ = run_trace(topo, jobs, SCHEDULERS[name]())
-        its = m.iter_times()
+        r = scenario.run(name)
+        m = r.metrics
         rows[name] = dict(sl_avg=m.avg_slowdown, sl_p99=m.pct_slowdown(99),
                           ecn=m.ecn_per_iter())
-        r = rows[name]
+        d = rows[name]
         out.append({
-            "name": f"fig13/{name}", "us_per_call": wall * 1e6,
-            "derived": (f"slowdown avg={r['sl_avg']:.3f} p99={r['sl_p99']:.2f} "
-                        f"ecn={r['ecn']:.0f}"),
+            "name": f"fig13/{name}", "us_per_call": r.wall_s * 1e6,
+            "derived": (f"slowdown avg={d['sl_avg']:.3f} p99={d['sl_p99']:.2f} "
+                        f"ecn={d['ecn']:.0f}"),
         })
     a, b = rows["themis"], rows["th+cassini"]
     out.append({

@@ -1,37 +1,34 @@
 """Paper Fig. 2: two VGG19 jobs sharing one uplink — fair-share DCQCN vs a
-CASSINI time-shift.  Reports mean and p90 iteration time and ECN marks."""
+CASSINI time-shift.  Reports mean and p90 iteration time and ECN marks.
+
+Driven by the ``fig2-interleave`` entry of the scenario registry."""
 
 from __future__ import annotations
 
 import statistics
 
-from repro.cluster import Topology, snapshot_trace
-from repro.sched import CassiniAugmented
-from repro.sched.fixed import FixedPlacementScheduler
+from repro.engine import get_scenario
 
-from .common import pct, run_trace
+from .common import pct
 
 
 def run() -> list[dict]:
-    topo = Topology.paper_testbed()
-    pl = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+    scenario = get_scenario("fig2-interleave")
     rows = []
     results = {}
-    for name, cass in [("scenario1-fair-share", False), ("scenario2-cassini", True)]:
-        jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=500)
-        sched = FixedPlacementScheduler(pl)
-        if cass:
-            sched = CassiniAugmented(sched, num_candidates=1)
-        m, wall, sim = run_trace(topo, jobs, sched, jitter=0.0)
-        its = m.iter_times("vgg19")
-        results[name] = dict(
-            mean=statistics.mean(its), p90=pct(its, 90), ecn=m.ecn_per_iter()
+    for label, sched in [("scenario1-fair-share", "fair-share"),
+                         ("scenario2-cassini", "cassini")]:
+        r = scenario.run(sched)
+        its = r.metrics.iter_times("vgg19")
+        results[label] = dict(
+            mean=statistics.mean(its), p90=pct(its, 90),
+            ecn=r.metrics.ecn_per_iter(),
         )
-        shifts = {j.job_id: round(j.time_shift_ms, 1) for j in m.jobs}
-        rows.append({"name": f"fig2/{name}", "us_per_call": wall * 1e6,
-                     "derived": f"mean={results[name]['mean']:.0f}ms "
-                                f"p90={results[name]['p90']:.0f}ms "
-                                f"ecn={results[name]['ecn']:.0f} shifts={shifts}"})
+        shifts = {j.job_id: round(j.time_shift_ms, 1) for j in r.metrics.jobs}
+        rows.append({"name": f"fig2/{label}", "us_per_call": r.wall_s * 1e6,
+                     "derived": f"mean={results[label]['mean']:.0f}ms "
+                                f"p90={results[label]['p90']:.0f}ms "
+                                f"ecn={results[label]['ecn']:.0f} shifts={shifts}"})
     s1, s2 = results["scenario1-fair-share"], results["scenario2-cassini"]
     rows.append({
         "name": "fig2/speedup",

@@ -1,41 +1,32 @@
 """Paper Fig. 8/9: Poisson-arrival trace (load ≈ 0.9–1.0), Themis vs
 Th+CASSINI vs Pollux vs Po+CASSINI vs Random vs Ideal.  Reports avg / p99
-iteration times over all jobs (the paper's CDF summarized)."""
+iteration times over all jobs (the paper's CDF summarized).
+
+Driven by the ``poisson-paper`` entry of the scenario registry."""
 
 from __future__ import annotations
 
-from repro.cluster import Topology, ideal_metrics, poisson_trace
-
-from .common import SCHEDULERS, run_trace
+from repro.engine import get_scenario
 
 
-def _jobs(topo, seed):
-    return poisson_trace(
-        topo, load=0.95, num_jobs=16, seed=seed, min_iters=150, max_iters=400,
-        models=["vgg16", "vgg19", "wideresnet101", "resnet50", "bert",
-                "roberta", "xlm", "gpt1", "gpt2", "gpt3", "dlrm"],
-    )
-
-
-def run(seed: int = 7) -> list[dict]:
-    topo = Topology.paper_testbed()
+def run() -> list[dict]:
+    scenario = get_scenario("poisson-paper")
     rows = []
     base = {}
-    for name in ("themis", "th+cassini", "pollux", "po+cassini", "random"):
-        jobs = _jobs(topo, seed)
-        m, wall, _ = run_trace(topo, jobs, SCHEDULERS[name]())
-        s = m.summary()
+    for name in scenario.scheduler_names():
+        r = scenario.run(name)
+        s = r.metrics.summary()
         base[name] = s
         rows.append({
             "name": f"fig9/{name}",
-            "us_per_call": wall * 1e6,
+            "us_per_call": r.wall_s * 1e6,
             "derived": (
                 f"avg_iter={s['avg_iter_ms']:.0f}ms p99={s['p99_iter_ms']:.0f}ms "
                 f"slowdown avg={s['avg_slowdown']:.2f} p99={s['p99_slowdown']:.2f} "
                 f"avg_jct={s['avg_jct_ms']/1000:.1f}s ecn={s['ecn_per_iter']:.0f}"
             ),
         })
-    mi = ideal_metrics(topo, _jobs(topo, seed))
+    mi = scenario.ideal()
     rows.append({
         "name": "fig9/ideal", "us_per_call": 0.0,
         "derived": f"avg_iter={mi.avg_iter_ms:.0f}ms p99={mi.pct_iter_ms(99):.0f}ms",

@@ -61,6 +61,48 @@ def _kernel_bench() -> list[dict]:
                       repeat=1)
     rows.append({"name": "kernels/ssd_scan(256)", "us_per_call": us_ssd,
                  "derived": "chunked SSD w/ VMEM state carry"})
+    rows.extend(_batched_scoring_bench())
+    return rows
+
+
+def _batched_scoring_bench() -> list[dict]:
+    """Batched candidate scoring (``find_rotations_batched``) vs the scalar
+    per-link loop the seed scheduler ran — the Algorithm-2 hot path."""
+    from repro.core.circle import CommPattern, Phase
+    from repro.core.compat import find_rotations, find_rotations_batched
+
+    from .common import timed
+
+    def problems(n=24):
+        out = []
+        for i in range(n):
+            it = 300.0 + 10.0 * (i % 7)
+            a = CommPattern(it, (Phase(0.35 * it, 0.40 * it, 45.0),), name=f"a{i}")
+            b = CommPattern(it, (Phase(0.55 * it, 0.35 * it, 40.0),), name=f"b{i}")
+            out.append(([a, b], 50.0))
+        return out
+
+    rows = []
+    for deg, label in ((5.0, "A~72 typical"), (0.5, "A~720 fine-grid")):
+        probs = problems()
+        scalar = lambda: [
+            find_rotations(p, c, precision_deg=deg, backend="numpy")
+            for p, c in probs
+        ]
+        batched = lambda: find_rotations_batched(probs, precision_deg=deg)
+        batched()  # warm up (jit compile on the pallas path)
+        _, us_scalar = timed(scalar)
+        _, us_batch = timed(batched)
+        rows.append({
+            "name": f"kernels/score_batched(24x2job,{deg:g}deg)",
+            "us_per_call": us_batch,
+            "derived": (
+                f"scalar_loop={us_scalar:.0f}us speedup={us_scalar/us_batch:.2f}x "
+                f"({label}; batched packs all links into one "
+                f"circle_score call — pallas kernel for A>=512, vectorized "
+                f"numpy below)"
+            ),
+        })
     return rows
 
 

@@ -2,45 +2,29 @@
 
     PYTHONPATH=src python examples/cluster_scheduling.py
 
-Runs the same Poisson job-arrival trace (13 paper DNN workloads on the
-24-server, 2:1-oversubscribed testbed) under Themis, Th+CASSINI, Pollux,
-Po+CASSINI, Random and the Ideal reference, and prints the comparison.
+Runs the ``poisson-paper`` scenario from the registry (13 paper DNN
+workloads on the 24-server, 2:1-oversubscribed testbed) under Themis,
+Th+CASSINI, Pollux, Po+CASSINI, Random and the Ideal reference, and prints
+the comparison.  Swapping the workload is one line: pick another name from
+``repro.engine.list_scenarios()`` or ``register_scenario`` your own.
 """
 
-from repro.cluster import ClusterSimulator, Topology, ideal_metrics, poisson_trace
-from repro.sched import (
-    CassiniAugmented,
-    PolluxScheduler,
-    RandomScheduler,
-    ThemisScheduler,
-)
+from repro.engine import get_scenario, list_scenarios
 
 
 def main() -> None:
-    topo = Topology.paper_testbed()
-    mk_jobs = lambda: poisson_trace(
-        topo, load=0.95, num_jobs=16, seed=7, min_iters=150, max_iters=400,
-        models=["vgg16", "vgg19", "wideresnet101", "resnet50", "bert",
-                "roberta", "xlm", "gpt1", "gpt2", "gpt3", "dlrm"],
-    )
-    schedulers = [
-        ("themis", ThemisScheduler()),
-        ("th+cassini", CassiniAugmented(ThemisScheduler())),
-        ("pollux", PolluxScheduler()),
-        ("po+cassini", CassiniAugmented(PolluxScheduler())),
-        ("random", RandomScheduler()),
-    ]
+    scenario = get_scenario("poisson-paper")
+    print(f"scenario: {scenario.name} — {scenario.description}")
+    print(f"(available: {', '.join(list_scenarios())})\n")
     print(f"{'scheduler':12s} {'avg iter':>9s} {'p99 iter':>9s} "
           f"{'avg JCT':>9s} {'ECN/iter':>9s}")
     results = {}
-    for name, sched in schedulers:
-        sim = ClusterSimulator(topo, sched, epoch_ms=300_000, compute_jitter=0.005)
-        m = sim.run(mk_jobs(), horizon_ms=7_200_000)
-        s = m.summary()
+    for name in scenario.scheduler_names():
+        s = scenario.run(name).metrics.summary()
         results[name] = s
         print(f"{name:12s} {s['avg_iter_ms']:8.0f}ms {s['p99_iter_ms']:8.0f}ms "
               f"{s['avg_jct_ms']/1000:8.1f}s {s['ecn_per_iter']:9.0f}")
-    mi = ideal_metrics(topo, mk_jobs())
+    mi = scenario.ideal()
     print(f"{'ideal':12s} {mi.avg_iter_ms:8.0f}ms {mi.pct_iter_ms(99):8.0f}ms")
     for a, b in (("themis", "th+cassini"), ("pollux", "po+cassini")):
         print(f"{b} vs {a}: avg {results[a]['avg_iter_ms']/results[b]['avg_iter_ms']:.2f}x, "

@@ -5,7 +5,8 @@
 1. describe two jobs' periodic communication patterns,
 2. score their compatibility on a 50 Gbps link and get the time-shift,
 3. build a cluster-level affinity graph and compute unique shifts,
-4. let the pluggable module pick the best of two placements.
+4. let the pluggable module pick the best of two placements,
+5. run the full typed scheduling pipeline on a small cluster.
 """
 
 from repro.core import (
@@ -46,3 +47,29 @@ decision = CassiniModule().decide([bad, good], patterns, caps)
 winner = "good" if decision.top_placement is good else "bad"
 print(f"module chose the {winner} placement (score {decision.score:.2f}) "
       f"with shifts { {k: round(v, 1) for k, v in decision.time_shifts_ms.items()} }")
+
+# 5) the typed pipeline: Allocate → Propose → Score → Align on a cluster.
+#    Two VGG19 jobs pinned onto the same rack-pair uplink (the Fig. 2
+#    scenario): the Decision carries a typed AlignmentPlan (no meta dicts);
+#    repro.engine.get_scenario offers full experiments by name.
+from repro.cluster import Topology
+from repro.cluster.job import Job, JobState
+from repro.engine import SchedulingPipeline, list_scenarios
+from repro.sched.base import ClusterState
+from repro.sched.fixed import FixedPlacementScheduler
+
+jobs = [Job(job_id=f"j{i}", model="vgg19", num_workers=2, duration_iters=100,
+            batch_per_gpu=1400) for i in range(2)]
+for j in jobs:
+    j.state = JobState.RUNNING
+state = ClusterState(topology=Topology.paper_testbed(), now_ms=0.0,
+                     running=jobs, pending=[])
+pinned = FixedPlacementScheduler({"j0": (0, 6), "j1": (1, 7)})
+pipe = SchedulingPipeline.cassini(pinned, num_candidates=1)
+d = pipe.schedule(state)
+print(f"pipeline stages      : {[s.name for s in pipe.stages]}")
+print(f"pipeline decision    : score={d.compat_score:.2f} "
+      f"shifts={ {k: round(v, 1) for k, v in d.time_shifts_ms.items()} } "
+      f"paced={ {k: round(v) for k, v in d.plan.paced_periods_ms.items()} } "
+      f"hold={ {k: d.plan.align_ok(k) for k in d.placements} }")
+print(f"registered scenarios : {', '.join(list_scenarios())}")

@@ -6,6 +6,7 @@ import enum
 from dataclasses import dataclass, field
 
 from repro.core.circle import CommPattern
+from repro.engine.plan import JobAlignment
 from repro.profiles.models import ModelProfile, get_profile
 
 __all__ = ["JobState", "Job"]
@@ -15,6 +16,10 @@ class JobState(enum.Enum):
     PENDING = "pending"
     RUNNING = "running"
     DONE = "done"
+    # still RUNNING when the simulation horizon expired: the job never
+    # finished, so ``finish_ms``/``jct_ms`` stay None and it is excluded
+    # from the "jobs_finished" metric.
+    CUTOFF = "cutoff"
 
 
 @dataclass
@@ -23,7 +28,7 @@ class Job:
 
     A job requests ``num_workers`` GPUs and runs ``duration_iters`` training
     iterations; the scheduler may change its placement (and CASSINI its
-    time-shift) at every scheduling epoch.
+    alignment directive) at every scheduling epoch.
     """
 
     job_id: str
@@ -36,16 +41,34 @@ class Job:
     # runtime state ------------------------------------------------- #
     state: JobState = JobState.PENDING
     placement: tuple[int, ...] = ()          # server ids
-    time_shift_ms: float = 0.0
-    pending_shift_ms: float | None = None    # applied at next iteration start
-    align: bool = False                      # CASSINI agent holds the shift (§5.7)
-    paced_iter_ms: float | None = None       # isochronous pacing period
+    # typed CASSINI directive (shift / pacing / hold), set per epoch by the
+    # simulator from the Decision's AlignmentPlan; shift_pending marks a new
+    # shift target the workers have not realized yet.
+    alignment: JobAlignment = field(default_factory=JobAlignment)
+    shift_pending: bool = False
     drift_adjustments: int = 0
     iters_done: int = 0
     iter_times_ms: list[float] = field(default_factory=list)
     ecn_marks: list[float] = field(default_factory=list)
     start_ms: float | None = None
     finish_ms: float | None = None
+
+    # -------------------------------------------------------------- #
+    def apply_directive(self, directive: JobAlignment) -> None:
+        """Adopt a fresh alignment directive from this epoch's plan."""
+        self.alignment = directive
+        self.shift_pending = True
+
+    def clear_directive(self) -> None:
+        """No directive this epoch: keep the realized shift target but
+        disarm pacing (matches an un-augmented scheduling decision)."""
+        self.alignment = JobAlignment(shift_ms=self.alignment.shift_ms)
+        self.shift_pending = False
+
+    @property
+    def time_shift_ms(self) -> float:
+        """Current target time-shift (back-compat convenience view)."""
+        return self.alignment.shift_ms
 
     # -------------------------------------------------------------- #
     @property

@@ -146,7 +146,11 @@ class FluidNetworkSim:
 
         Jobs keep their identity across epochs; a job whose placement
         changed pays ``migration_pause_ms`` (checkpoint-restore) and every
-        job (re)starts its cycle at its (new) time-shift delay.
+        job (re)starts its cycle at its (new) time-shift delay.  All CASSINI
+        inputs come off the job's typed ``alignment`` directive
+        (:class:`repro.engine.plan.JobAlignment`): the cumulative shift
+        target, whether the pacing agent holds the isochronous grid, and
+        the grid period.
         """
         new: dict[str, _JobExec] = {}
         for job in jobs:
@@ -154,23 +158,24 @@ class FluidNetworkSim:
             segs = segments_from_pattern(pattern)
             links = self.topo.job_links(job.placement)
             prev = self._execs.get(job.job_id)
+            align = job.alignment
             ex = _JobExec(
                 job=job, segments=segs, links=links,
                 solo_iter_ms=pattern.iter_time_ms,
-                paced_iter_ms=job.paced_iter_ms or pattern.iter_time_ms,
+                paced_iter_ms=align.paced_period_ms or pattern.iter_time_ms,
             )
             migrated = prev is not None and prev.links != links
             if prev is None or migrated:
                 ex.delay_ms = (self.migration_pause_ms if migrated else 0.0)
-                ex.delay_ms += job.time_shift_ms
-                ex.applied_shift_ms = job.time_shift_ms
+                ex.delay_ms += align.shift_ms
+                ex.applied_shift_ms = align.shift_ms
                 ex.iter_start_ms = self.now_ms
                 ex.seg_idx = 0
                 ex.reset_segment()
                 # the migration pause / initial shift is a one-shot setup
                 # cost, not an iteration time: exclude it from the CDF
                 ex.skip_record = ex.delay_ms > _EPS
-                if job.align:
+                if align.hold:
                     ex.ideal_next_ms = self.now_ms + ex.delay_ms + ex.paced_iter_ms
             else:
                 # same placement: keep mid-iteration progress.  A shift from
@@ -186,21 +191,21 @@ class FluidNetworkSim:
                 ex.ideal_next_ms = prev.ideal_next_ms
                 ex.consec_adjust = prev.consec_adjust
                 ex.skip_record = prev.skip_record
-                if job.pending_shift_ms is not None:
-                    delta = (job.pending_shift_ms - prev.applied_shift_ms) % ex.solo_iter_ms
+                if job.shift_pending:
+                    delta = (align.shift_ms - prev.applied_shift_ms) % ex.solo_iter_ms
                     if delta > _EPS and (ex.solo_iter_ms - delta) > _EPS:
                         ex.delay_ms += delta
                         ex.skip_record = True
                         if ex.ideal_next_ms is not None:
                             ex.ideal_next_ms += delta
-                    ex.applied_shift_ms = job.pending_shift_ms
+                    ex.applied_shift_ms = align.shift_ms
                 # (re)arm / disarm the alignment agent (§5.7)
-                if job.align and ex.ideal_next_ms is None:
+                if align.hold and ex.ideal_next_ms is None:
                     ex.ideal_next_ms = ex.iter_start_ms + ex.delay_ms + ex.paced_iter_ms
                     ex.consec_adjust = 0
-                elif not job.align:
+                elif not align.hold:
                     ex.ideal_next_ms = None
-            job.pending_shift_ms = None
+            job.shift_pending = False
             if job.start_ms is None:
                 job.start_ms = self.now_ms
             new[job.job_id] = ex

@@ -153,17 +153,15 @@ class ClusterSimulator:
                 if servers:
                     job.placement = tuple(servers)
                     job.state = JobState.RUNNING
-                    shift = decision.time_shifts_ms.get(job.job_id)
-                    ok = (decision.meta or {}).get("align_ok", {}).get(
-                        job.job_id, True
+                    directive = (
+                        decision.plan.directive_for(job.job_id)
+                        if decision.plan is not None
+                        else None
                     )
-                    job.align = shift is not None and ok
-                    job.paced_iter_ms = (decision.meta or {}).get("paced_ms", {}).get(
-                        job.job_id
-                    )
-                    if shift is not None:
-                        job.pending_shift_ms = shift
-                        job.time_shift_ms = shift
+                    if directive is not None:
+                        job.apply_directive(directive)
+                    else:
+                        job.clear_directive()
                     placed.append(job)
                 else:
                     job.placement = ()
@@ -193,7 +191,7 @@ class ClusterSimulator:
                 if not (pending and pending[0].arrival_ms <= now + 1e-9):
                     reschedule(now)
 
-        for job in running:  # jobs cut off by the horizon
-            if job.state == JobState.RUNNING and job.finish_ms is None:
-                job.finish_ms = None
+        for job in running:  # still running at the horizon: mark explicitly
+            if job.state == JobState.RUNNING:
+                job.state = JobState.CUTOFF  # finish_ms/jct_ms stay None
         return Metrics(jobs=done + running)

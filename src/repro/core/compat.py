@@ -36,6 +36,7 @@ __all__ = [
     "score_for_shifts",
     "score_all_shifts",
     "find_rotations",
+    "find_rotations_batched",
     "compatibility_score",
 ]
 
@@ -106,21 +107,7 @@ def score_all_shifts(
     """
     base = np.asarray(base, dtype=np.float32)
     cand = np.asarray(cand, dtype=np.float32)
-    a = base.shape[-1]
-    if backend == "pallas" or (backend == "auto" and a >= 512):
-        try:
-            from repro.kernels.circle_score import ops as _cs_ops
-
-            return np.asarray(
-                _cs_ops.circle_score(base[None, :], cand[None, :], capacity)[0]
-            )
-        except Exception:  # pragma: no cover - fallback if pallas unavailable
-            pass
-    # vectorized numpy: rolled[s, α] = cand[(α − s) mod A]
-    idx = (np.arange(a)[None, :] - np.arange(a)[:, None]) % a
-    rolled = cand[idx]
-    total = base[None, :] + rolled
-    return np.maximum(total - capacity, 0.0).sum(axis=1)
+    return _batched_excess(base[None, :], cand[None, :], capacity, backend=backend)[0]
 
 
 # ---------------------------------------------------------------------- #
@@ -150,6 +137,78 @@ def find_rotations(
     per-worker alignment agents need to hold the shift without systematic
     drift.
     """
+    circle = _build_circle(
+        patterns, precision_deg=precision_deg, quantum_ms=quantum_ms,
+        dilate_steps=dilate_steps,
+    )
+    shifts = _search(circle, capacity_gbps, backend=backend, seed=seed)
+    return _finalize(circle, shifts, capacity_gbps)
+
+
+def find_rotations_batched(
+    problems: Sequence[tuple[Sequence[CommPattern], float]],
+    *,
+    precision_deg: float = DEFAULT_PRECISION_DEG,
+    quantum_ms: float = DEFAULT_QUANTUM_MS,
+    backend: str = "auto",
+    seed: int = 0,
+    dilate_steps: int = 1,
+) -> list[CompatResult]:
+    """Solve many independent link-level Table-1 problems in one pass.
+
+    ``problems`` is a sequence of ``(patterns, capacity_gbps)`` pairs — one
+    per contended link (across *all* placement candidates of a scheduling
+    epoch).  Two-job links — the overwhelmingly common case in the paper's
+    traces — reduce to a single "score every rotation of job 1 against job
+    0" row; those rows are grouped by (angle count, capacity), packed into
+    ``(L, A)`` arrays and evaluated in one batched :func:`_batched_excess`
+    call (Pallas ``circle_score`` kernel on large grids, vectorized numpy
+    otherwise) instead of ``L`` separate scalar searches.  Links with other
+    job counts (or any exotic shape) fall back to the scalar
+    :func:`find_rotations` path, so the result is always defined.
+
+    Returns one :class:`CompatResult` per problem, in input order, identical
+    to what per-problem ``find_rotations`` calls would produce (same circle
+    construction, same argmin tie-breaking, same normalization).
+    """
+    results: list[CompatResult | None] = [None] * len(problems)
+    # rows of the batchable 2-job case, grouped by (num_angles, capacity)
+    groups: dict[tuple[int, float], list[tuple[int, UnifiedCircle]]] = {}
+    for i, (patterns, capacity) in enumerate(problems):
+        circle = _build_circle(
+            patterns, precision_deg=precision_deg, quantum_ms=quantum_ms,
+            dilate_steps=dilate_steps,
+        )
+        # batch only where the scalar path would also search the full grid
+        # (same prod(grids) <= 20k cutoff as _search), so both paths stay
+        # result-identical at any precision.
+        if len(patterns) == 2 and circle.shift_grid(1) <= 20_000:
+            groups.setdefault((circle.num_angles, float(capacity)), []).append(
+                (i, circle)
+            )
+        else:
+            shifts = _search(circle, capacity, backend=backend, seed=seed)
+            results[i] = _finalize(circle, shifts, capacity)
+
+    for (_, capacity), rows in groups.items():
+        base = np.stack([c.bw[0] for _, c in rows])
+        cand = np.stack([c.bw[1] for _, c in rows])
+        ex = _batched_excess(base, cand, capacity, backend=backend)
+        for (i, circle), row in zip(rows, ex):
+            # Eq. 4 bound: only the job's distinct rotations are admissible
+            s1 = int(np.argmin(row[: circle.shift_grid(1)]))
+            results[i] = _finalize(circle, (0, s1), capacity)
+    return [r for r in results if r is not None]
+
+
+def _build_circle(
+    patterns: Sequence[CommPattern],
+    *,
+    precision_deg: float,
+    quantum_ms: float,
+    dilate_steps: int,
+) -> UnifiedCircle:
+    """Unified circle with optional arc dilation (see find_rotations)."""
     import dataclasses
 
     circle = UnifiedCircle.build(
@@ -162,16 +221,27 @@ def find_rotations(
             dilated = np.maximum(dilated, np.roll(bw, s, axis=1))
             dilated = np.maximum(dilated, np.roll(bw, -s, axis=1))
         circle = dataclasses.replace(circle, bw=dilated)
-    n = len(patterns)
+    return circle
+
+
+def _search(
+    circle: UnifiedCircle, capacity_gbps: float, *, backend: str, seed: int
+) -> tuple[int, ...]:
+    """Pick the search strategy for one circle (Table 1 solve)."""
+    n = len(circle.patterns)
     grids = [circle.shift_grid(j) for j in range(n)]
-
     if n == 1:
-        shifts = (0,)
-    elif n <= EXACT_SEARCH_MAX_JOBS and int(np.prod([g for g in grids[1:]])) <= 20_000:
-        shifts = _exact_search(circle, grids, capacity_gbps, backend)
-    else:
-        shifts = _coordinate_descent(circle, grids, capacity_gbps, backend, seed)
+        return (0,)
+    if n <= EXACT_SEARCH_MAX_JOBS and int(np.prod([g for g in grids[1:]])) <= 20_000:
+        return _exact_search(circle, grids, capacity_gbps, backend)
+    return _coordinate_descent(circle, grids, capacity_gbps, backend, seed)
 
+
+def _finalize(
+    circle: UnifiedCircle, shifts: Sequence[int], capacity_gbps: float
+) -> CompatResult:
+    """Score + normalize a rotation assignment into a CompatResult."""
+    n = len(circle.patterns)
     score = score_for_shifts(circle, shifts, capacity_gbps)
     # normalize so the first job's shift is zero: only *relative* rotations
     # matter (global rotation leaves the score unchanged), and a zero shift
@@ -189,6 +259,35 @@ def find_rotations(
         capacity_gbps=capacity_gbps,
         paced_periods_ms=paced,
     )
+
+
+def _batched_excess(
+    base: np.ndarray, cand: np.ndarray, capacity: float, *, backend: str = "auto"
+) -> np.ndarray:
+    """Excess sums for every rotation of ``L`` independent rows at once.
+
+    ``out[l, s] = Σ_α max(0, base[l, α] + cand[l, (α − s) mod A] − C)``.
+
+    ``backend="auto"`` routes large angle grids to the Pallas
+    ``circle_score`` kernel (one batched call over all rows — the TPU
+    target's hot path) and everything else to a vectorized numpy evaluation;
+    ``"pallas"`` / ``"numpy"`` force a path.  Both produce float32 sums like
+    the scalar :func:`score_all_shifts`.
+    """
+    base = np.asarray(base, dtype=np.float32)
+    cand = np.asarray(cand, dtype=np.float32)
+    a = base.shape[-1]
+    if backend == "pallas" or (backend == "auto" and a >= 512):
+        try:
+            from repro.kernels.circle_score import ops as _cs_ops
+
+            return np.asarray(_cs_ops.circle_score(base, cand, capacity))
+        except Exception:  # pragma: no cover - fallback if pallas unavailable
+            pass
+    idx = (np.arange(a)[None, :] - np.arange(a)[:, None]) % a  # (S, A)
+    rolled = cand[:, idx]                                      # (L, S, A)
+    total = base[:, None, :] + rolled
+    return np.maximum(total - capacity, 0.0).sum(axis=-1)
 
 
 def compatibility_score(

@@ -15,21 +15,31 @@ Host schedulers (Themis, Pollux, …) are modified to emit up to ``N``
 The module is deliberately independent of any concrete cluster model: a
 candidate is fully described by ``job → links traversed``, per-link
 capacities and per-job communication patterns.
+
+Scoring (steps 1–4) and alignment (step 5) are exposed separately —
+:meth:`CassiniModule.score_candidates` / ``score_candidates_batched`` and
+:meth:`CassiniModule.align` — so :class:`repro.engine.SchedulingPipeline`
+can run them as independent stages; :meth:`CassiniModule.decide` composes
+them (Algorithm 2 end-to-end).
 """
 
 from __future__ import annotations
 
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Hashable, Mapping, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
 from .affinity import AffinityGraph, JobId, LinkId
 from .circle import CommPattern, DEFAULT_PRECISION_DEG, DEFAULT_QUANTUM_MS
-from .compat import CompatResult, find_rotations
+from .compat import CompatResult, find_rotations, find_rotations_batched
 
 __all__ = ["PlacementCandidate", "CassiniDecision", "CassiniModule"]
+
+# (candidate, affinity graph or None when loop-discarded, per-link results)
+Evaluated = tuple["PlacementCandidate", AffinityGraph | None, dict[LinkId, CompatResult]]
 
 
 @dataclass
@@ -77,7 +87,7 @@ class CassiniModule:
         *,
         precision_deg: float = DEFAULT_PRECISION_DEG,
         quantum_ms: float = DEFAULT_QUANTUM_MS,
-        aggregate: Callable[[Sequence[float]], float] = None,
+        aggregate: Callable[[Sequence[float]], float] | None = None,
         max_workers: int | None = None,
         seed: int = 0,
     ) -> None:
@@ -86,9 +96,13 @@ class CassiniModule:
         self.aggregate = aggregate or (lambda xs: float(np.mean(xs)))
         self.max_workers = max_workers
         self.seed = seed
-        # candidates at one epoch mostly share link job-sets: memoize the
-        # per-link optimization across candidates (and epochs).
+        # Candidates at one epoch mostly share link job-sets: memoize the
+        # per-link optimization across candidates (and epochs).  All reads
+        # and writes go through ``_cache_lock`` so the ThreadPoolExecutor
+        # path (``max_workers``) and the batched path stay race-free; the
+        # cached CompatResults themselves are frozen dataclasses.
         self._link_cache: dict[tuple, CompatResult] = {}
+        self._cache_lock = threading.Lock()
 
     # -------------------------------------------------------------- #
     def contended_links(
@@ -129,19 +143,41 @@ class CassiniModule:
             merged_caps[rep] = min(capacities[l] for l in ls)
         return merged_links, merged_caps
 
-    def _evaluate_candidate(
+    # -------------------------------------------------------------- #
+    def _link_key(
+        self, js: Sequence[JobId], patterns: Mapping[JobId, CommPattern], cap: float
+    ) -> tuple:
+        return (
+            tuple(
+                (patterns[j].name, patterns[j].iter_time_ms, patterns[j].phases)
+                for j in js
+            ),
+            cap,
+        )
+
+    def _cached(self, key: tuple) -> CompatResult | None:
+        with self._cache_lock:
+            return self._link_cache.get(key)
+
+    def _cache_put(self, key: tuple, res: CompatResult) -> None:
+        with self._cache_lock:
+            self._link_cache[key] = res
+
+    def _prepare_candidate(
         self,
         cand: PlacementCandidate,
         patterns: Mapping[JobId, CommPattern],
         capacities: Mapping[LinkId, float],
-    ) -> tuple[PlacementCandidate, AffinityGraph | None, dict[LinkId, CompatResult]]:
-        """Lines 3–23 of Algorithm 2 for one candidate."""
-        shared, capacities = self.merge_equivalent_links(
+    ) -> tuple[dict[LinkId, list[JobId]], dict[LinkId, float], AffinityGraph] | None:
+        """Lines 3–13 of Algorithm 2: contention map + loop check.
+
+        Returns None (and marks the candidate discarded) when the affinity
+        graph has a loop — the Theorem 1 precondition fails.
+        """
+        shared, caps = self.merge_equivalent_links(
             self.contended_links(cand), capacities
         )
         graph = AffinityGraph()
-        link_results: dict[LinkId, CompatResult] = {}
-
         # Build graph edges with weight 0 first (Alg. 2 line 11) so the loop
         # check runs before paying for any optimization.
         for l, js in shared.items():
@@ -150,28 +186,38 @@ class CassiniModule:
         if graph.has_loop():
             cand.discarded_loop = True
             cand.score = -float("inf")
-            return cand, None, link_results
+            return None
+        return shared, caps, graph
 
+    def _fill_candidate(
+        self,
+        cand: PlacementCandidate,
+        shared: Mapping[LinkId, list[JobId]],
+        caps: Mapping[LinkId, float],
+        graph: AffinityGraph,
+        patterns: Mapping[JobId, CommPattern],
+    ) -> Evaluated:
+        """Lines 14–23 of Algorithm 2: per-link optimization + aggregation.
+
+        Link results are pulled from the cache; misses are solved scalar
+        (the batched path pre-populates the cache, so it only pays for
+        genuinely new link job-sets).
+        """
+        link_results: dict[LinkId, CompatResult] = {}
         scores: list[float] = []
         for l, js in sorted(shared.items(), key=lambda kv: repr(kv[0])):
             js = sorted(js, key=repr)
-            key = (
-                tuple(
-                    (patterns[j].name, patterns[j].iter_time_ms, patterns[j].phases)
-                    for j in js
-                ),
-                capacities[l],
-            )
-            res = self._link_cache.get(key)
+            key = self._link_key(js, patterns, caps[l])
+            res = self._cached(key)
             if res is None:
                 res = find_rotations(
                     [patterns[j] for j in js],
-                    capacities[l],
+                    caps[l],
                     precision_deg=self.precision_deg,
                     quantum_ms=self.quantum_ms,
                     seed=self.seed,
                 )
-                self._link_cache[key] = res
+                self._cache_put(key, res)
             link_results[l] = res
             scores.append(res.score)
             cand.link_scores[l] = res.score
@@ -183,30 +229,93 @@ class CassiniModule:
         cand.score = self.aggregate(scores) if scores else 1.0
         return cand, graph, link_results
 
+    def _evaluate_candidate(
+        self,
+        cand: PlacementCandidate,
+        patterns: Mapping[JobId, CommPattern],
+        capacities: Mapping[LinkId, float],
+    ) -> Evaluated:
+        """Lines 3–23 of Algorithm 2 for one candidate (scalar path)."""
+        prep = self._prepare_candidate(cand, patterns, capacities)
+        if prep is None:
+            return cand, None, {}
+        return self._fill_candidate(cand, *prep, patterns)
+
     # -------------------------------------------------------------- #
-    def decide(
+    def score_candidates(
         self,
         candidates: Sequence[PlacementCandidate],
         patterns: Mapping[JobId, CommPattern],
         capacities: Mapping[LinkId, float],
-    ) -> CassiniDecision:
-        """Algorithm 2 end-to-end."""
-        if not candidates:
-            raise ValueError("need at least one placement candidate")
-
+    ) -> list[Evaluated]:
+        """Score every candidate with per-link scalar optimizations."""
         if self.max_workers and len(candidates) > 1:
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
-                evaluated = list(
+                return list(
                     pool.map(
                         lambda c: self._evaluate_candidate(c, patterns, capacities),
                         candidates,
                     )
                 )
-        else:
-            evaluated = [
-                self._evaluate_candidate(c, patterns, capacities) for c in candidates
-            ]
+        return [
+            self._evaluate_candidate(c, patterns, capacities) for c in candidates
+        ]
 
+    def score_candidates_batched(
+        self,
+        candidates: Sequence[PlacementCandidate],
+        patterns: Mapping[JobId, CommPattern],
+        capacities: Mapping[LinkId, float],
+    ) -> list[Evaluated]:
+        """Score every candidate, solving all uncached link problems at once.
+
+        Candidates at one epoch share most of their contended-link job-sets;
+        instead of optimizing link-by-link inside a per-candidate loop, this
+        path collects every *distinct uncached* (job-set, capacity) problem
+        across all candidates and hands them to
+        :func:`repro.core.compat.find_rotations_batched`, which packs the
+        two-job rows into arrays for one batched ``circle_score`` evaluation
+        (Pallas kernel / vectorized numpy) and falls back to the scalar
+        search for other shapes.  Results land in the shared link cache, so
+        the final per-candidate assembly is pure cache hits and the scalar
+        and batched paths produce identical Evaluated tuples.
+        """
+        prepared = [
+            self._prepare_candidate(c, patterns, capacities) for c in candidates
+        ]
+        todo: dict[tuple, tuple[list[CommPattern], float]] = {}
+        for prep in prepared:
+            if prep is None:
+                continue
+            shared, caps, _ = prep
+            for l, js in shared.items():
+                js = sorted(js, key=repr)
+                key = self._link_key(js, patterns, caps[l])
+                if key not in todo and self._cached(key) is None:
+                    todo[key] = ([patterns[j] for j in js], caps[l])
+        if todo:
+            keys = list(todo)
+            solved = find_rotations_batched(
+                [todo[k] for k in keys],
+                precision_deg=self.precision_deg,
+                quantum_ms=self.quantum_ms,
+                seed=self.seed,
+            )
+            for key, res in zip(keys, solved):
+                self._cache_put(key, res)
+        out: list[Evaluated] = []
+        for cand, prep in zip(candidates, prepared):
+            if prep is None:
+                out.append((cand, None, {}))
+            else:
+                out.append(self._fill_candidate(cand, *prep, patterns))
+        return out
+
+    # -------------------------------------------------------------- #
+    def align(self, evaluated: Sequence[Evaluated]) -> CassiniDecision:
+        """Rank scored candidates and run Algorithm 1 on the winner."""
+        if not evaluated:
+            raise ValueError("need at least one scored candidate")
         # Sort decreasing by compatibility score; stable on input order.
         order = sorted(
             range(len(evaluated)), key=lambda i: evaluated[i][0].score, reverse=True
@@ -216,9 +325,8 @@ class CassiniModule:
         if top_graph is None:
             # every candidate had a loop: fall back to the first candidate
             # with no time-shifts (plain host-scheduler behaviour).
-            top_cand = candidates[0]
             return CassiniDecision(
-                top_placement=top_cand,
+                top_placement=evaluated[0][0],
                 time_shifts_ms={},
                 link_results={},
                 candidates=[e[0] for e in evaluated],
@@ -242,3 +350,17 @@ class CassiniModule:
             paced_periods_ms=paced,
             job_min_score=min_score,
         )
+
+    def decide(
+        self,
+        candidates: Sequence[PlacementCandidate],
+        patterns: Mapping[JobId, CommPattern],
+        capacities: Mapping[LinkId, float],
+        *,
+        batched: bool = False,
+    ) -> CassiniDecision:
+        """Algorithm 2 end-to-end (score + align)."""
+        if not candidates:
+            raise ValueError("need at least one placement candidate")
+        score = self.score_candidates_batched if batched else self.score_candidates
+        return self.align(score(candidates, patterns, capacities))

@@ -1,0 +1,56 @@
+"""Composable scheduling engine: typed pipeline, alignment plans, scenarios.
+
+- :mod:`repro.engine.plan`      — :class:`AlignmentPlan` / :class:`JobAlignment`,
+  the typed scheduler → simulator alignment contract
+- :mod:`repro.engine.pipeline`  — :class:`SchedulingPipeline` with the
+  Allocate → Propose → Score → Align stages (batched candidate scoring)
+- :mod:`repro.engine.scenarios` — :class:`ScenarioSpec` registry building
+  topology + trace + scheduler + simulator from a name
+
+Attributes resolve lazily (PEP 562): ``repro.engine.plan`` is imported by
+low-level modules (``repro.cluster.job``, ``repro.sched.base``) while
+``repro.engine.scenarios`` imports those same packages — eager re-exports
+here would create an import cycle.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # plan
+    "AlignmentPlan": ".plan",
+    "JobAlignment": ".plan",
+    # pipeline
+    "Allocation": ".pipeline",
+    "ProposalSet": ".pipeline",
+    "ScoredProposals": ".pipeline",
+    "PipelineStage": ".pipeline",
+    "AllocateStage": ".pipeline",
+    "ProposeStage": ".pipeline",
+    "ScoreStage": ".pipeline",
+    "AlignStage": ".pipeline",
+    "SchedulingPipeline": ".pipeline",
+    # scenarios
+    "ScenarioSpec": ".scenarios",
+    "BuiltScenario": ".scenarios",
+    "ScenarioRun": ".scenarios",
+    "default_scheduler_factories": ".scenarios",
+    "register_scenario": ".scenarios",
+    "get_scenario": ".scenarios",
+    "list_scenarios": ".scenarios",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module, __name__), name)
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(_EXPORTS))

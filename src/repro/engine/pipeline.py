@@ -1,0 +1,261 @@
+"""Composable scheduling pipeline: Allocate → Propose → Score → Align.
+
+The seed code wired CASSINI's pluggable module into host schedulers through
+one monolithic ``CassiniAugmented.schedule()`` method.  This module
+decomposes that flow into four typed, independently-testable stages:
+
+  ``AllocateStage``  host's own objective: workers per job
+  ``ProposeStage``   up to N candidate placements realizing the allocation
+  ``ScoreStage``     Algorithm 2 lines 3–23: affinity graphs + link scores
+                     (batched through ``score_candidates_batched`` by
+                     default — one packed kernel call per epoch instead of
+                     a per-link scalar loop)
+  ``AlignStage``     Algorithm 1 on the winner → a Decision carrying a
+                     typed :class:`~repro.engine.plan.AlignmentPlan`
+
+Each stage consumes the previous stage's typed output
+(:class:`Allocation`, :class:`ProposalSet`, :class:`ScoredProposals`) and
+the shared :class:`~repro.sched.base.ClusterState`, so a stage can be unit
+tested — or swapped — in isolation.  :class:`SchedulingPipeline` chains
+them; :class:`~repro.sched.cassini_augmented.CassiniAugmented` is now a
+thin wrapper over ``SchedulingPipeline.cassini(host)``.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Mapping, Sequence
+
+from repro.core.circle import CommPattern
+from repro.core.plugin import CassiniModule, Evaluated, PlacementCandidate
+from repro.engine.plan import AlignmentPlan
+from repro.sched.base import ClusterState, Decision, PlacementMap, Scheduler
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.cluster.job import Job
+
+__all__ = [
+    "Allocation",
+    "ProposalSet",
+    "ScoredProposals",
+    "PipelineStage",
+    "AllocateStage",
+    "ProposeStage",
+    "ScoreStage",
+    "AlignStage",
+    "SchedulingPipeline",
+]
+
+
+# ---------------------------------------------------------------------- #
+# typed stage payloads
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Allocation:
+    """Output of Allocate: workers per job under the host's objective."""
+
+    workers: Mapping[str, int]
+
+
+@dataclass(frozen=True)
+class ProposalSet:
+    """Output of Propose: candidate placements realizing the allocation."""
+
+    workers: Mapping[str, int]
+    placements: tuple[PlacementMap, ...]
+
+
+@dataclass(frozen=True)
+class ScoredProposals:
+    """Output of Score: every candidate evaluated by the CASSINI module.
+
+    ``evaluated[i]`` is ``(candidate, affinity_graph | None, link_results)``
+    for ``placements[i]``; ``patterns`` / ``capacities`` are the inputs the
+    module scored against (kept for the Align stage and for inspection).
+    """
+
+    workers: Mapping[str, int]
+    placements: tuple[PlacementMap, ...]
+    evaluated: tuple[Evaluated, ...]
+    patterns: Mapping[str, CommPattern]
+    capacities: Mapping[str, float]
+
+
+# ---------------------------------------------------------------------- #
+# stages
+# ---------------------------------------------------------------------- #
+class PipelineStage(abc.ABC):
+    """One typed stage of the scheduling pipeline."""
+
+    name: str = "stage"
+
+    @abc.abstractmethod
+    def run(self, state: ClusterState, inp):
+        """Transform the previous stage's output (None for the first)."""
+
+
+class AllocateStage(PipelineStage):
+    name = "allocate"
+
+    def __init__(self, host: Scheduler) -> None:
+        self.host = host
+
+    def run(self, state: ClusterState, inp: None = None) -> Allocation:
+        return Allocation(workers=self.host.allocate_workers(state))
+
+
+class ProposeStage(PipelineStage):
+    name = "propose"
+
+    def __init__(self, host: Scheduler, num_candidates: int = 10) -> None:
+        self.host = host
+        self.num_candidates = num_candidates
+
+    def run(self, state: ClusterState, inp: Allocation) -> ProposalSet:
+        cands = self.host.propose(state, dict(inp.workers), self.num_candidates)
+        return ProposalSet(workers=inp.workers, placements=tuple(cands))
+
+
+class ScoreStage(PipelineStage):
+    """Build PlacementCandidates from the cluster topology and score them."""
+
+    name = "score"
+
+    def __init__(self, module: CassiniModule, *, batched: bool = True) -> None:
+        self.module = module
+        self.batched = batched
+
+    # ------------------------------------------------------------- #
+    def build_candidates(
+        self, state: ClusterState, placements: Sequence[PlacementMap]
+    ) -> tuple[list[PlacementCandidate], dict[str, CommPattern], dict[str, float]]:
+        """Translate host placements into the module's topology-free form."""
+        topo = state.topology
+        by_id: dict[str, Job] = {j.job_id: j for j in state.jobs}
+        patterns: dict[str, CommPattern] = {}
+        workers_seen: dict[str, int] = {}
+        capacities: dict[str, float] = {}
+        candidates: list[PlacementCandidate] = []
+        for pl in placements:
+            job_links: dict[str, list[str]] = {}
+            for jid, servers in pl.items():
+                links = topo.job_links(servers)
+                job_links[jid] = [l.name for l in links]
+                for l in links:
+                    capacities[l.name] = l.capacity_gbps
+                if jid not in patterns:
+                    patterns[jid] = by_id[jid].pattern(num_workers=len(servers))
+                    workers_seen[jid] = len(servers)
+                elif workers_seen[jid] != len(servers):
+                    # CASSINI scores one communication pattern per job across
+                    # all candidates (paper §4.2: candidates are equivalent
+                    # under the host's objective).  A proposal set that varies
+                    # a job's worker count would be silently mis-scored
+                    # against a stale pattern — reject it loudly instead.
+                    raise ValueError(
+                        f"candidate placements disagree on worker count for "
+                        f"{jid!r} ({workers_seen[jid]} vs {len(servers)}); "
+                        f"all candidates must realize the same allocation"
+                    )
+            candidates.append(PlacementCandidate(job_links=job_links, meta=pl))
+        return candidates, patterns, capacities
+
+    def run(self, state: ClusterState, inp: ProposalSet) -> ScoredProposals:
+        candidates, patterns, capacities = self.build_candidates(
+            state, inp.placements
+        )
+        if not candidates:
+            evaluated: tuple[Evaluated, ...] = ()
+        elif self.batched:
+            evaluated = tuple(
+                self.module.score_candidates_batched(candidates, patterns, capacities)
+            )
+        else:
+            evaluated = tuple(
+                self.module.score_candidates(candidates, patterns, capacities)
+            )
+        return ScoredProposals(
+            workers=inp.workers,
+            placements=inp.placements,
+            evaluated=evaluated,
+            patterns=patterns,
+            capacities=capacities,
+        )
+
+
+class AlignStage(PipelineStage):
+    """Algorithm 1 on the top candidate → Decision with an AlignmentPlan."""
+
+    name = "align"
+
+    def __init__(self, module: CassiniModule, *, pace_threshold: float = 0.9) -> None:
+        self.module = module
+        self.pace_threshold = pace_threshold
+
+    def run(self, state: ClusterState, inp: ScoredProposals) -> Decision:
+        if not inp.evaluated:
+            return Decision(placements={})
+        cassini = self.module.align(inp.evaluated)
+        chosen: PlacementMap = cassini.top_placement.meta  # the host's map
+        plan = AlignmentPlan(
+            time_shifts_ms=dict(cassini.time_shifts_ms),
+            paced_periods_ms=dict(cassini.paced_periods_ms),
+            job_min_score=dict(cassini.job_min_score),
+            link_scores={
+                f"{l}": s for l, s in cassini.top_placement.link_scores.items()
+            },
+            pace_threshold=self.pace_threshold,
+            num_candidates=len(inp.placements),
+        )
+        return Decision(
+            placements=chosen,
+            time_shifts_ms=dict(cassini.time_shifts_ms),
+            compat_score=cassini.top_placement.score,
+            plan=plan,
+        )
+
+
+# ---------------------------------------------------------------------- #
+@dataclass
+class SchedulingPipeline:
+    """Chain of typed stages ending in a Decision."""
+
+    stages: tuple[PipelineStage, ...]
+
+    def schedule(self, state: ClusterState) -> Decision:
+        out = None
+        for stage in self.stages:
+            out = stage.run(state, out)
+        if not isinstance(out, Decision):
+            raise TypeError(
+                f"pipeline must end in a Decision, got {type(out).__name__} "
+                f"from stage {self.stages[-1].name!r}"
+            )
+        return out
+
+    # ------------------------------------------------------------- #
+    @classmethod
+    def cassini(
+        cls,
+        host: Scheduler,
+        *,
+        num_candidates: int = 10,
+        module: CassiniModule | None = None,
+        pace_threshold: float = 0.9,
+        batched: bool = True,
+        **module_kw,
+    ) -> "SchedulingPipeline":
+        """The paper's pipeline: host allocation/proposals + CASSINI
+        scoring and alignment.  ``module_kw`` (precision_deg, quantum_ms,
+        seed, …) configure a fresh :class:`CassiniModule` when ``module``
+        is not given."""
+        module = module or CassiniModule(**module_kw)
+        return cls(
+            stages=(
+                AllocateStage(host),
+                ProposeStage(host, num_candidates),
+                ScoreStage(module, batched=batched),
+                AlignStage(module, pace_threshold=pace_threshold),
+            )
+        )

@@ -1,0 +1,86 @@
+"""Typed alignment payload flowing from the scheduler to the simulator.
+
+The seed code smuggled CASSINI's per-job alignment state through a
+stringly-typed ``Decision.meta`` dict (``align_ok``, ``paced_ms``) that
+:class:`~repro.cluster.simulator.ClusterSimulator` had to know how to
+unpack.  :class:`AlignmentPlan` replaces that contract: the Align stage of
+the scheduling pipeline emits one typed plan per decision, the simulator
+asks it for a per-job :class:`JobAlignment` directive, and the fluid
+network model consumes the directive straight off the job — no dict keys
+anywhere along the path.
+
+This module is dependency-free on purpose (no imports from ``repro.sched``
+or ``repro.cluster``): every layer of the stack can import it without
+creating a cycle.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Hashable, Mapping
+
+__all__ = ["JobAlignment", "AlignmentPlan"]
+
+JobId = Hashable
+
+
+@dataclass(frozen=True)
+class JobAlignment:
+    """Per-job alignment directive (what one job's workers must do).
+
+    Attributes:
+      shift_ms:        cumulative target time-shift (Algorithm 1 output);
+                       workers realize the *delta* against what they have
+                       already applied.
+      hold:            arm the isochronous pacing agent (§4.2 step 3, §5.7).
+                       Only set when every contended link of the job scored
+                       at least the plan's ``pace_threshold`` — holding the
+                       grid on a sub-interleavable link burns time on
+                       re-alignment.
+      paced_period_ms: the grid period the agent paces at (the optimizer's
+                       quantized iteration time); None when not paced.
+    """
+
+    shift_ms: float = 0.0
+    hold: bool = False
+    paced_period_ms: float | None = None
+
+
+@dataclass(frozen=True)
+class AlignmentPlan:
+    """Typed output of the Align stage for one scheduling decision.
+
+    ``time_shifts_ms`` are the unique per-job shifts from Algorithm 1;
+    ``job_min_score`` is each job's minimum compatibility score across its
+    contended links (gates pacing against ``pace_threshold``);
+    ``paced_periods_ms`` the per-job isochronous grid periods;
+    ``link_scores`` the winning candidate's per-link compatibility scores
+    (diagnostics); ``num_candidates`` how many placements were scored.
+    """
+
+    time_shifts_ms: Mapping[JobId, float] = field(default_factory=dict)
+    paced_periods_ms: Mapping[JobId, float] = field(default_factory=dict)
+    job_min_score: Mapping[JobId, float] = field(default_factory=dict)
+    link_scores: Mapping[str, float] = field(default_factory=dict)
+    pace_threshold: float = 0.9
+    num_candidates: int = 1
+
+    # -------------------------------------------------------------- #
+    def align_ok(self, job_id: JobId) -> bool:
+        """Should ``job_id`` hold its shift on the isochronous grid?"""
+        return (
+            job_id in self.time_shifts_ms
+            and self.job_min_score.get(job_id, 1.0) >= self.pace_threshold
+        )
+
+    def directive_for(self, job_id: JobId) -> JobAlignment | None:
+        """The job's directive, or None when the plan has no shift for it
+        (job uncontended this epoch — keep whatever shift it already has)."""
+        shift = self.time_shifts_ms.get(job_id)
+        if shift is None:
+            return None
+        return JobAlignment(
+            shift_ms=float(shift),
+            hold=self.align_ok(job_id),
+            paced_period_ms=self.paced_periods_ms.get(job_id),
+        )

@@ -1,0 +1,294 @@
+"""Declarative scenario registry: topology + trace + scheduler + simulator.
+
+Every benchmark and example in the seed rebuilt the same experiment by hand
+— construct a topology, sample a trace, instantiate a scheduler, wire a
+simulator, pick an horizon.  A :class:`ScenarioSpec` captures that recipe
+declaratively; the registry maps a name to a spec so a driver is three
+lines:
+
+    from repro.engine import get_scenario
+    run = get_scenario("dynamic-burst").run("th+cassini")
+    print(run.metrics.summary())
+
+Adding a new workload (trace × topology × scheduler set) is one
+``register_scenario`` call — not a new copy-pasted driver file.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Sequence
+
+from repro.cluster import (
+    ClusterSimulator,
+    Metrics,
+    Topology,
+    dynamic_trace,
+    ideal_metrics,
+    poisson_trace,
+    snapshot_trace,
+)
+from repro.cluster.job import Job
+from repro.sched import (
+    CassiniAugmented,
+    PolluxScheduler,
+    RandomScheduler,
+    ThemisScheduler,
+)
+from repro.sched.base import Scheduler
+from repro.sched.fixed import FixedPlacementScheduler
+
+__all__ = [
+    "ScenarioSpec",
+    "BuiltScenario",
+    "ScenarioRun",
+    "default_scheduler_factories",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
+]
+
+SchedulerFactory = Callable[[], Scheduler]
+
+
+def default_scheduler_factories() -> dict[str, SchedulerFactory]:
+    """The paper's scheduler line-up, shared by most scenarios."""
+    return {
+        "themis": lambda: ThemisScheduler(),
+        "th+cassini": lambda: CassiniAugmented(ThemisScheduler()),
+        "pollux": lambda: PolluxScheduler(),
+        "po+cassini": lambda: CassiniAugmented(PolluxScheduler()),
+        "random": lambda: RandomScheduler(),
+    }
+
+
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class BuiltScenario:
+    """A scenario instantiated for one scheduler: ready to ``sim.run(jobs)``."""
+
+    spec: "ScenarioSpec"
+    topology: Topology
+    jobs: list[Job]
+    scheduler: Scheduler
+    simulator: ClusterSimulator
+
+
+@dataclass(frozen=True)
+class ScenarioRun:
+    """Result of one scenario × scheduler execution."""
+
+    spec: "ScenarioSpec"
+    scheduler_name: str
+    metrics: Metrics
+    wall_s: float
+    simulator: ClusterSimulator
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """Declarative experiment: how to build topology, trace and scheduler.
+
+    ``schedulers`` maps scheduler names to factories; scenarios that only
+    make sense with specific schedulers (e.g. fixed-placement snapshots)
+    override it, everything else shares
+    :func:`default_scheduler_factories`.
+    """
+
+    name: str
+    description: str
+    topology: Callable[[], Topology]
+    trace: Callable[[Topology], list[Job]]
+    schedulers: Mapping[str, SchedulerFactory] = field(
+        default_factory=default_scheduler_factories
+    )
+    epoch_ms: float = 300_000.0
+    compute_jitter: float = 0.005
+    horizon_ms: float = 7_200_000.0
+    sim_seed: int = 0
+
+    # ------------------------------------------------------------- #
+    def scheduler_names(self) -> tuple[str, ...]:
+        return tuple(self.schedulers)
+
+    def make_scheduler(self, name: str) -> Scheduler:
+        try:
+            return self.schedulers[name]()
+        except KeyError:
+            raise KeyError(
+                f"scenario {self.name!r} has no scheduler {name!r}; "
+                f"available: {sorted(self.schedulers)}"
+            ) from None
+
+    def build(self, scheduler: str | Scheduler) -> BuiltScenario:
+        """Instantiate topology, trace, scheduler and simulator."""
+        topo = self.topology()
+        sched = (
+            scheduler
+            if isinstance(scheduler, Scheduler)
+            else self.make_scheduler(scheduler)
+        )
+        sim = ClusterSimulator(
+            topo,
+            sched,
+            epoch_ms=self.epoch_ms,
+            compute_jitter=self.compute_jitter,
+            seed=self.sim_seed,
+        )
+        return BuiltScenario(
+            spec=self, topology=topo, jobs=self.trace(topo), scheduler=sched,
+            simulator=sim,
+        )
+
+    def run(
+        self, scheduler: str | Scheduler, *, horizon_ms: float | None = None
+    ) -> ScenarioRun:
+        """Build and simulate to the horizon; returns metrics + wall time."""
+        built = self.build(scheduler)
+        t0 = time.time()
+        metrics = built.simulator.run(
+            built.jobs,
+            horizon_ms=self.horizon_ms if horizon_ms is None else horizon_ms,
+        )
+        name = scheduler if isinstance(scheduler, str) else scheduler.name
+        return ScenarioRun(
+            spec=self,
+            scheduler_name=name,
+            metrics=metrics,
+            wall_s=time.time() - t0,
+            simulator=built.simulator,
+        )
+
+    def ideal(self) -> Metrics:
+        """Dedicated-cluster reference metrics for this scenario's trace."""
+        topo = self.topology()
+        return ideal_metrics(topo, self.trace(topo))
+
+
+# ---------------------------------------------------------------------- #
+# registry
+# ---------------------------------------------------------------------- #
+_REGISTRY: dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(spec: ScenarioSpec, *, replace_existing: bool = False) -> ScenarioSpec:
+    if spec.name in _REGISTRY and not replace_existing:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_scenarios() -> dict[str, str]:
+    """name → one-line description of every registered scenario."""
+    return {name: spec.description for name, spec in sorted(_REGISTRY.items())}
+
+
+# ---------------------------------------------------------------------- #
+# built-in scenarios (the paper's figures as registry entries)
+# ---------------------------------------------------------------------- #
+_FIG2_PLACEMENTS = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+
+
+def _fig2_trace(_: Topology, *, iters: int = 500) -> list[Job]:
+    return snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=iters)
+
+
+register_scenario(ScenarioSpec(
+    name="fig2-interleave",
+    description="Fig. 2: two VGG19 jobs pinned onto one uplink — fair-share "
+                "DCQCN vs a CASSINI time-shift",
+    topology=Topology.paper_testbed,
+    trace=_fig2_trace,
+    schedulers={
+        "fair-share": lambda: FixedPlacementScheduler(_FIG2_PLACEMENTS),
+        "cassini": lambda: CassiniAugmented(
+            FixedPlacementScheduler(_FIG2_PLACEMENTS), num_candidates=1
+        ),
+    },
+    compute_jitter=0.0,
+))
+
+
+def _poisson_paper_trace(topo: Topology, *, seed: int = 7) -> list[Job]:
+    return poisson_trace(
+        topo, load=0.95, num_jobs=16, seed=seed, min_iters=150, max_iters=400,
+        models=["vgg16", "vgg19", "wideresnet101", "resnet50", "bert",
+                "roberta", "xlm", "gpt1", "gpt2", "gpt3", "dlrm"],
+    )
+
+
+register_scenario(ScenarioSpec(
+    name="poisson-paper",
+    description="Fig. 8/9: Poisson arrivals at ~0.95 load, 11 paper models, "
+                "all schedulers",
+    topology=Topology.paper_testbed,
+    trace=_poisson_paper_trace,
+))
+
+
+def _burst_trace(
+    topo: Topology,
+    *,
+    base_models: Sequence[str],
+    burst_models: Sequence[str],
+    burst_at_ms: float,
+    workers: int,
+    burst_workers: int,
+    iters: int,
+) -> list[Job]:
+    jobs = dynamic_trace(
+        topo, base_models=tuple(base_models), burst_models=tuple(burst_models),
+        burst_at_ms=burst_at_ms, workers=workers, iters=iters,
+    )
+    for j in jobs:
+        if j.job_id.startswith("burst"):
+            j.num_workers = burst_workers
+    return jobs
+
+
+register_scenario(ScenarioSpec(
+    name="dynamic-burst",
+    description="Fig. 10: DLRM + ResNet50 arrive into a busy fragmented "
+                "cluster (congestion stress test)",
+    topology=Topology.paper_testbed,
+    trace=lambda topo: _burst_trace(
+        topo, base_models=("vgg19", "wideresnet101", "gpt1"),
+        burst_models=("dlrm", "resnet50"), burst_at_ms=90_000.0,
+        workers=7, burst_workers=4, iters=350,
+    ),
+))
+
+
+register_scenario(ScenarioSpec(
+    name="modelpar-burst",
+    description="Fig. 11: all-model-parallel trace (GPT family + DLRM); "
+                "CASSINI must pick the compatible pairings",
+    topology=Topology.paper_testbed,
+    trace=lambda topo: _burst_trace(
+        topo, base_models=("gpt1", "gpt2", "gpt3"),
+        burst_models=("dlrm", "gpt2"), burst_at_ms=120_000.0,
+        workers=7, burst_workers=5, iters=300,
+    ),
+))
+
+
+register_scenario(ScenarioSpec(
+    name="multigpu",
+    description="Fig. 13: 3 racks x 2 servers x 2 GPUs; jobs larger than a "
+                "server still cross the network",
+    topology=lambda: Topology(num_racks=3, servers_per_rack=2, gpus_per_server=2),
+    trace=lambda topo: _burst_trace(
+        topo, base_models=("xlm", "resnet50"), burst_models=("dlrm",),
+        burst_at_ms=60_000.0, workers=5, burst_workers=4, iters=300,
+    ),
+))

@@ -17,6 +17,7 @@ from typing import TYPE_CHECKING, Mapping, Sequence
 if TYPE_CHECKING:  # avoid a runtime cycle with repro.cluster.__init__
     from repro.cluster.job import Job
     from repro.cluster.topology import Topology
+    from repro.engine.plan import AlignmentPlan
 
 __all__ = [
     "ClusterState",
@@ -51,11 +52,18 @@ class ClusterState:
 
 @dataclass
 class Decision:
-    """Scheduling decision for one epoch."""
+    """Scheduling decision for one epoch.
+
+    ``plan`` is the typed alignment payload (time-shifts, pacing periods,
+    per-job min scores) produced by the pipeline's Align stage; plain host
+    schedulers leave it None.  ``meta`` is a free-form debug scratchpad —
+    nothing downstream reads it.
+    """
 
     placements: PlacementMap
     time_shifts_ms: dict[str, float] = field(default_factory=dict)
     compat_score: float = float("nan")
+    plan: AlignmentPlan | None = None
     meta: dict = field(default_factory=dict)
 
 

@@ -4,12 +4,16 @@
 (CASSINI "respects the hyper-parameters decided by Themis"), asks the host
 for up to N candidate placements, scores them with the CASSINI module
 (Algorithm 2) and returns the top placement together with unique per-job
-time-shifts (Algorithm 1)."""
+time-shifts (Algorithm 1).
+
+Since the engine redesign this class is a thin wrapper over
+:class:`repro.engine.SchedulingPipeline`: Allocate and Propose delegate to
+the host, Score runs the batched candidate scoring, Align emits a typed
+:class:`repro.engine.plan.AlignmentPlan` on the returned Decision."""
 
 from __future__ import annotations
 
-from repro.core.circle import CommPattern
-from repro.core.plugin import CassiniModule, PlacementCandidate
+from repro.core.plugin import CassiniModule
 from repro.sched.base import ClusterState, Decision, PlacementMap, Scheduler
 
 __all__ = ["CassiniAugmented"]
@@ -24,6 +28,7 @@ class CassiniAugmented(Scheduler):
         precision_deg: float = 5.0,
         quantum_ms: float = 10.0,
         pace_threshold: float = 0.9,
+        batched: bool = True,
         seed: int = 0,
     ) -> None:
         # pacing (isochronous grid) is only armed for jobs whose every
@@ -34,8 +39,20 @@ class CassiniAugmented(Scheduler):
         self.pace_threshold = pace_threshold
         self.host = host
         self.num_candidates = num_candidates
+        # deferred: repro.engine.pipeline imports repro.sched.base, whose
+        # package init imports this module — a module-level import here
+        # would break `import repro.engine.pipeline` as the first import.
+        from repro.engine.pipeline import SchedulingPipeline
+
         self.module = CassiniModule(
             precision_deg=precision_deg, quantum_ms=quantum_ms, seed=seed
+        )
+        self.pipeline = SchedulingPipeline.cassini(
+            host,
+            num_candidates=num_candidates,
+            module=self.module,
+            pace_threshold=pace_threshold,
+            batched=batched,
         )
         self.name = f"{host.name}+cassini"
 
@@ -50,40 +67,4 @@ class CassiniAugmented(Scheduler):
 
     # -------------------------------------------------------------- #
     def schedule(self, state: ClusterState) -> Decision:
-        workers = self.allocate_workers(state)
-        placements = self.propose(state, workers, self.num_candidates)
-        if not placements:
-            return Decision(placements={})
-
-        topo = state.topology
-        by_id = {j.job_id: j for j in state.running}
-        patterns: dict[str, CommPattern] = {}
-        capacities: dict[str, float] = {}
-        candidates: list[PlacementCandidate] = []
-        for pl in placements:
-            job_links: dict[str, list[str]] = {}
-            for jid, servers in pl.items():
-                links = topo.job_links(servers)
-                job_links[jid] = [l.name for l in links]
-                for l in links:
-                    capacities[l.name] = l.capacity_gbps
-                if jid not in patterns:
-                    patterns[jid] = by_id[jid].pattern(num_workers=len(servers))
-            candidates.append(PlacementCandidate(job_links=job_links, meta=pl))
-
-        decision = self.module.decide(candidates, patterns, capacities)
-        chosen: PlacementMap = decision.top_placement.meta  # the host's map
-        return Decision(
-            placements=chosen,
-            time_shifts_ms=dict(decision.time_shifts_ms),
-            compat_score=decision.top_placement.score,
-            meta={
-                "link_scores": dict(decision.top_placement.link_scores),
-                "num_candidates": len(placements),
-                "paced_ms": dict(decision.paced_periods_ms),
-                "align_ok": {
-                    j: s >= self.pace_threshold
-                    for j, s in decision.job_min_score.items()
-                },
-            },
-        )
+        return self.pipeline.schedule(state)

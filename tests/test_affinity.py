@@ -3,6 +3,7 @@
 import random
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.affinity import AffinityGraph

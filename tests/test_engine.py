@@ -1,0 +1,268 @@
+"""Engine tests: pipeline stages, AlignmentPlan, batched scoring golden
+equivalence, and the scenario registry."""
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterSimulator, Topology, snapshot_trace
+from repro.cluster.job import Job, JobState
+from repro.core.circle import CommPattern, Phase
+from repro.core.compat import find_rotations, find_rotations_batched
+from repro.core.plugin import CassiniModule, PlacementCandidate
+from repro.engine import (
+    AlignmentPlan,
+    JobAlignment,
+    SchedulingPipeline,
+    ScenarioSpec,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+)
+from repro.engine.pipeline import (
+    AlignStage,
+    AllocateStage,
+    Allocation,
+    ProposalSet,
+    ProposeStage,
+    ScoredProposals,
+    ScoreStage,
+)
+from repro.engine.scenarios import _REGISTRY
+from repro.sched import CassiniAugmented, ThemisScheduler
+from repro.sched.base import ClusterState, Decision
+from repro.sched.fixed import FixedPlacementScheduler
+
+
+def _state(topo, n_jobs=5, workers=7):
+    jobs = [
+        Job(job_id=f"j{i}", model=["vgg16", "bert", "gpt1", "resnet50", "dlrm"][i % 5],
+            num_workers=workers, duration_iters=100)
+        for i in range(n_jobs)
+    ]
+    for j in jobs:
+        j.state = JobState.RUNNING
+    return ClusterState(topology=topo, now_ms=0.0, running=jobs, pending=[])
+
+
+def _problems():
+    """A mix of 2-job (batchable) and 3-job (scalar-fallback) link problems."""
+    def pat(it, start_frac, dur_frac, gbps, name):
+        return CommPattern(it, (Phase(start_frac * it, dur_frac * it, gbps),), name)
+
+    out = []
+    for i, it in enumerate((320.0, 280.0, 200.0, 450.0)):
+        out.append((
+            [pat(it, 0.35, 0.4, 45.0, f"a{i}"), pat(it, 0.55, 0.35, 40.0, f"b{i}")],
+            50.0,
+        ))
+    out.append((
+        [pat(300.0, 0.1, 0.3, 40.0, "x"), pat(300.0, 0.4, 0.3, 40.0, "y"),
+         pat(300.0, 0.7, 0.2, 40.0, "z")],
+        50.0,
+    ))
+    out.append(([pat(250.0, 0.2, 0.5, 45.0, "solo")], 50.0))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# batched scoring golden equivalence
+# ---------------------------------------------------------------------- #
+def test_find_rotations_batched_matches_scalar():
+    problems = _problems()
+    scalar = [find_rotations(p, c) for p, c in problems]
+    batched = find_rotations_batched(problems)
+    assert len(batched) == len(scalar)
+    for s, b in zip(scalar, batched):
+        assert b.score == pytest.approx(s.score, abs=1e-9)
+        assert b.shifts_steps == s.shifts_steps
+        assert np.allclose(b.shifts_ms, s.shifts_ms)
+        assert np.allclose(b.paced_periods_ms, s.paced_periods_ms)
+
+
+def test_module_batched_path_matches_scalar_path():
+    def pats():
+        return {
+            "a": CommPattern(320.0, (Phase(160.0, 140.0, 45.0),), "a"),
+            "b": CommPattern(320.0, (Phase(170.0, 130.0, 45.0),), "b"),
+            "c": CommPattern(200.0, (Phase(40.0, 150.0, 45.0),), "c"),
+        }
+
+    caps = {"l1": 50.0, "l2": 50.0}
+
+    def cands():
+        return [
+            PlacementCandidate(job_links={"a": ["l1"], "c": ["l1"], "b": []}),
+            PlacementCandidate(job_links={"a": ["l1"], "b": ["l1"], "c": []}),
+            PlacementCandidate(job_links={"a": ["l1"], "b": ["l1"], "c": ["l2", "l1"]}),
+        ]
+
+    d_scalar = CassiniModule().decide(cands(), pats(), caps, batched=False)
+    d_batched = CassiniModule().decide(cands(), pats(), caps, batched=True)
+    assert [c.score for c in d_batched.candidates] == pytest.approx(
+        [c.score for c in d_scalar.candidates]
+    )
+    assert d_batched.time_shifts_ms == pytest.approx(d_scalar.time_shifts_ms)
+    assert d_batched.paced_periods_ms == pytest.approx(d_scalar.paced_periods_ms)
+    assert d_batched.job_min_score == pytest.approx(d_scalar.job_min_score)
+
+
+def test_batched_path_populates_shared_cache():
+    pats = {
+        "a": CommPattern(320.0, (Phase(160.0, 140.0, 45.0),), "a"),
+        "b": CommPattern(320.0, (Phase(170.0, 130.0, 45.0),), "b"),
+    }
+    mod = CassiniModule()
+    cands = [PlacementCandidate(job_links={"a": ["l1"], "b": ["l1"]})
+             for _ in range(4)]
+    mod.score_candidates_batched(cands, pats, {"l1": 50.0})
+    assert len(mod._link_cache) == 1
+
+
+def test_pipeline_golden_equivalence_with_scalar_schedule():
+    """The batched pipeline reproduces the scalar path's decisions on a
+    fragmented cluster (same placements, same shifts)."""
+    topo = Topology.paper_testbed()
+    d_batched = CassiniAugmented(ThemisScheduler(), num_candidates=8).schedule(
+        _state(topo)
+    )
+    d_scalar = CassiniAugmented(
+        ThemisScheduler(), num_candidates=8, batched=False
+    ).schedule(_state(topo))
+    assert d_batched.placements == d_scalar.placements
+    assert d_batched.compat_score == pytest.approx(d_scalar.compat_score)
+    for jid, t in d_scalar.time_shifts_ms.items():
+        assert d_batched.time_shifts_ms[jid] == pytest.approx(t, abs=1e-6)
+
+
+# ---------------------------------------------------------------------- #
+# stages
+# ---------------------------------------------------------------------- #
+def test_allocate_and_propose_stages_typed_outputs():
+    topo = Topology.paper_testbed()
+    state = _state(topo)
+    host = ThemisScheduler()
+    alloc = AllocateStage(host).run(state)
+    assert isinstance(alloc, Allocation)
+    assert alloc.workers == host.allocate_workers(state)
+    props = ProposeStage(host, num_candidates=6).run(state, alloc)
+    assert isinstance(props, ProposalSet)
+    assert 1 <= len(props.placements) <= 6
+    for pl in props.placements:
+        for jid, servers in pl.items():
+            assert len(servers) == alloc.workers[jid]
+
+
+def test_score_stage_builds_and_scores_candidates():
+    topo = Topology.paper_testbed()
+    state = _state(topo)
+    host = ThemisScheduler()
+    props = ProposeStage(host, 5).run(state, AllocateStage(host).run(state))
+    scored = ScoreStage(CassiniModule()).run(state, props)
+    assert isinstance(scored, ScoredProposals)
+    assert len(scored.evaluated) == len(props.placements)
+    for cand, graph, _ in scored.evaluated:
+        assert cand.discarded_loop or np.isfinite(cand.score)
+    assert set(scored.patterns) <= {j.job_id for j in state.running}
+
+
+def test_score_stage_rejects_mismatched_worker_counts():
+    """CASSINI scores one pattern per job: candidates that disagree on a
+    job's worker count must be rejected, not silently mis-scored."""
+    topo = Topology.paper_testbed()
+    state = _state(topo, n_jobs=1, workers=4)
+    props = ProposalSet(
+        workers={"j0": 2}, placements=({"j0": (0, 6)}, {"j0": (0, 1, 6, 7)})
+    )
+    with pytest.raises(ValueError, match="disagree on worker count"):
+        ScoreStage(CassiniModule()).run(state, props)
+
+
+def test_scenario_run_respects_zero_horizon():
+    run = get_scenario("fig2-interleave").run("fair-share", horizon_ms=0)
+    assert run.metrics.iter_times() == []
+
+
+def test_align_stage_emits_plan_not_meta():
+    topo = Topology.paper_testbed()
+    state = _state(topo)
+    decision = SchedulingPipeline.cassini(ThemisScheduler()).schedule(state)
+    assert isinstance(decision, Decision)
+    assert "align_ok" not in decision.meta and "paced_ms" not in decision.meta
+    plan = decision.plan
+    assert isinstance(plan, AlignmentPlan)
+    assert plan.num_candidates >= 1
+    for jid, shift in plan.time_shifts_ms.items():
+        d = plan.directive_for(jid)
+        assert isinstance(d, JobAlignment)
+        assert d.shift_ms == pytest.approx(shift)
+        assert d.hold == plan.align_ok(jid)
+    assert plan.directive_for("no-such-job") is None
+
+
+def test_empty_cluster_yields_empty_decision():
+    topo = Topology.paper_testbed()
+    state = ClusterState(topology=topo, now_ms=0.0, running=[], pending=[])
+    decision = SchedulingPipeline.cassini(ThemisScheduler()).schedule(state)
+    assert decision.placements == {}
+    assert decision.plan is None or not decision.plan.time_shifts_ms
+
+
+def test_plan_flows_into_job_alignment():
+    """End-to-end: the simulator applies typed directives from the plan."""
+    topo = Topology.paper_testbed()
+    pl = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+    jobs = snapshot_trace([("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=30)
+    sched = CassiniAugmented(FixedPlacementScheduler(pl), num_candidates=1)
+    sim = ClusterSimulator(topo, sched)
+    m = sim.run(jobs, horizon_ms=600_000)
+    _, first = sim.decisions[0]
+    assert isinstance(first.plan, AlignmentPlan)
+    # the contended pair gets shifts + pacing periods in the typed plan
+    assert set(first.plan.time_shifts_ms) == set(pl)
+    assert set(first.plan.paced_periods_ms) == set(pl)
+    shifted = [j for j in m.jobs if j.alignment.shift_ms > 0]
+    assert shifted, "one of the two jobs must carry a non-zero shift"
+    assert all(j.state == JobState.DONE for j in m.jobs)
+
+
+# ---------------------------------------------------------------------- #
+# scenario registry
+# ---------------------------------------------------------------------- #
+def test_builtin_scenarios_registered():
+    names = set(list_scenarios())
+    assert {"fig2-interleave", "poisson-paper", "dynamic-burst",
+            "modelpar-burst", "multigpu"} <= names
+
+
+def test_get_scenario_unknown_name():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("no-such-scenario")
+
+
+def test_scenario_build_wires_everything():
+    built = get_scenario("fig2-interleave").build("cassini")
+    assert built.topology.num_servers == 24
+    assert len(built.jobs) == 2
+    assert built.scheduler.name.endswith("+cassini")
+    assert built.simulator.scheduler is built.scheduler
+    with pytest.raises(KeyError, match="no scheduler"):
+        get_scenario("fig2-interleave").build("themis")
+
+
+def test_register_scenario_roundtrip():
+    spec = ScenarioSpec(
+        name="test-tiny",
+        description="registry round-trip",
+        topology=Topology.paper_testbed,
+        trace=lambda topo: snapshot_trace([("vgg19", 2, 1400)], iters=5),
+        compute_jitter=0.0,
+    )
+    try:
+        register_scenario(spec)
+        assert get_scenario("test-tiny") is spec
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario(spec)
+        run = spec.run("th+cassini", horizon_ms=120_000)
+        assert run.metrics.jobs and run.metrics.jobs[0].iters_done == 5
+    finally:
+        _REGISTRY.pop("test-tiny", None)
