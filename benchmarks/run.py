@@ -67,24 +67,27 @@ def _kernel_bench() -> list[dict]:
 
 def _batched_scoring_bench() -> list[dict]:
     """Batched candidate scoring (``find_rotations_batched``) vs the scalar
-    per-link loop the seed scheduler ran — the Algorithm-2 hot path."""
-    from repro.core.circle import CommPattern, Phase
-    from repro.core.compat import find_rotations, find_rotations_batched
+    per-link loop the seed scheduler ran — the Algorithm-2 hot path.
 
-    from .common import timed
+    Doubles as the CI smoke check for the batched paths: every
+    configuration asserts (via ``BatchStats``) that no problem silently
+    fell back to the scalar search, and the k=3 grid configuration asserts
+    a >1x measured speedup over the scalar loop.
+    """
+    from repro.core.compat import BatchStats, find_rotations, find_rotations_batched
 
-    def problems(n=24):
-        out = []
-        for i in range(n):
-            it = 300.0 + 10.0 * (i % 7)
-            a = CommPattern(it, (Phase(0.35 * it, 0.40 * it, 45.0),), name=f"a{i}")
-            b = CommPattern(it, (Phase(0.55 * it, 0.35 * it, 40.0),), name=f"b{i}")
-            out.append(([a, b], 50.0))
-        return out
+    from .common import scoring_problems, timed
 
+    cases = (
+        # (precision_deg, links, jobs/link, expected batched path, label)
+        (5.0, 24, 2, "grid", "A~72 typical"),
+        (0.5, 24, 2, "grid", "A~720 fine-grid"),
+        (5.0, 12, 3, "grid", "A~72 k=3 product grid"),
+        (0.5, 8, 3, "descent", "A~720 k=3 lockstep descent"),
+    )
     rows = []
-    for deg, label in ((5.0, "A~72 typical"), (0.5, "A~720 fine-grid")):
-        probs = problems()
+    for deg, links, k, path, label in cases:
+        probs = scoring_problems(num_links=links, jobs_per_link=k)
         scalar = lambda: [
             find_rotations(p, c, precision_deg=deg, backend="numpy")
             for p, c in probs
@@ -93,14 +96,36 @@ def _batched_scoring_bench() -> list[dict]:
         batched()  # warm up (jit compile on the pallas path)
         _, us_scalar = timed(scalar)
         _, us_batch = timed(batched)
+        speedup = us_scalar / us_batch
+
+        # CI smoke assertions: the batched path must actually be taken.
+        stats = BatchStats()
+        find_rotations_batched(probs, precision_deg=deg, stats=stats)
+        if stats.scalar_fallbacks:
+            raise RuntimeError(
+                f"{stats.scalar_fallbacks}/{stats.problems} problems fell "
+                f"back to the scalar path at {deg:g}deg k={k}: {stats}"
+            )
+        taken = stats.grid_problems if path == "grid" else stats.descent_problems
+        if taken != len(probs):
+            raise RuntimeError(
+                f"expected all {len(probs)} problems on the batched {path} "
+                f"path at {deg:g}deg k={k}, got {stats}"
+            )
+        if k == 3 and path == "grid" and speedup <= 1.0:
+            raise RuntimeError(
+                f"batched k=3 grid must beat the scalar loop: "
+                f"{speedup:.2f}x (scalar={us_scalar:.0f}us batched={us_batch:.0f}us)"
+            )
         rows.append({
-            "name": f"kernels/score_batched(24x2job,{deg:g}deg)",
+            "name": f"kernels/score_batched({links}x{k}job,{deg:g}deg)",
             "us_per_call": us_batch,
             "derived": (
-                f"scalar_loop={us_scalar:.0f}us speedup={us_scalar/us_batch:.2f}x "
-                f"({label}; batched packs all links into one "
-                f"circle_score call — pallas kernel for A>=512, vectorized "
-                f"numpy below)"
+                f"scalar_loop={us_scalar:.0f}us speedup={speedup:.2f}x "
+                f"({label}; batched {path} path, "
+                f"{stats.grid_rows + stats.descent_rows} rows in "
+                f"{stats.batched_calls} calls — pallas kernel for A>=512, "
+                f"vectorized numpy below)"
             ),
         })
     return rows

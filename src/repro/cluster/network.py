@@ -28,7 +28,7 @@ import math
 import random
 from dataclasses import dataclass, field
 
-from repro.cluster.job import Job
+from repro.cluster.job import Job, JobState
 from repro.cluster.topology import Link, Topology
 from repro.core.circle import CommPattern
 
@@ -212,14 +212,21 @@ class FluidNetworkSim:
         self._execs = new
 
     # -------------------------------------------------------------- #
-    def _allocate(self) -> dict[str, float]:
-        """Max-min-fair rates (Gbps) for jobs currently in a comm segment,
-        respecting per-segment demand caps (progressive filling)."""
-        comm = {
+    def _comm_jobs(self) -> dict[str, _JobExec]:
+        """Jobs currently competing for link bandwidth: in a comm segment,
+        not delayed, and not horizon-expired — a ``JobState.CUTOFF`` job has
+        stopped training and must not consume link share or attract marks."""
+        return {
             jid: ex
             for jid, ex in self._execs.items()
             if ex.kind == "comm" and ex.delay_ms <= _EPS and ex.links
+            and ex.job.state is not JobState.CUTOFF
         }
+
+    def _allocate(self) -> dict[str, float]:
+        """Max-min-fair rates (Gbps) for jobs currently in a comm segment,
+        respecting per-segment demand caps (progressive filling)."""
+        comm = self._comm_jobs()
         rates = {jid: 0.0 for jid in comm}
         if not comm:
             return rates
@@ -265,11 +272,7 @@ class FluidNetworkSim:
 
     def _mark_rates(self) -> dict[str, float]:
         """ECN marks per ms for each job (demand-over-capacity model)."""
-        comm = {
-            jid: ex
-            for jid, ex in self._execs.items()
-            if ex.kind == "comm" and ex.delay_ms <= _EPS and ex.links
-        }
+        comm = self._comm_jobs()
         demand: dict[str, float] = {}
         users: dict[str, list[str]] = {}
         caps: dict[str, float] = {}
@@ -297,8 +300,6 @@ class FluidNetworkSim:
         the cluster simulator can react to the departure immediately); the
         finished jobs are returned with ``finish_ms`` / ``state`` set.
         """
-        from repro.cluster.job import JobState
-
         finished: list[Job] = []
         events = 0
         while self.now_ms < until_ms - _EPS and self._execs:
@@ -307,9 +308,13 @@ class FluidNetworkSim:
                 raise RuntimeError("fluid sim exceeded max_events")
             rates = self._allocate()
             marks = self._mark_rates()
-            # time to next event for every job
+            # time to next event for every job; CUTOFF jobs are frozen —
+            # they neither bound dt nor make progress (a cutoff job must
+            # not finish iterations, flip to DONE, or consume link share)
             dt = until_ms - self.now_ms
             for jid, ex in self._execs.items():
+                if ex.job.state is JobState.CUTOFF:
+                    continue
                 if ex.delay_ms > _EPS:
                     dt = min(dt, ex.delay_ms)
                 elif ex.kind == "compute" or not ex.links:
@@ -322,6 +327,8 @@ class FluidNetworkSim:
             self.now_ms += dt
             # progress everyone by dt (rates constant over the interval)
             for jid, ex in list(self._execs.items()):
+                if ex.job.state is JobState.CUTOFF:
+                    continue
                 if ex.delay_ms > _EPS:
                     ex.delay_ms = max(0.0, ex.delay_ms - dt)
                     continue

@@ -56,6 +56,10 @@ class Topology:
     oversubscription: float = 2.0
     num_spines: int = 0  # 0 → derived from the oversubscription ratio
     gpus_per_server: int = 1
+    # Heterogeneous fabrics: per-rack NIC rate overriding ``nic_gbps``
+    # (one entry per rack; a rack's host links *and* uplinks run at its
+    # rate, modelling mixed 50/100 Gbps NIC generations side by side).
+    rack_nic_gbps: tuple[float, ...] | None = None
 
     links: dict[str, Link] = field(default_factory=dict, repr=False)
 
@@ -67,13 +71,27 @@ class Topology:
             self.num_spines = max(
                 1, round(self.servers_per_rack / self.oversubscription)
             )
+        if self.rack_nic_gbps is not None:
+            self.rack_nic_gbps = tuple(self.rack_nic_gbps)
+            if len(self.rack_nic_gbps) != self.num_racks:
+                raise ValueError(
+                    f"rack_nic_gbps needs one rate per rack: got "
+                    f"{len(self.rack_nic_gbps)} for {self.num_racks} racks"
+                )
         for r in range(self.num_racks):
+            nic = self.rack_nic(r)
             for s in range(self.servers_per_rack):
                 name = f"host:r{r}s{s}"
-                self.links[name] = Link(name, self.nic_gbps)
+                self.links[name] = Link(name, nic)
             for sp in range(self.num_spines):
                 name = f"up:r{r}-sp{sp}"
-                self.links[name] = Link(name, self.nic_gbps)
+                self.links[name] = Link(name, nic)
+
+    def rack_nic(self, rack: int) -> float:
+        """NIC rate of one rack (uniform unless ``rack_nic_gbps`` is set)."""
+        if self.rack_nic_gbps is not None:
+            return self.rack_nic_gbps[rack]
+        return self.nic_gbps
 
     # -------------------------------------------------------------- #
     @classmethod

@@ -9,7 +9,13 @@
 
 from .affinity import AffinityGraph, bfs_affinity_time_shifts
 from .circle import CommPattern, Phase, UnifiedCircle, unified_perimeter
-from .compat import CompatResult, compatibility_score, find_rotations
+from .compat import (
+    BatchStats,
+    CompatResult,
+    compatibility_score,
+    find_rotations,
+    find_rotations_batched,
+)
 from .plugin import CassiniDecision, CassiniModule, PlacementCandidate
 from .timeshift import DriftAdjuster, rotation_to_time_shift
 
@@ -20,9 +26,11 @@ __all__ = [
     "Phase",
     "UnifiedCircle",
     "unified_perimeter",
+    "BatchStats",
     "CompatResult",
     "compatibility_score",
     "find_rotations",
+    "find_rotations_batched",
     "CassiniDecision",
     "CassiniModule",
     "PlacementCandidate",

@@ -22,6 +22,7 @@ demand" — is the compute hot-spot and is implemented three ways:
 
 from __future__ import annotations
 
+import functools
 import itertools
 from dataclasses import dataclass
 from typing import Sequence
@@ -32,6 +33,7 @@ from .circle import CommPattern, UnifiedCircle, DEFAULT_PRECISION_DEG, DEFAULT_Q
 
 __all__ = [
     "CompatResult",
+    "BatchStats",
     "excess",
     "score_for_shifts",
     "score_all_shifts",
@@ -42,9 +44,47 @@ __all__ = [
 
 # Above this many jobs on one link, fall back from the exact product grid to
 # coordinate descent (the paper's links carry 2–4 jobs in practice).
-EXACT_SEARCH_MAX_JOBS = 3
+MAX_EXACT_JOBS = 3
+EXACT_SEARCH_MAX_JOBS = MAX_EXACT_JOBS  # back-compat alias
+# The exact product grid is only affordable while the number of admissible
+# shift combinations of jobs 1..k−1 stays below this.
+EXACT_GRID_LIMIT = 20_000
+# Batched grid evaluation materializes base-demand rows in chunks of at most
+# this many rows, so a full 20k-combination grid never holds more than
+# chunk × A floats at once.
+GRID_CHUNK_ROWS = 4096
+# The vectorized numpy excess evaluation builds an (Lc, A, A) intermediate
+# per row slice; keep it around this many elements so the temporaries stay
+# cache-resident — evaluating a full 20k-row batch in one numpy expression
+# is 5-6x *slower* (measured) because every pass streams from DRAM.
+_NUMPY_CHUNK_ELEMS = 1_000_000
 _COORD_DESCENT_SWEEPS = 4
 _COORD_DESCENT_SEEDS = 3
+
+
+@dataclass
+class BatchStats:
+    """Telemetry of one :func:`find_rotations_batched` call.
+
+    Every problem is counted exactly once: single-job problems are
+    ``trivial``, problems solved on the batched exact product grid are
+    ``grid_problems`` and problems solved by the lockstep-batched coordinate
+    descent are ``descent_problems`` — so ``scalar_fallbacks`` is zero by
+    construction, and benchmarks/CI assert it stays that way.
+    """
+
+    problems: int = 0
+    trivial: int = 0            # single-job links (no search needed)
+    grid_problems: int = 0      # solved on the batched exact product grid
+    grid_rows: int = 0          # product-grid rows evaluated batched
+    descent_problems: int = 0   # solved by batched coordinate descent
+    descent_rows: int = 0       # rows evaluated across all descent steps
+    batched_calls: int = 0      # number of _batched_excess invocations
+
+    @property
+    def scalar_fallbacks(self) -> int:
+        """Problems that did not take a batched (or trivial) path."""
+        return self.problems - self.trivial - self.grid_problems - self.descent_problems
 
 
 @dataclass(frozen=True)
@@ -153,51 +193,72 @@ def find_rotations_batched(
     backend: str = "auto",
     seed: int = 0,
     dilate_steps: int = 1,
+    stats: BatchStats | None = None,
 ) -> list[CompatResult]:
     """Solve many independent link-level Table-1 problems in one pass.
 
     ``problems`` is a sequence of ``(patterns, capacity_gbps)`` pairs — one
     per contended link (across *all* placement candidates of a scheduling
-    epoch).  Two-job links — the overwhelmingly common case in the paper's
-    traces — reduce to a single "score every rotation of job 1 against job
-    0" row; those rows are grouped by (angle count, capacity), packed into
-    ``(L, A)`` arrays and evaluated in one batched :func:`_batched_excess`
-    call (Pallas ``circle_score`` kernel on large grids, vectorized numpy
-    otherwise) instead of ``L`` separate scalar searches.  Links with other
-    job counts (or any exotic shape) fall back to the scalar
-    :func:`find_rotations` path, so the result is always defined.
+    epoch).  Every problem takes a batched path:
 
-    Returns one :class:`CompatResult` per problem, in input order, identical
-    to what per-problem ``find_rotations`` calls would produce (same circle
-    construction, same argmin tie-breaking, same normalization).
+      * ``k ≤ MAX_EXACT_JOBS`` jobs whose admissible shift combinations fit
+        :data:`EXACT_GRID_LIMIT` — the scalar path's exact-search regime —
+        enumerate the (k−1)-dimensional shift product grid as rows of a
+        ``(B, A)`` base-demand array (jobs 1..k−2 baked into each row, the
+        last job scored for all its rotations at once).  Rows from *all*
+        such problems are grouped by angle count (capacities ride along
+        per-row), chunked to :data:`GRID_CHUNK_ROWS`, and evaluated through
+        :func:`_batched_excess` (Pallas ``circle_score`` kernel on large
+        grids, vectorized numpy otherwise).
+
+      * everything above the exact-grid cutoff runs the same seeded
+        coordinate descent as the scalar path, but *lockstep-batched*: at
+        each (trial, sweep, job) step the "score every rotation of the job
+        being optimized" rows of all still-active problems are packed into
+        one batched call instead of falling back to per-problem loops.
+
+    Pass a :class:`BatchStats` to observe which path each problem took
+    (benchmarks assert ``scalar_fallbacks == 0``).
+
+    Returns one :class:`CompatResult` per problem, in input order,
+    bit-identical to what per-problem ``find_rotations`` calls would produce
+    (same circle construction, same argmin tie-breaking and improvement
+    slack, same normalization).
     """
+    stats = stats if stats is not None else BatchStats()
+    stats.problems += len(problems)
     results: list[CompatResult | None] = [None] * len(problems)
-    # rows of the batchable 2-job case, grouped by (num_angles, capacity)
-    groups: dict[tuple[int, float], list[tuple[int, UnifiedCircle]]] = {}
+    grid_probs: list[_GridProblem] = []
+    descent_probs: list[_DescentState] = []
     for i, (patterns, capacity) in enumerate(problems):
         circle = _build_circle(
             patterns, precision_deg=precision_deg, quantum_ms=quantum_ms,
             dilate_steps=dilate_steps,
         )
-        # batch only where the scalar path would also search the full grid
-        # (same prod(grids) <= 20k cutoff as _search), so both paths stay
-        # result-identical at any precision.
-        if len(patterns) == 2 and circle.shift_grid(1) <= 20_000:
-            groups.setdefault((circle.num_angles, float(capacity)), []).append(
-                (i, circle)
-            )
+        n = len(circle.patterns)
+        grids = [circle.shift_grid(j) for j in range(n)]
+        # Route exactly as the scalar _search does, so both paths stay
+        # result-identical at any precision / job count.
+        if n == 1:
+            stats.trivial += 1
+            results[i] = _finalize(circle, (0,), capacity)
+        elif n <= MAX_EXACT_JOBS and int(np.prod(grids[1:])) <= EXACT_GRID_LIMIT:
+            grid_probs.append(_GridProblem(i, circle, grids, float(capacity)))
         else:
-            shifts = _search(circle, capacity, backend=backend, seed=seed)
-            results[i] = _finalize(circle, shifts, capacity)
+            descent_probs.append(
+                _DescentState(i, circle, grids, float(capacity), seed)
+            )
 
-    for (_, capacity), rows in groups.items():
-        base = np.stack([c.bw[0] for _, c in rows])
-        cand = np.stack([c.bw[1] for _, c in rows])
-        ex = _batched_excess(base, cand, capacity, backend=backend)
-        for (i, circle), row in zip(rows, ex):
-            # Eq. 4 bound: only the job's distinct rotations are admissible
-            s1 = int(np.argmin(row[: circle.shift_grid(1)]))
-            results[i] = _finalize(circle, (0, s1), capacity)
+    if grid_probs:
+        _solve_grids_batched(grid_probs, backend, stats)
+        stats.grid_problems += len(grid_probs)
+        for gp in grid_probs:
+            results[gp.index] = _finalize(gp.circle, gp.best, gp.capacity)
+    if descent_probs:
+        _solve_descent_batched(descent_probs, backend, stats)
+        stats.descent_problems += len(descent_probs)
+        for dp in descent_probs:
+            results[dp.index] = _finalize(dp.circle, dp.best, dp.capacity)
     return [r for r in results if r is not None]
 
 
@@ -232,7 +293,7 @@ def _search(
     grids = [circle.shift_grid(j) for j in range(n)]
     if n == 1:
         return (0,)
-    if n <= EXACT_SEARCH_MAX_JOBS and int(np.prod([g for g in grids[1:]])) <= 20_000:
+    if n <= MAX_EXACT_JOBS and int(np.prod([g for g in grids[1:]])) <= EXACT_GRID_LIMIT:
         return _exact_search(circle, grids, capacity_gbps, backend)
     return _coordinate_descent(circle, grids, capacity_gbps, backend, seed)
 
@@ -262,11 +323,20 @@ def _finalize(
 
 
 def _batched_excess(
-    base: np.ndarray, cand: np.ndarray, capacity: float, *, backend: str = "auto"
+    base: np.ndarray,
+    cand: np.ndarray,
+    capacity: float | np.ndarray,
+    *,
+    backend: str = "auto",
 ) -> np.ndarray:
     """Excess sums for every rotation of ``L`` independent rows at once.
 
-    ``out[l, s] = Σ_α max(0, base[l, α] + cand[l, (α − s) mod A] − C)``.
+    ``out[l, s] = Σ_α max(0, base[l, α] + cand[l, (α − s) mod A] − C_l)``.
+
+    ``capacity`` is a scalar shared by every row or an ``(L,)`` array of
+    per-row capacities — per-row capacities are what let rows from links
+    with *different* capacities share one batched call (only the angle
+    count must match).
 
     ``backend="auto"`` routes large angle grids to the Pallas
     ``circle_score`` kernel (one batched call over all rows — the TPU
@@ -276,18 +346,32 @@ def _batched_excess(
     """
     base = np.asarray(base, dtype=np.float32)
     cand = np.asarray(cand, dtype=np.float32)
-    a = base.shape[-1]
+    l, a = base.shape
+    cap = np.asarray(capacity, dtype=np.float32)
     if backend == "pallas" or (backend == "auto" and a >= 512):
         try:
             from repro.kernels.circle_score import ops as _cs_ops
 
-            return np.asarray(_cs_ops.circle_score(base, cand, capacity))
+            return np.asarray(_cs_ops.circle_score(base, cand, cap))
         except Exception:  # pragma: no cover - fallback if pallas unavailable
             pass
-    idx = (np.arange(a)[None, :] - np.arange(a)[:, None]) % a  # (S, A)
-    rolled = cand[:, idx]                                      # (L, S, A)
-    total = base[:, None, :] + rolled
-    return np.maximum(total - capacity, 0.0).sum(axis=-1)
+    idx = _roll_index(a)                                       # (S, A)
+    cap_rows = np.broadcast_to(cap.reshape(-1, 1, 1), (l, 1, 1))
+    out = np.empty((l, a), dtype=np.float32)
+    # chunk rows so the (Lc, A, A) rolled/total temporaries stay cache-sized
+    # regardless of batch size (see _NUMPY_CHUNK_ELEMS)
+    step = max(1, _NUMPY_CHUNK_ELEMS // (a * a))
+    for i in range(0, l, step):
+        rolled = cand[i:i + step][:, idx]                      # (Lc, S, A)
+        total = base[i:i + step, None, :] + rolled
+        out[i:i + step] = np.maximum(total - cap_rows[i:i + step], 0.0).sum(axis=-1)
+    return out
+
+
+@functools.lru_cache(maxsize=16)
+def _roll_index(a: int) -> np.ndarray:
+    """``idx[s, α] = (α − s) mod A`` — the gather realizing all A rolls."""
+    return (np.arange(a)[None, :] - np.arange(a)[:, None]) % a
 
 
 def compatibility_score(
@@ -374,6 +458,219 @@ def _coordinate_descent(
         if best_excess == 0.0:
             break
     return best
+
+
+# ---------------------------------------------------------------------- #
+# batched search (k-job product grids + lockstep coordinate descent)
+# ---------------------------------------------------------------------- #
+class _GridProblem:
+    """One ≤ MAX_EXACT_JOBS link problem destined for the batched exact grid.
+
+    Mirrors :func:`_exact_search` exactly: job 0 is pinned at shift 0, jobs
+    1..k−2 span the outer product grid (one base-demand row per
+    combination), and the last job is scored for *all* its admissible
+    rotations within each row.  ``update`` replays the scalar loop's
+    acceptance rule (strict improvement with 1e-12 slack, rows visited in
+    ``itertools.product`` order), so the arg-result is bit-identical.
+    """
+
+    __slots__ = ("index", "circle", "grids", "capacity", "last",
+                 "best", "best_excess")
+
+    def __init__(
+        self, index: int, circle: UnifiedCircle, grids: Sequence[int], capacity: float
+    ) -> None:
+        self.index = index
+        self.circle = circle
+        self.grids = list(grids)
+        self.capacity = capacity
+        self.last = len(grids) - 1
+        self.best: tuple[int, ...] = (0,) * len(grids)
+        self.best_excess = float(np.inf)
+
+    def iter_rows(self):
+        """Yield ``(mid_shifts, base_row)`` in scalar product order.
+
+        ``base_row`` is accumulated in float64 in the same job order as the
+        scalar search (bw[0] + rotated(1) + …) so the float32 cast inside
+        :func:`_batched_excess` sees identical inputs.
+        """
+        base0 = self.circle.bw[0]
+        outer = [range(g) for g in self.grids[1:self.last]]
+        for mid in itertools.product(*outer):
+            if self.best_excess == 0.0:
+                return  # fully compatible; nothing can beat zero excess
+            base = base0.copy()
+            for j, s in enumerate(mid, start=1):
+                base += self.circle.rotated(j, s)
+            yield mid, base
+
+    def update(self, mid: tuple[int, ...], row: np.ndarray) -> None:
+        ex = row[: self.grids[self.last]]  # Eq. 4 bound
+        s_last = int(np.argmin(ex))
+        if float(ex[s_last]) < self.best_excess - 1e-12:
+            self.best_excess = float(ex[s_last])
+            self.best = (0, *mid, s_last)
+
+
+def _solve_grids_batched(
+    probs: Sequence[_GridProblem], backend: str, stats: BatchStats
+) -> None:
+    """Evaluate every problem's product grid through chunked batched calls.
+
+    Rows are grouped by angle count only — per-row capacities let links with
+    different capacities share a call — and flushed every
+    :data:`GRID_CHUNK_ROWS` rows so memory stays bounded at any grid size.
+    Within one problem rows arrive in product order, so the sequential
+    ``update`` scan reproduces the scalar loop's tie-breaking; flushing
+    between chunks also lets ``iter_rows`` early-out the moment a problem
+    reaches zero excess, exactly like the scalar break.
+    """
+    by_angles: dict[int, list[_GridProblem]] = {}
+    for p in probs:
+        by_angles.setdefault(p.circle.num_angles, []).append(p)
+
+    for group in by_angles.values():
+        pending: list[tuple[_GridProblem, tuple[int, ...], np.ndarray]] = []
+
+        def flush() -> None:
+            if not pending:
+                return
+            base = np.stack([row for _, _, row in pending])
+            cand = np.stack([p.circle.bw[p.last] for p, _, _ in pending])
+            caps = np.array([p.capacity for p, _, _ in pending], dtype=np.float32)
+            ex = _batched_excess(base, cand, caps, backend=backend)
+            stats.batched_calls += 1
+            stats.grid_rows += len(pending)
+            for (p, mid, _), row in zip(pending, ex):
+                p.update(mid, row)
+            pending.clear()
+
+        for p in group:
+            for mid, base_row in p.iter_rows():
+                pending.append((p, mid, base_row))
+                if len(pending) >= GRID_CHUNK_ROWS:
+                    flush()
+        flush()
+
+
+class _DescentState:
+    """Per-problem state of the lockstep-batched coordinate descent.
+
+    Replays :func:`_coordinate_descent` step for step — same zero/random
+    trial seeds drawn from a per-problem ``default_rng(seed)`` in the same
+    order, same sweep convergence break, same end-of-trial acceptance and
+    zero-excess early exit — with only the "score every rotation of job j"
+    evaluation delegated to a shared batched call.
+    """
+
+    __slots__ = ("index", "circle", "grids", "capacity", "n", "rng",
+                 "best", "best_excess", "done", "in_sweep", "changed",
+                 "shifts", "rotated", "total")
+
+    def __init__(
+        self,
+        index: int,
+        circle: UnifiedCircle,
+        grids: Sequence[int],
+        capacity: float,
+        seed: int,
+    ) -> None:
+        self.index = index
+        self.circle = circle
+        self.grids = list(grids)
+        self.capacity = capacity
+        self.n = len(grids)
+        self.rng = np.random.default_rng(seed)
+        self.best: tuple[int, ...] = (0,) * self.n
+        self.best_excess = float(np.inf)
+        self.done = False
+        self.in_sweep = False
+        self.changed = False
+        self.shifts: np.ndarray | None = None
+        self.rotated: np.ndarray | None = None
+        self.total: np.ndarray | None = None
+
+    def start_trial(self, trial: int) -> None:
+        if trial == 0:
+            self.shifts = np.zeros(self.n, dtype=np.int64)
+        else:
+            self.shifts = np.array(
+                [self.rng.integers(0, g) for g in self.grids], dtype=np.int64
+            )
+        self.rotated = np.stack(
+            [self.circle.rotated(j, int(self.shifts[j])) for j in range(self.n)]
+        )
+        self.total = self.rotated.sum(axis=0)
+        self.in_sweep = True
+
+    def job_row(self, j: int) -> tuple[np.ndarray, np.ndarray]:
+        """(base, cand) for re-placing job ``j`` against all the others."""
+        return self.total - self.rotated[j], self.circle.bw[j]
+
+    def apply(self, j: int, base: np.ndarray, row: np.ndarray) -> None:
+        ex = row[: self.grids[j]]
+        s_new = int(np.argmin(ex))
+        if s_new != self.shifts[j]:
+            self.shifts[j] = s_new
+            new_rot = self.circle.rotated(j, s_new)
+            self.total = base + new_rot
+            self.rotated[j] = new_rot
+            self.changed = True
+
+    def end_trial(self) -> None:
+        ex_now = float(np.maximum(self.total - self.capacity, 0.0).sum())
+        if ex_now < self.best_excess - 1e-12:
+            self.best_excess = ex_now
+            self.best = tuple(int(s) for s in self.shifts)
+        if self.best_excess == 0.0:
+            self.done = True
+
+
+def _solve_descent_batched(
+    states: Sequence[_DescentState], backend: str, stats: BatchStats
+) -> None:
+    """Run all coordinate descents in lockstep, batching each step's rows.
+
+    At step (trial, sweep, job j) the base-vs-candidate rows of every
+    problem still active at that step are grouped by angle count (per-row
+    capacities ride along) and scored in one :func:`_batched_excess` call —
+    one row per problem, every candidate shift of job ``j`` covered by the
+    call's rotation axis.  Per-problem updates between steps keep the exact
+    scalar semantics (sequential-within-sweep, convergence breaks, seeded
+    restarts).
+    """
+    for trial in range(_COORD_DESCENT_SEEDS):
+        live = [s for s in states if not s.done]
+        if not live:
+            break
+        for s in live:
+            s.start_trial(trial)
+        for _ in range(_COORD_DESCENT_SWEEPS):
+            sweeping = [s for s in live if s.in_sweep]
+            if not sweeping:
+                break
+            for s in sweeping:
+                s.changed = False
+            for j in range(max(s.n for s in sweeping)):
+                stepping = [s for s in sweeping if j < s.n]
+                by_angles: dict[int, list[_DescentState]] = {}
+                for s in stepping:
+                    by_angles.setdefault(s.circle.num_angles, []).append(s)
+                for group in by_angles.values():
+                    rows = [s.job_row(j) for s in group]
+                    base = np.stack([b for b, _ in rows])
+                    cand = np.stack([c for _, c in rows])
+                    caps = np.array([s.capacity for s in group], dtype=np.float32)
+                    ex = _batched_excess(base, cand, caps, backend=backend)
+                    stats.batched_calls += 1
+                    stats.descent_rows += len(group)
+                    for s, (b, _), row in zip(group, rows, ex):
+                        s.apply(j, b, row)
+            for s in sweeping:
+                s.in_sweep = s.changed
+        for s in live:
+            s.end_trial()
 
 
 def _normalize_shifts(

@@ -34,7 +34,7 @@ import numpy as np
 
 from .affinity import AffinityGraph, JobId, LinkId
 from .circle import CommPattern, DEFAULT_PRECISION_DEG, DEFAULT_QUANTUM_MS
-from .compat import CompatResult, find_rotations, find_rotations_batched
+from .compat import BatchStats, CompatResult, find_rotations, find_rotations_batched
 
 __all__ = ["PlacementCandidate", "CassiniDecision", "CassiniModule"]
 
@@ -103,6 +103,10 @@ class CassiniModule:
         # cached CompatResults themselves are frozen dataclasses.
         self._link_cache: dict[tuple, CompatResult] = {}
         self._cache_lock = threading.Lock()
+        # Telemetry of the most recent score_candidates_batched call (None
+        # until one runs, or when every link problem was already cached):
+        # benches and tests use it to prove no silent scalar fallback.
+        self.last_batch_stats: BatchStats | None = None
 
     # -------------------------------------------------------------- #
     def contended_links(
@@ -273,12 +277,15 @@ class CassiniModule:
         instead of optimizing link-by-link inside a per-candidate loop, this
         path collects every *distinct uncached* (job-set, capacity) problem
         across all candidates and hands them to
-        :func:`repro.core.compat.find_rotations_batched`, which packs the
-        two-job rows into arrays for one batched ``circle_score`` evaluation
-        (Pallas kernel / vectorized numpy) and falls back to the scalar
-        search for other shapes.  Results land in the shared link cache, so
-        the final per-candidate assembly is pure cache hits and the scalar
-        and batched paths produce identical Evaluated tuples.
+        :func:`repro.core.compat.find_rotations_batched`, which packs every
+        k-job link's shift product grid into batched ``circle_score``
+        evaluations (Pallas kernel / vectorized numpy) and lockstep-batches
+        the coordinate-descent sweeps above the exact-grid cutoff — no link
+        shape drops to the scalar path.  Results land in the shared link
+        cache, so the final per-candidate assembly is pure cache hits and
+        the scalar and batched paths produce identical Evaluated tuples;
+        ``self.last_batch_stats`` records which batched path each problem
+        took.
         """
         prepared = [
             self._prepare_candidate(c, patterns, capacities) for c in candidates
@@ -293,14 +300,19 @@ class CassiniModule:
                 key = self._link_key(js, patterns, caps[l])
                 if key not in todo and self._cached(key) is None:
                     todo[key] = ([patterns[j] for j in js], caps[l])
+        # reset first so a fully-cached epoch reads None, not stale counts
+        self.last_batch_stats = None
         if todo:
             keys = list(todo)
+            stats = BatchStats()
             solved = find_rotations_batched(
                 [todo[k] for k in keys],
                 precision_deg=self.precision_deg,
                 quantum_ms=self.quantum_ms,
                 seed=self.seed,
+                stats=stats,
             )
+            self.last_batch_stats = stats
             for key, res in zip(keys, solved):
                 self._cache_put(key, res)
         out: list[Evaluated] = []

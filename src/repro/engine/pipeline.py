@@ -8,8 +8,10 @@ decomposes that flow into four typed, independently-testable stages:
   ``ProposeStage``   up to N candidate placements realizing the allocation
   ``ScoreStage``     Algorithm 2 lines 3–23: affinity graphs + link scores
                      (batched through ``score_candidates_batched`` by
-                     default — one packed kernel call per epoch instead of
-                     a per-link scalar loop)
+                     default — every k-job link's shift grid packed into
+                     batched kernel calls per epoch instead of a per-link
+                     scalar loop; ``ScoreStage.last_batch_stats`` exposes
+                     which batched path each link took)
   ``AlignStage``     Algorithm 1 on the winner → a Decision carrying a
                      typed :class:`~repro.engine.plan.AlignmentPlan`
 
@@ -118,13 +120,24 @@ class ProposeStage(PipelineStage):
 
 
 class ScoreStage(PipelineStage):
-    """Build PlacementCandidates from the cluster topology and score them."""
+    """Build PlacementCandidates from the cluster topology and score them.
+
+    With ``batched=True`` (the default) all uncached link problems of the
+    epoch — any job count — are solved through the batched grid /
+    lockstep-descent paths of ``find_rotations_batched``;
+    :attr:`last_batch_stats` reflects the most recent batched solve.
+    """
 
     name = "score"
 
     def __init__(self, module: CassiniModule, *, batched: bool = True) -> None:
         self.module = module
         self.batched = batched
+
+    @property
+    def last_batch_stats(self):
+        """Telemetry of the module's most recent batched solve (or None)."""
+        return self.module.last_batch_stats
 
     # ------------------------------------------------------------- #
     def build_candidates(

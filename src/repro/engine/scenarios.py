@@ -282,6 +282,33 @@ register_scenario(ScenarioSpec(
 ))
 
 
+def _hetero_16rack_topology() -> Topology:
+    """16 racks × 4 servers with alternating 50/100 Gbps NIC generations —
+    the ROADMAP's "larger fabrics, heterogeneous NIC rates" open item."""
+    return Topology(
+        num_racks=16,
+        servers_per_rack=4,
+        nic_gbps=50.0,
+        rack_nic_gbps=tuple(100.0 if r % 2 else 50.0 for r in range(16)),
+        oversubscription=2.0,
+    )
+
+
+register_scenario(ScenarioSpec(
+    name="hetero-16rack",
+    description="16 racks x 4 servers, alternating 50/100 Gbps NIC racks; "
+                "Poisson multi-tenant arrivals drive >=3-job uplink "
+                "contention across mixed link capacities",
+    topology=_hetero_16rack_topology,
+    trace=lambda topo: poisson_trace(
+        topo, load=1.4, num_jobs=14, seed=11, min_iters=120, max_iters=280,
+        models=["vgg19", "wideresnet101", "dlrm", "gpt2", "resnet50", "bert"],
+    ),
+    epoch_ms=240_000.0,
+    horizon_ms=3_600_000.0,
+))
+
+
 register_scenario(ScenarioSpec(
     name="multigpu",
     description="Fig. 13: 3 racks x 2 servers x 2 GPUs; jobs larger than a "

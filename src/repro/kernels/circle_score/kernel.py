@@ -34,7 +34,7 @@ DEFAULT_BLOCK_L = 8
 def _circle_score_kernel(base_ref, cand_ref, cap_ref, out_ref):
     base = base_ref[...].astype(jnp.float32)            # (BL, A)
     cand = cand_ref[...].astype(jnp.float32)            # (BL, A)
-    cap = cap_ref[0].astype(jnp.float32)
+    cap = cap_ref[...].astype(jnp.float32)              # (BL, 1) per-row
     bl, a = base.shape
     cc = jnp.concatenate([cand, cand], axis=-1)         # (BL, 2A)
 
@@ -53,19 +53,26 @@ def _circle_score_kernel(base_ref, cand_ref, cap_ref, out_ref):
 def circle_score_pallas(
     base: jax.Array,      # (L, A) float32
     cand: jax.Array,      # (L, A) float32
-    capacity: jax.Array,  # () or (1,) float32
+    capacity: jax.Array,  # scalar shared by all rows, or (L,)/(L, 1) per-row
     *,
     block_l: int = DEFAULT_BLOCK_L,
     interpret: bool = True,
 ) -> jax.Array:
-    """Batched scoring; returns (L, A) excess sums (lower = better)."""
+    """Batched scoring; returns (L, A) excess sums (lower = better).
+
+    Per-row capacities let one launch cover links with different capacities
+    (the k-job grid batching groups rows by angle count only); a scalar
+    capacity is broadcast to every row.
+    """
     l, a = base.shape
     pad = (-l) % block_l
+    cap = jnp.asarray(capacity, jnp.float32)
+    cap = jnp.broadcast_to(cap.reshape(-1, 1) if cap.ndim else cap, (l, 1))
     if pad:
         base = jnp.pad(base, ((0, pad), (0, 0)))
         cand = jnp.pad(cand, ((0, pad), (0, 0)))
+        cap = jnp.pad(cap, ((0, pad), (0, 0)))
     lp = base.shape[0]
-    cap = jnp.reshape(jnp.asarray(capacity, jnp.float32), (1,))
 
     out = pl.pallas_call(
         _circle_score_kernel,
@@ -73,7 +80,7 @@ def circle_score_pallas(
         in_specs=[
             pl.BlockSpec((block_l, a), lambda i: (i, 0)),
             pl.BlockSpec((block_l, a), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_l, a), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((lp, a), jnp.float32),

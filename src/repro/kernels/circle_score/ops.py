@@ -20,6 +20,9 @@ _ON_TPU = jax.default_backend() == "tpu"
 
 
 def circle_score(base, cand, capacity) -> jax.Array:
+    """``capacity`` may be a scalar (shared by all rows) or an ``(L,)`` /
+    ``(L, 1)`` array of per-row link capacities."""
     base = jnp.atleast_2d(jnp.asarray(base, jnp.float32))
     cand = jnp.atleast_2d(jnp.asarray(cand, jnp.float32))
-    return circle_score_pallas(base, cand, capacity, interpret=not _ON_TPU)
+    cap = jnp.asarray(capacity, jnp.float32)
+    return circle_score_pallas(base, cand, cap, interpret=not _ON_TPU)

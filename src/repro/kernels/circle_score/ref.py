@@ -7,9 +7,15 @@ import jax.numpy as jnp
 
 
 def circle_score_ref(base: jax.Array, cand: jax.Array, capacity) -> jax.Array:
-    """out[l, s] = Σ_α max(0, base[l,α] + cand[l,(α−s) mod A] − C)."""
+    """out[l, s] = Σ_α max(0, base[l,α] + cand[l,(α−s) mod A] − C_l).
+
+    ``capacity`` is a scalar or an ``(L,)`` / ``(L, 1)`` per-row array,
+    mirroring the kernel's per-row capacity support.
+    """
     l, a = base.shape
     idx = (jnp.arange(a)[None, :] - jnp.arange(a)[:, None]) % a  # (S, A)
     rolled = cand[:, idx]                                        # (L, S, A)
-    total = base[:, None, :] + rolled - jnp.asarray(capacity, base.dtype)
+    cap = jnp.asarray(capacity, base.dtype)
+    cap = cap.reshape(-1, 1, 1) if cap.ndim else cap
+    total = base[:, None, :] + rolled - cap
     return jnp.maximum(total, 0.0).sum(axis=-1)

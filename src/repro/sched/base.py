@@ -176,10 +176,16 @@ def propose_candidates(
 
     seen: set[tuple] = set()
     out: list[PlacementMap] = []
-    rack_orders = list(_it.permutations(range(topo.num_racks)))
-    if len(rack_orders) > 24:
-        rng.shuffle(rack_orders)
-        rack_orders = rack_orders[:24]
+    if topo.num_racks <= 4:
+        rack_orders = list(_it.permutations(range(topo.num_racks)))
+    else:
+        # num_racks! explodes factorially (16 racks → 2·10¹³ permutations):
+        # sample distinct random rack orders instead of materializing them.
+        base = list(range(topo.num_racks))
+        sampled: set[tuple[int, ...]] = set()
+        while len(sampled) < 24:
+            sampled.add(tuple(rng.sample(base, len(base))))
+        rack_orders = sorted(sampled)  # deterministic order for a given rng
     job_orders = [sorted(range(len(jobs_workers)), key=lambda i: -jobs_workers[i][1])]
     for _ in range(k):
         alt = list(range(len(jobs_workers)))

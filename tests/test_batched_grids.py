@@ -1,0 +1,265 @@
+"""Property-based equivalence harness for the batched k-job grids.
+
+``find_rotations_batched`` must be *bit-identical* to per-problem
+``find_rotations`` calls — same scores, same normalized shifts — for every
+link shape the scheduler can produce: k ∈ {2, 3, 4} jobs with mixed
+periods, phases that wrap the iteration boundary, and degenerate
+zero-demand jobs.  k ≤ 3 exercises the batched exact product grid, k = 4
+the lockstep-batched coordinate descent.  A second property checks the
+module layer: the link cache after ``score_candidates_batched`` holds the
+same keys and results as after the scalar ``score_candidates``.
+
+The hypothesis properties need the dev extra; a seeded numpy generator
+drives the same problem distribution so the equivalence harness still runs
+(deterministically) where hypothesis is unavailable.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compat
+from repro.core.circle import CommPattern, Phase
+from repro.core.compat import (
+    BatchStats,
+    find_rotations,
+    find_rotations_batched,
+)
+from repro.core.plugin import CassiniModule, PlacementCandidate
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev extra absent
+    HAVE_HYPOTHESIS = False
+
+# Periods from a fixed menu keep the unified-circle LCM (and hence test
+# runtime) bounded while still mixing wrap counts r_j > 1.
+PERIODS = (160.0, 200.0, 240.0, 320.0, 400.0, 480.0)
+CAPACITIES = (25.0, 50.0, 100.0)
+# 0.0 gbps produces the degenerate all-zero-demand job the harness must
+# round-trip; the rest straddle the capacity menu above and below.
+DEMANDS = (0.0, 4.0, 20.0, 40.0, 45.0, 60.0)
+
+
+def _assert_bit_identical(scalar, batched):
+    assert len(scalar) == len(batched)
+    for s, b in zip(scalar, batched):
+        assert b.score == s.score
+        assert b.shifts_steps == s.shifts_steps
+        assert b.shifts_ms == s.shifts_ms
+        assert b.deltas_rad == s.deltas_rad
+        assert b.paced_periods_ms == s.paced_periods_ms
+        assert b.capacity_gbps == s.capacity_gbps
+
+
+def _random_problem(rng: np.random.Generator, tag: str, k: int):
+    """One k-job link problem from the shared distribution (numpy mirror of
+    the hypothesis strategy below)."""
+    pats = []
+    for j in range(k):
+        it = float(rng.choice(PERIODS))
+        phases = []
+        for _ in range(int(rng.integers(1, 3))):
+            start = float(rng.uniform(0.0, it))     # may wrap the boundary
+            dur = float(rng.uniform(0.0, 0.9 * it))
+            gbps = float(rng.choice(DEMANDS))
+            phases.append(Phase(start, dur, gbps))
+        pats.append(CommPattern(it, tuple(phases), name=f"{tag}j{j}"))
+    return pats, float(rng.choice(CAPACITIES))
+
+
+# ---------------------------------------------------------------------- #
+# seeded-random equivalence (runs with or without hypothesis)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(8))
+def test_batched_bit_identical_to_scalar_seeded(seed):
+    rng = np.random.default_rng(seed)
+    problems = [
+        _random_problem(rng, f"p{i}", int(rng.integers(1, 5)))
+        for i in range(int(rng.integers(1, 5)))
+    ]
+    scalar = [find_rotations(pats, cap) for pats, cap in problems]
+    stats = BatchStats()
+    batched = find_rotations_batched(problems, stats=stats)
+    assert stats.scalar_fallbacks == 0
+    assert stats.problems == len(problems)
+    _assert_bit_identical(scalar, batched)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_batched_descent_bit_identical_for_4job_links_seeded(seed):
+    """k = 4 exceeds MAX_EXACT_JOBS: both paths run coordinate descent, the
+    batched one in lockstep — results must still match bit for bit."""
+    rng = np.random.default_rng(100 + seed)
+    problems = [_random_problem(rng, f"p{i}", 4) for i in range(2)]
+    scalar = [find_rotations(pats, cap) for pats, cap in problems]
+    stats = BatchStats()
+    batched = find_rotations_batched(problems, stats=stats)
+    assert stats.descent_problems == len(problems)
+    assert stats.scalar_fallbacks == 0
+    _assert_bit_identical(scalar, batched)
+
+
+def test_grid_chunking_does_not_change_results(monkeypatch):
+    """Chunk boundaries are invisible: a tiny GRID_CHUNK_ROWS forces many
+    flushes mid-problem and must produce the same accepted rows."""
+    rng = np.random.default_rng(7)
+    problems = [_random_problem(rng, f"p{i}", 3) for i in range(3)]
+    scalar = [find_rotations(pats, cap) for pats, cap in problems]
+    monkeypatch.setattr(compat, "GRID_CHUNK_ROWS", 7)
+    batched = find_rotations_batched(problems)
+    _assert_bit_identical(scalar, batched)
+
+
+def test_per_row_capacity_matches_per_problem_scalar():
+    """One batched call over rows with *different* capacities equals the
+    row-at-a-time evaluation with each row's own scalar capacity."""
+    rng = np.random.default_rng(0)
+    base = rng.random((6, 72)).astype(np.float32) * 60
+    cand = rng.random((6, 72)).astype(np.float32) * 60
+    caps = np.array([20.0, 30.0, 40.0, 50.0, 60.0, 70.0], dtype=np.float32)
+    out = compat._batched_excess(base, cand, caps, backend="numpy")
+    for i, c in enumerate(caps):
+        row = compat._batched_excess(
+            base[i:i + 1], cand[i:i + 1], float(c), backend="numpy"
+        )[0]
+        np.testing.assert_array_equal(out[i], row)
+
+
+def test_cache_contents_match_scalar_path_seeded():
+    """After scoring the same candidates, the batched module's link cache
+    holds exactly the scalar module's keys with bit-identical results."""
+    rng = np.random.default_rng(21)
+    patterns: dict[str, CommPattern] = {}
+    capacities: dict[str, float] = {}
+    job_links: dict[str, list[str]] = {}
+    for l, k in enumerate((2, 3, 4)):
+        pats, cap = _random_problem(rng, f"l{l}", k)
+        capacities[f"link{l}"] = cap
+        for p in pats:
+            patterns[p.name] = p
+            job_links[p.name] = [f"link{l}"]
+
+    def cands():
+        return [PlacementCandidate(
+            job_links={j: list(ls) for j, ls in job_links.items()}
+        )]
+
+    m_scalar, m_batched = CassiniModule(), CassiniModule()
+    ev_s = m_scalar.score_candidates(cands(), patterns, capacities)
+    ev_b = m_batched.score_candidates_batched(cands(), patterns, capacities)
+
+    assert set(m_batched._link_cache) == set(m_scalar._link_cache)
+    for key, rs in m_scalar._link_cache.items():
+        rb = m_batched._link_cache[key]
+        assert rb.score == rs.score
+        assert rb.shifts_steps == rs.shifts_steps
+        assert rb.shifts_ms == rs.shifts_ms
+        assert rb.paced_periods_ms == rs.paced_periods_ms
+    assert [c.score for c, _, _ in ev_b] == [c.score for c, _, _ in ev_s]
+    assert m_batched.last_batch_stats is not None
+    assert m_batched.last_batch_stats.scalar_fallbacks == 0
+
+
+def test_batch_stats_routes_every_problem():
+    """Stats partition the problem set: trivial + grid + descent covers all
+    shapes with no scalar fallback."""
+    def pat(it, s, d, g, name):
+        return CommPattern(it, (Phase(s * it, d * it, g),), name)
+
+    problems = [
+        ([pat(250.0, 0.2, 0.5, 45.0, "solo")], 50.0),
+        ([pat(320.0, 0.3, 0.4, 45.0, "a"), pat(320.0, 0.6, 0.3, 40.0, "b")], 50.0),
+        ([pat(300.0, 0.1, 0.3, 40.0, "x"), pat(300.0, 0.4, 0.3, 40.0, "y"),
+          pat(300.0, 0.7, 0.2, 40.0, "z")], 50.0),
+        ([pat(240.0, 0.05, 0.3, 30.0, "k1"), pat(240.0, 0.3, 0.3, 30.0, "k2"),
+          pat(240.0, 0.55, 0.25, 25.0, "k3"), pat(480.0, 0.8, 0.15, 20.0, "k4")],
+         50.0),
+    ]
+    stats = BatchStats()
+    find_rotations_batched(problems, stats=stats)
+    assert stats.problems == 4
+    assert stats.trivial == 1
+    assert stats.grid_problems == 2
+    assert stats.descent_problems == 1
+    assert stats.scalar_fallbacks == 0
+    assert stats.grid_rows > 0 and stats.descent_rows > 0
+
+
+# ---------------------------------------------------------------------- #
+# hypothesis properties (dev extra)
+# ---------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def comm_pattern(draw, name: str) -> CommPattern:
+        it = draw(st.sampled_from(PERIODS))
+        phases = []
+        for _ in range(draw(st.integers(1, 2))):
+            start = draw(st.floats(0.0, it, allow_nan=False))
+            # start anywhere + durations up to 0.9·it ⇒ phases may wrap the
+            # iteration boundary (demand_at handles the wrap)
+            dur = draw(st.floats(0.0, 0.9 * it, allow_nan=False))
+            phases.append(Phase(start, dur, draw(st.sampled_from(DEMANDS))))
+        return CommPattern(it, tuple(phases), name=name)
+
+    @st.composite
+    def link_problem(draw, tag: str = "p", min_jobs: int = 2, max_jobs: int = 4):
+        k = draw(st.integers(min_jobs, max_jobs))
+        pats = [draw(comm_pattern(name=f"{tag}j{j}")) for j in range(k)]
+        return pats, draw(st.sampled_from(CAPACITIES))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_batched_bit_identical_to_scalar(data):
+        n = data.draw(st.integers(1, 4))
+        problems = [data.draw(link_problem(tag=f"p{i}")) for i in range(n)]
+        scalar = [find_rotations(pats, cap) for pats, cap in problems]
+        stats = BatchStats()
+        batched = find_rotations_batched(problems, stats=stats)
+        assert stats.scalar_fallbacks == 0
+        _assert_bit_identical(scalar, batched)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.data())
+    def test_batched_descent_bit_identical_for_4job_links(data):
+        problems = [
+            data.draw(link_problem(tag=f"p{i}", min_jobs=4, max_jobs=4))
+            for i in range(data.draw(st.integers(1, 3)))
+        ]
+        scalar = [find_rotations(pats, cap) for pats, cap in problems]
+        stats = BatchStats()
+        batched = find_rotations_batched(problems, stats=stats)
+        assert stats.descent_problems == len(problems)
+        assert stats.scalar_fallbacks == 0
+        _assert_bit_identical(scalar, batched)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.data())
+    def test_cache_contents_match_scalar_path(data):
+        patterns: dict[str, CommPattern] = {}
+        capacities: dict[str, float] = {}
+        job_links: dict[str, list[str]] = {}
+        for l in range(data.draw(st.integers(1, 3))):
+            pats, cap = data.draw(link_problem(tag=f"l{l}"))
+            capacities[f"link{l}"] = cap
+            for p in pats:
+                patterns[p.name] = p
+                job_links[p.name] = [f"link{l}"]
+
+        def cands():
+            return [PlacementCandidate(
+                job_links={j: list(ls) for j, ls in job_links.items()}
+            )]
+
+        m_scalar, m_batched = CassiniModule(), CassiniModule()
+        m_scalar.score_candidates(cands(), patterns, capacities)
+        m_batched.score_candidates_batched(cands(), patterns, capacities)
+        assert set(m_batched._link_cache) == set(m_scalar._link_cache)
+        for key, rs in m_scalar._link_cache.items():
+            rb = m_batched._link_cache[key]
+            assert rb.score == rs.score
+            assert rb.shifts_steps == rs.shifts_steps
+            assert rb.shifts_ms == rs.shifts_ms
+            assert rb.paced_periods_ms == rs.paced_periods_ms

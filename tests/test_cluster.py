@@ -91,6 +91,83 @@ def test_cassini_timeshift_removes_contention():
     assert cass.ecn_per_iter() < base.ecn_per_iter() * 0.2
 
 
+# ------------------------------------------------------------------ #
+# fluid-model invariants
+# ------------------------------------------------------------------ #
+def _contending_jobs(n, iters=30):
+    """n vgg19 pairs whose ring edges all cross the same rack0↔rack1 uplink."""
+    t = Topology.paper_testbed()
+    jobs = snapshot_trace([("vgg19", 2, 1400)] * n, iters=iters)
+    for i, j in enumerate(jobs):
+        j.placement = (i, 6 + i)  # server i in rack 0, server 6+i in rack 1
+        j.state = j.state.RUNNING
+    return t, jobs
+
+
+def test_fluid_allocation_never_exceeds_capacity():
+    """Invariant: summed allocated rates on any link stay within capacity
+    (the congested-efficiency factor only ever lowers the budget)."""
+    t, jobs = _contending_jobs(3, iters=200)
+    sim = FluidNetworkSim(t)
+    sim.configure(jobs)
+    probes = 0
+    while sim.now_ms < 30_000 and sim._execs:
+        rates = sim._allocate()
+        per_link: dict[str, float] = {}
+        for jid, ex in sim._execs.items():
+            for l in ex.links:
+                per_link[l.name] = per_link.get(l.name, 0.0) + rates.get(jid, 0.0)
+        for lname, total in per_link.items():
+            assert total <= t.links[lname].capacity_gbps + 1e-6, lname
+        probes += sum(1 for r in rates.values() if r > 0)
+        sim.advance(sim.now_ms + 40.0)
+    assert probes > 0  # the probe actually saw contended comm segments
+
+
+def test_ecn_marks_monotone_in_added_contention():
+    """Invariant: adding a job to a contended link never reduces the marks
+    the existing jobs accumulate."""
+    def total_marks_job0(n):
+        t, jobs = _contending_jobs(n)
+        sim = FluidNetworkSim(t)
+        sim.configure(jobs)
+        sim.advance(150_000)
+        assert jobs[0].iters_done == 30
+        return sum(jobs[0].ecn_marks)
+
+    two, three = total_marks_job0(2), total_marks_job0(3)
+    assert two > 0
+    assert three >= two
+
+
+def test_cutoff_job_stops_consuming_link_share():
+    """Invariant: a horizon-expired (CUTOFF) job releases its link share —
+    the surviving job returns to solo-speed iterations and the cutoff job
+    no longer appears in the allocation."""
+    from repro.cluster.job import JobState
+
+    t, jobs = _contending_jobs(2, iters=400)
+    sim = FluidNetworkSim(t)
+    sim.configure(jobs)
+    sim.advance(60_000)
+    assert sum(jobs[1].iter_times_ms) / len(jobs[1].iter_times_ms) > (
+        jobs[1].solo_iter_ms * 1.15
+    )  # contended before the cutoff
+
+    jobs[0].state = JobState.CUTOFF
+    recorded = len(jobs[1].iter_times_ms)
+    cutoff_iters = jobs[0].iters_done
+    sim.advance(150_000)
+    assert jobs[0].job_id not in sim._allocate()
+    # the cutoff job is frozen: no more iterations, never flips to DONE
+    assert jobs[0].iters_done == cutoff_iters
+    assert jobs[0].state is JobState.CUTOFF and jobs[0].finish_ms is None
+    post = jobs[1].iter_times_ms[recorded + 2:]  # skip the boundary iters
+    assert post, "survivor must keep iterating after the cutoff"
+    mean_post = sum(post) / len(post)
+    assert mean_post == pytest.approx(jobs[1].solo_iter_ms, rel=0.02)
+
+
 def test_ideal_metrics_no_contention():
     t = Topology.paper_testbed()
     jobs = snapshot_trace([("bert", 4, 8), ("vgg19", 4, 1400)], iters=10)

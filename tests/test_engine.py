@@ -231,7 +231,25 @@ def test_plan_flows_into_job_alignment():
 def test_builtin_scenarios_registered():
     names = set(list_scenarios())
     assert {"fig2-interleave", "poisson-paper", "dynamic-burst",
-            "modelpar-burst", "multigpu"} <= names
+            "modelpar-burst", "multigpu", "hetero-16rack"} <= names
+
+
+def test_hetero_16rack_topology_and_cassini_beats_host():
+    """Registry smoke test: the heterogeneous 16-rack fabric builds with
+    mixed 50/100 Gbps NIC rates and CASSINI is no worse than the Themis
+    host on average JCT (deterministic trace + simulator seeds)."""
+    spec = get_scenario("hetero-16rack")
+    topo = spec.topology()
+    assert topo.num_racks == 16
+    assert {l.capacity_gbps for l in topo.links.values()} == {50.0, 100.0}
+    assert topo.rack_nic(0) == 50.0 and topo.rack_nic(1) == 100.0
+
+    host = spec.run("themis")
+    cass = spec.run("th+cassini")
+    assert cass.metrics.avg_jct_ms <= host.metrics.avg_jct_ms
+    # the win comes from removing congestion, not from running fewer jobs
+    assert (cass.metrics.summary()["jobs_finished"]
+            >= host.metrics.summary()["jobs_finished"])
 
 
 def test_get_scenario_unknown_name():
