@@ -63,3 +63,46 @@ def scoring_problems(num_links=24, jobs_per_link=2, capacity=50.0):
             )
         out.append((pats, capacity))
     return out
+
+
+def large_grid_k3_problems(num_links=8, capacity=50.0):
+    """k=3 links that land on the batched exact grid with a *large* angle
+    count — the regime where the ``(B, A)`` result round-trip dominated the
+    PR-2 batched path.
+
+    Each link carries one slow job (800 ms) and two fast ones (100 ms): at
+    0.5° precision the unified circle has A = 720 angles (kernel-eligible)
+    while the fast jobs wrap r = 8 times, so their admissible shift grids
+    are 90 steps each — 8100 combinations, inside ``EXACT_GRID_LIMIT``, 90
+    base-demand rows per link.  Half the links are lightly loaded (a
+    zero-excess interleaving exists, so the fused kernel's early exit
+    fires); half stay contended end to end.
+    """
+    from repro.core.circle import CommPattern, Phase
+
+    out = []
+    for i in range(num_links):
+        light = i % 2 == 0
+        scale = 0.55 if light else 1.0
+        pats = [
+            CommPattern(800.0, (Phase(60.0 + 35.0 * i, 260.0, 38.0 * scale),),
+                        name=f"g{i}slow"),
+            CommPattern(100.0, (Phase(12.0 + 3.0 * i, 34.0, 30.0 * scale),),
+                        name=f"g{i}fast0"),
+            CommPattern(100.0, (Phase(55.0 + 2.0 * i, 28.0, 34.0 * scale),),
+                        name=f"g{i}fast1"),
+        ]
+        out.append((pats, capacity))
+    return out
+
+
+def sched_epoch_state(scenario_name="hetero-16rack", max_jobs=10):
+    """A mid-simulation ``ClusterState`` for end-to-end epoch benches:
+    the scenario's first ``max_jobs`` trace jobs, treated as running."""
+    from repro.engine.scenarios import get_scenario
+    from repro.sched.base import ClusterState
+
+    spec = get_scenario(scenario_name)
+    topo = spec.topology()
+    jobs = spec.trace(topo)[:max_jobs]
+    return ClusterState(topology=topo, now_ms=0.0, running=jobs, pending=[])

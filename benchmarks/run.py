@@ -1,13 +1,18 @@
 """Benchmark harness: one module per paper table/figure + the roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline] \
+        [--json BENCH.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
+writes the rows as machine-readable JSON (name, us_per_call, speedup,
+derived) so the perf trajectory can be tracked across PRs (CI uploads
+``BENCH_PR3.json`` as an artifact from the kernels smoke step).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -21,12 +26,18 @@ ALL = [
     "fig15_discretization",
     "ablations",
     "kernels",
+    "sched_epoch",
     "roofline",
 ]
 
 
-def _kernel_bench() -> list[dict]:
-    """Micro-bench the three Pallas kernels (interpret mode) vs oracles."""
+def _kernel_bench():
+    """Micro-bench the three Pallas kernels (interpret mode) vs oracles.
+
+    A generator (like every bench set here): rows reach the harness — and
+    the ``--json`` artifact — as they complete, so a later assertion
+    failure cannot swallow the measurements that explain it.
+    """
     import jax.numpy as jnp
     import numpy as np
 
@@ -38,20 +49,19 @@ def _kernel_bench() -> list[dict]:
     from .common import timed
 
     rng = np.random.default_rng(0)
-    rows = []
     base = jnp.asarray(rng.random((16, 720)) * 60, jnp.float32)
     cand = jnp.asarray(rng.random((16, 720)) * 60, jnp.float32)
     _, us_ref = timed(lambda: circle_score_ref(base, cand, 50.0).block_until_ready())
     _, us_k = timed(lambda: circle_score(base, cand, 50.0).block_until_ready())
-    rows.append({"name": "kernels/circle_score(16x720)", "us_per_call": us_k,
-                 "derived": f"jnp_ref={us_ref:.0f}us (interpret-mode kernel; "
-                            f"TPU target compiles Mosaic)"})
+    yield {"name": "kernels/circle_score(16x720)", "us_per_call": us_k,
+           "derived": f"jnp_ref={us_ref:.0f}us (interpret-mode kernel; "
+                      f"TPU target compiles Mosaic)"}
     q = jnp.asarray(rng.standard_normal((1, 512, 4, 64)), jnp.bfloat16)
     k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.bfloat16)
     v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.bfloat16)
     _, us_fa = timed(lambda: flash_attention(q, k, v).block_until_ready(), repeat=1)
-    rows.append({"name": "kernels/flash_attention(512)", "us_per_call": us_fa,
-                 "derived": "blocked online-softmax; causal GQA"})
+    yield {"name": "kernels/flash_attention(512)", "us_per_call": us_fa,
+           "derived": "blocked online-softmax; causal GQA"}
     x = jnp.asarray(rng.standard_normal((1, 256, 4, 32)), jnp.float32)
     dt = jnp.asarray(rng.random((1, 256, 4)) * 0.3 + 0.05, jnp.float32)
     al = jnp.asarray(rng.standard_normal(4) * 0.3, jnp.float32)
@@ -59,13 +69,13 @@ def _kernel_bench() -> list[dict]:
     Cm = jnp.asarray(rng.standard_normal((1, 256, 16)), jnp.float32)
     _, us_ssd = timed(lambda: ssd_scan(x, dt, al, Bm, Cm, chunk=64).block_until_ready(),
                       repeat=1)
-    rows.append({"name": "kernels/ssd_scan(256)", "us_per_call": us_ssd,
-                 "derived": "chunked SSD w/ VMEM state carry"})
-    rows.extend(_batched_scoring_bench())
-    return rows
+    yield {"name": "kernels/ssd_scan(256)", "us_per_call": us_ssd,
+           "derived": "chunked SSD w/ VMEM state carry"}
+    yield from _batched_scoring_bench()
+    yield from _fused_reduction_bench()
 
 
-def _batched_scoring_bench() -> list[dict]:
+def _batched_scoring_bench():
     """Batched candidate scoring (``find_rotations_batched``) vs the scalar
     per-link loop the seed scheduler ran — the Algorithm-2 hot path.
 
@@ -85,7 +95,6 @@ def _batched_scoring_bench() -> list[dict]:
         (5.0, 12, 3, "grid", "A~72 k=3 product grid"),
         (0.5, 8, 3, "descent", "A~720 k=3 lockstep descent"),
     )
-    rows = []
     for deg, links, k, path, label in cases:
         probs = scoring_problems(num_links=links, jobs_per_link=k)
         scalar = lambda: [
@@ -98,9 +107,23 @@ def _batched_scoring_bench() -> list[dict]:
         _, us_batch = timed(batched)
         speedup = us_scalar / us_batch
 
-        # CI smoke assertions: the batched path must actually be taken.
         stats = BatchStats()
         find_rotations_batched(probs, precision_deg=deg, stats=stats)
+        yield {
+            "name": f"kernels/score_batched({links}x{k}job,{deg:g}deg)",
+            "us_per_call": us_batch,
+            "speedup": speedup,
+            "derived": (
+                f"scalar_loop={us_scalar:.0f}us speedup={speedup:.2f}x "
+                f"({label}; batched {path} path, "
+                f"{stats.grid_rows + stats.descent_rows} rows in "
+                f"{stats.batched_calls} calls — pallas kernel for A>=512, "
+                f"vectorized numpy below)"
+            ),
+        }
+        # CI smoke assertions: the batched path must actually be taken.
+        # (After the yield: a failing gate still leaves the measured row
+        # in the --json artifact to explain itself.)
         if stats.scalar_fallbacks:
             raise RuntimeError(
                 f"{stats.scalar_fallbacks}/{stats.problems} problems fell "
@@ -117,43 +140,200 @@ def _batched_scoring_bench() -> list[dict]:
                 f"batched k=3 grid must beat the scalar loop: "
                 f"{speedup:.2f}x (scalar={us_scalar:.0f}us batched={us_batch:.0f}us)"
             )
-        rows.append({
-            "name": f"kernels/score_batched({links}x{k}job,{deg:g}deg)",
-            "us_per_call": us_batch,
+
+
+
+def _fused_reduction_bench():
+    """Device-resident rotation search vs the PR-2 full-matrix round-trip.
+
+    Large-grid k=3 problems (A=720, 90 product-grid rows per link) where
+    the batched path previously shipped the whole ``(B, A)`` excess matrix
+    to the host for ``np.argmin`` + acceptance.  With ``device_reduce``
+    the fused ``circle_score_argmin`` / ``circle_score_segmin`` kernels
+    keep the reduction on device and return O(problems) scalars.
+
+    CI assertions: every chunk of the large-grid config must be device-
+    reduced (zero ``(B, A)`` host transfers), the returned bytes must drop
+    ≥ 100x vs the matrices, the fused path must be ≥ 2x faster than the
+    PR-2 batched path, and the selected shifts must be bit-identical to
+    the scalar search.
+    """
+    from repro.core.compat import BatchStats, find_rotations, find_rotations_batched
+
+    from .common import large_grid_k3_problems, timed
+
+    probs = large_grid_k3_problems(num_links=8)
+    deg = 0.5
+
+    fused = lambda: find_rotations_batched(
+        probs, precision_deg=deg, device_reduce=True
+    )
+    matrix = lambda: find_rotations_batched(
+        probs, precision_deg=deg, device_reduce=False
+    )
+    fused()    # warm both jit caches
+    matrix()
+    res_fused, us_fused = timed(fused)
+    res_matrix, us_matrix = timed(matrix)
+    speedup = us_matrix / us_fused
+
+    stats = BatchStats()
+    find_rotations_batched(probs, precision_deg=deg, stats=stats)
+    scalar = [find_rotations(p, c, precision_deg=deg) for p, c in probs]
+    # row first, gates after: a failing assertion below still leaves the
+    # measured row in the --json artifact to explain itself
+    yield {
+        "name": "kernels/score_fused_argmin(8x3job,0.5deg)",
+        "us_per_call": us_fused,
+        "speedup": speedup,
+        "derived": (
+            f"full_matrix_roundtrip={us_matrix:.0f}us speedup={speedup:.2f}x "
+            f"(A=720 grid; {stats.grid_rows} rows device-reduced in "
+            f"{stats.batched_calls} calls, {stats.bytes_returned}B returned "
+            f"vs {stats.bytes_matrix}B matrices = "
+            f"{stats.reduction_ratio:.0f}x less; in-kernel argmin scans only "
+            f"admissible shifts + exits at zero excess)"
+        ),
+    }
+    if any(
+        f.shifts_steps != s.shifts_steps or f.score != s.score
+        for f, s in zip(res_fused, scalar)
+    ):
+        raise RuntimeError("fused reduction diverged from the scalar search")
+    if any(
+        f.shifts_steps != m.shifts_steps for f, m in zip(res_fused, res_matrix)
+    ):
+        raise RuntimeError("device_reduce on/off selected different shifts")
+    if stats.device_reduced != stats.batched_calls or stats.batched_calls == 0:
+        raise RuntimeError(
+            f"large-grid chunks must all be device-reduced "
+            f"(zero (B,A) host transfers), got {stats}"
+        )
+    if stats.reduction_ratio < 100.0:
+        raise RuntimeError(
+            f"bytes_returned must drop >=100x vs the full matrices: "
+            f"{stats.reduction_ratio:.0f}x ({stats.bytes_returned}B vs "
+            f"{stats.bytes_matrix}B)"
+        )
+    if speedup < 2.0:
+        raise RuntimeError(
+            f"fused k=3 large-grid reduction must be >=2x over the PR-2 "
+            f"batched path: {speedup:.2f}x "
+            f"(matrix={us_matrix:.0f}us fused={us_fused:.0f}us)"
+        )
+
+
+def _sched_epoch_bench():
+    """End-to-end scheduler-level rows: one full ``SchedulingPipeline.cassini``
+    epoch (Allocate → Propose → Score → Align) on the hetero-16rack
+    scenario, so kernel-level scoring wins stay visible where they matter.
+
+    Three rows: the paper-default 5° epoch (A=72 circles — numpy grids,
+    device reduction not eligible), and a fine-grid 0.5° epoch with the
+    fused reduction on vs off (A=720 circles: the scoring stage actually
+    runs through the device-resident rotation search).
+    """
+    from repro.sched import CassiniAugmented, ThemisScheduler
+
+    from .common import sched_epoch_state, timed
+
+    cases = (
+        # (precision_deg, device_reduce, label)
+        (5.0, True, "paper default"),
+        (0.5, True, "fine grid, fused reduction"),
+        (0.5, False, "fine grid, full-matrix round-trip"),
+    )
+    state = sched_epoch_state("hetero-16rack", max_jobs=10)
+    for deg, device_reduce, label in cases:
+        def one_epoch():
+            # fresh module each call: epoch cost includes every link solve,
+            # not a pure cache-hit replay
+            s = CassiniAugmented(
+                ThemisScheduler(), precision_deg=deg,
+                device_reduce=device_reduce,
+            )
+            return s.schedule(state)
+        one_epoch()  # warm the jit caches
+        _, us_epoch = timed(one_epoch, repeat=3)
+        sched = CassiniAugmented(
+            ThemisScheduler(), precision_deg=deg, device_reduce=device_reduce
+        )
+        sched.schedule(state)
+        score_stage = next(
+            s for s in sched.pipeline.stages if s.name == "score"
+        )
+        stats = score_stage.last_batch_stats
+        yield {
+            "name": f"sched_epoch/hetero-16rack({deg:g}deg,"
+                    f"device_reduce={device_reduce})",
+            "us_per_call": us_epoch,
             "derived": (
-                f"scalar_loop={us_scalar:.0f}us speedup={speedup:.2f}x "
-                f"({label}; batched {path} path, "
-                f"{stats.grid_rows + stats.descent_rows} rows in "
-                f"{stats.batched_calls} calls — pallas kernel for A>=512, "
-                f"vectorized numpy below)"
+                f"full cassini epoch, 10 jobs, 16 racks ({label}); "
+                f"batch={stats}"
             ),
-        })
-    return rows
+        }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (machine-readable perf "
+                         "trajectory; CI uploads it as an artifact)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
 
     print("name,us_per_call,derived")
+    all_rows: list[dict] = []
     t0 = time.time()
-    for name in names:
-        if name == "kernels":
-            rows = _kernel_bench()
-        elif name == "roofline":
-            from . import roofline
 
-            rows = roofline.run()
-        else:
-            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            rows = mod.run()
-        for r in rows:
-            derived = str(r["derived"]).replace(",", ";")
-            print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
-    print(f"# total wall: {time.time()-t0:.1f}s", file=sys.stderr)
+    def write_json(error: str | None = None) -> None:
+        payload = [
+            {
+                "name": r["name"],
+                "us_per_call": round(float(r["us_per_call"]), 1),
+                "speedup": round(float(r["speedup"]), 3) if "speedup" in r else None,
+                "derived": str(r["derived"]),
+            }
+            for r in all_rows
+        ]
+        doc = {"rows": payload, "wall_s": round(time.time() - t0, 1)}
+        if error is not None:
+            doc["failed"] = error
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+
+    try:
+        for name in names:
+            if name == "kernels":
+                rows = _kernel_bench()
+            elif name == "sched_epoch":
+                rows = _sched_epoch_bench()
+            elif name == "roofline":
+                from . import roofline
+
+                rows = roofline.run()
+            else:
+                mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+                rows = mod.run()
+            # bench sets are generators: consume row by row and rewrite the
+            # JSON as each lands, so a bench failing its own assertion gate
+            # still leaves every completed measurement in the artifact
+            for r in rows:
+                derived = str(r["derived"]).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
+                all_rows.append(r)
+                if args.json:
+                    write_json()
+    except Exception as e:
+        if args.json:
+            write_json(error=f"{type(e).__name__}: {e}")
+        raise
+    if args.json:
+        print(f"# wrote {len(all_rows)} rows to {args.json}", file=sys.stderr)
+    print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

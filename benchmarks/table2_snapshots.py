@@ -1,5 +1,7 @@
 """Paper Table 2: five cluster snapshots — compatibility score, time-shifts
-and measured iteration times under Themis vs Th+CASSINI."""
+and measured iteration times under Themis vs Th+CASSINI — plus the
+registry-driven multi-tenant sweep (``multitenant-{2,4,8}`` scenarios:
+Table-2-style concurrent tenants on the hetero-16rack fabric)."""
 
 from __future__ import annotations
 
@@ -7,6 +9,7 @@ import statistics
 
 from repro.cluster import Topology, snapshot_trace
 from repro.core import find_rotations
+from repro.engine.scenarios import MULTITENANT_SWEEP, get_scenario
 from repro.profiles import get_profile
 from repro.sched import CassiniAugmented
 from repro.sched.fixed import FixedPlacementScheduler
@@ -59,6 +62,28 @@ def run() -> list[dict]:
                 f"score={opt.score:.2f} "
                 f"shifts={tuple(round(s) for s in opt.shifts_ms)} "
                 f"iter(cassini/themis): {per_model}"
+            ),
+        })
+    rows.extend(multitenant_sweep())
+    return rows
+
+
+def multitenant_sweep() -> list[dict]:
+    """Registry-driven sweep: 2/4/8 concurrent tenants on hetero-16rack,
+    avg JCT under Themis vs Th+CASSINI (scenario-diversity ROADMAP item)."""
+    rows = []
+    for n in MULTITENANT_SWEEP:
+        spec = get_scenario(f"multitenant-{n}")
+        jct = {}
+        for sched_name in spec.scheduler_names():
+            run = spec.run(sched_name)
+            jct[sched_name] = run.metrics.avg_jct_ms / 1e3
+        rows.append({
+            "name": f"table2/multitenant-{n}",
+            "us_per_call": 0.0,
+            "derived": (
+                f"{n} tenants on hetero-16rack; avg JCT "
+                + " ".join(f"{k}={v:.0f}s" for k, v in jct.items())
             ),
         })
     return rows

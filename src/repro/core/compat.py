@@ -16,8 +16,14 @@ inner scoring loop — "score every rotation of one job against a base
 demand" — is the compute hot-spot and is implemented three ways:
 
   * numpy (always available, used for tiny inputs),
-  * a vectorized jnp path, and
-  * the Pallas TPU kernel :mod:`repro.kernels.circle_score` (batched tiles).
+  * the full-matrix Pallas TPU kernel :mod:`repro.kernels.circle_score`
+    (batched tiles; also the numpy paths' reference), and
+  * the *fused-reduction* kernels (``circle_score_argmin`` /
+    ``circle_score_segmin``): the per-row argmin and the product-grid
+    acceptance scan run inside the kernel, so the batched search returns
+    O(problems) scalars instead of round-tripping the ``(B, A)`` excess
+    matrix through the host (``device_reduce=True``, the default on the
+    kernel-eligible paths).
 """
 
 from __future__ import annotations
@@ -60,6 +66,12 @@ GRID_CHUNK_ROWS = 4096
 _NUMPY_CHUNK_ELEMS = 1_000_000
 _COORD_DESCENT_SWEEPS = 4
 _COORD_DESCENT_SEEDS = 3
+# Strict-improvement slack of every acceptance predicate in the rotation
+# search: a candidate only displaces the incumbent when its excess is lower
+# by more than this.  The device-side accept scan
+# (repro.kernels.circle_score.ops) imports this SAME constant and evaluates
+# the predicate in float64 — host and device acceptance must never drift.
+ACCEPT_SLACK = 1e-12
 
 
 @dataclass
@@ -71,6 +83,15 @@ class BatchStats:
     ``grid_problems`` and problems solved by the lockstep-batched coordinate
     descent are ``descent_problems`` — so ``scalar_fallbacks`` is zero by
     construction, and benchmarks/CI assert it stays that way.
+
+    The transfer counters prove the ``(B, A)`` round-trip is gone on the
+    fused-reduction paths: ``device_reduced`` counts batched evaluations
+    whose argmin/acceptance ran inside the kernel, ``bytes_returned`` the
+    bytes that actually crossed the evaluator→search boundary, and
+    ``bytes_matrix`` what the full excess matrices would have moved — on
+    kernel-eligible shapes ``device_reduced == batched_calls`` and the
+    ratio ``bytes_matrix / bytes_returned`` is ~A/2 or better (asserted
+    ≥ 100x in the CI bench for large grids).
     """
 
     problems: int = 0
@@ -79,12 +100,23 @@ class BatchStats:
     grid_rows: int = 0          # product-grid rows evaluated batched
     descent_problems: int = 0   # solved by batched coordinate descent
     descent_rows: int = 0       # rows evaluated across all descent steps
-    batched_calls: int = 0      # number of _batched_excess invocations
+    batched_calls: int = 0      # number of batched evaluator invocations
+    device_reduced: int = 0     # calls whose argmin/accept ran on device
+    bytes_returned: int = 0     # bytes returned by batched evaluations
+    bytes_matrix: int = 0       # bytes the full (B, A) matrices would move
 
     @property
     def scalar_fallbacks(self) -> int:
         """Problems that did not take a batched (or trivial) path."""
         return self.problems - self.trivial - self.grid_problems - self.descent_problems
+
+    @property
+    def reduction_ratio(self) -> float:
+        """How many times smaller the returned results are than the full
+        ``(B, A)`` matrices (1.0 when every call returned the matrix)."""
+        if self.bytes_returned == 0:
+            return float("inf") if self.bytes_matrix else 1.0
+        return self.bytes_matrix / self.bytes_returned
 
 
 @dataclass(frozen=True)
@@ -194,6 +226,7 @@ def find_rotations_batched(
     seed: int = 0,
     dilate_steps: int = 1,
     stats: BatchStats | None = None,
+    device_reduce: bool = True,
 ) -> list[CompatResult]:
     """Solve many independent link-level Table-1 problems in one pass.
 
@@ -208,17 +241,26 @@ def find_rotations_batched(
         last job scored for all its rotations at once).  Rows from *all*
         such problems are grouped by angle count (capacities ride along
         per-row), chunked to :data:`GRID_CHUNK_ROWS`, and evaluated through
-        :func:`_batched_excess` (Pallas ``circle_score`` kernel on large
-        grids, vectorized numpy otherwise).
+        the kernel-eligible fused reduction (:func:`_batched_segmin` — the
+        per-chunk argmin *and* the product-grid acceptance scan run on
+        device, returning O(problems) scalars) or the full-matrix
+        evaluation (:func:`_batched_excess`: Pallas ``circle_score`` kernel
+        on large grids, vectorized numpy otherwise) plus the host scan.
 
       * everything above the exact-grid cutoff runs the same seeded
         coordinate descent as the scalar path, but *lockstep-batched*: at
         each (trial, sweep, job) step the "score every rotation of the job
         being optimized" rows of all still-active problems are packed into
-        one batched call instead of falling back to per-problem loops.
+        one batched call — :func:`_batched_argmin` on the kernel path, so
+        each step returns one accepted shift per problem instead of the
+        per-problem rotation rows.
 
-    Pass a :class:`BatchStats` to observe which path each problem took
-    (benchmarks assert ``scalar_fallbacks == 0``).
+    ``device_reduce=False`` forces the full-matrix evaluation + host
+    reduction everywhere (the pre-fusion behaviour; results are identical
+    either way — tests assert it).  Pass a :class:`BatchStats` to observe
+    which path each problem took (benchmarks assert ``scalar_fallbacks ==
+    0``, and ``device_reduced`` / ``bytes_returned`` prove the ``(B, A)``
+    round-trip is gone on kernel-eligible shapes).
 
     Returns one :class:`CompatResult` per problem, in input order,
     bit-identical to what per-problem ``find_rotations`` calls would produce
@@ -250,12 +292,12 @@ def find_rotations_batched(
             )
 
     if grid_probs:
-        _solve_grids_batched(grid_probs, backend, stats)
+        _solve_grids_batched(grid_probs, backend, stats, device_reduce)
         stats.grid_problems += len(grid_probs)
         for gp in grid_probs:
             results[gp.index] = _finalize(gp.circle, gp.best, gp.capacity)
     if descent_probs:
-        _solve_descent_batched(descent_probs, backend, stats)
+        _solve_descent_batched(descent_probs, backend, stats, device_reduce)
         stats.descent_problems += len(descent_probs)
         for dp in descent_probs:
             results[dp.index] = _finalize(dp.circle, dp.best, dp.capacity)
@@ -322,12 +364,19 @@ def _finalize(
     )
 
 
+def _kernel_eligible(backend: str, num_angles: int) -> bool:
+    """Shapes the Pallas kernel family handles (mirrors ``_batched_excess``'s
+    routing so the fused and full-matrix paths always agree on backends)."""
+    return backend == "pallas" or (backend == "auto" and num_angles >= 512)
+
+
 def _batched_excess(
     base: np.ndarray,
     cand: np.ndarray,
     capacity: float | np.ndarray,
     *,
     backend: str = "auto",
+    stats: BatchStats | None = None,
 ) -> np.ndarray:
     """Excess sums for every rotation of ``L`` independent rows at once.
 
@@ -343,12 +392,20 @@ def _batched_excess(
     target's hot path) and everything else to a vectorized numpy evaluation;
     ``"pallas"`` / ``"numpy"`` force a path.  Both produce float32 sums like
     the scalar :func:`score_all_shifts`.
+
+    This is the *full-matrix* evaluator: the whole ``(L, A)`` result crosses
+    back to the caller (``stats`` records it), and the argmin/acceptance
+    happens host-side.  The fused :func:`_batched_argmin` /
+    :func:`_batched_segmin` replace it on the kernel-eligible hot paths.
     """
     base = np.asarray(base, dtype=np.float32)
     cand = np.asarray(cand, dtype=np.float32)
     l, a = base.shape
     cap = np.asarray(capacity, dtype=np.float32)
-    if backend == "pallas" or (backend == "auto" and a >= 512):
+    if stats is not None:
+        stats.bytes_returned += l * a * 4
+        stats.bytes_matrix += l * a * 4
+    if _kernel_eligible(backend, a):
         try:
             from repro.kernels.circle_score import ops as _cs_ops
 
@@ -366,6 +423,83 @@ def _batched_excess(
         total = base[i:i + step, None, :] + rolled
         out[i:i + step] = np.maximum(total - cap_rows[i:i + step], 0.0).sum(axis=-1)
     return out
+
+
+def _batched_argmin(
+    base: np.ndarray,
+    cand: np.ndarray,
+    capacity: np.ndarray,
+    valid: np.ndarray,
+    *,
+    backend: str,
+    stats: BatchStats | None = None,
+) -> tuple[np.ndarray, np.ndarray] | None:
+    """Fused per-row rotation search: ``(best_shift, best_excess)`` per row.
+
+    Device path only — returns ``None`` when the shape is not
+    kernel-eligible (or the kernel import fails) so the caller can fall
+    back to the full-matrix evaluation + host ``np.argmin``.  On success
+    only O(L) scalars left the device: ``stats.device_reduced`` counts the
+    call and ``bytes_returned`` grows by the reduced result size instead
+    of the ``(L, A)`` matrix.
+    """
+    l, a = np.asarray(base).shape
+    if not _kernel_eligible(backend, a):
+        return None
+    try:
+        from repro.kernels.circle_score import ops as _cs_ops
+
+        idx, val = _cs_ops.circle_score_argmin(base, cand, capacity, valid)
+        idx, val = np.asarray(idx), np.asarray(val)
+    except Exception:  # pragma: no cover - fallback if pallas unavailable
+        return None
+    if stats is not None:
+        stats.device_reduced += 1
+        stats.bytes_returned += idx.nbytes + val.nbytes
+        stats.bytes_matrix += l * a * 4
+    return idx, val
+
+
+def _batched_segmin(
+    base: np.ndarray,
+    cand: np.ndarray,
+    capacity: np.ndarray,
+    valid: np.ndarray,
+    seg_ids: np.ndarray,
+    init_best: np.ndarray,
+    *,
+    backend: str,
+    stats: BatchStats | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray] | None:
+    """Fused per-row search + segmented acceptance scan, fully on device.
+
+    One segment = the contiguous product-grid rows of one link problem
+    within the chunk; ``init_best`` carries each problem's incumbent best
+    excess across chunk boundaries, so the device scan replays the host
+    acceptance rule (strict 1e-12 improvement, rows in product order)
+    exactly.  Returns ``(accepted, row, shift, best)`` per segment — four
+    O(segments) vectors instead of the ``(B, A)`` matrix — or ``None``
+    when not kernel-eligible.
+    """
+    l, a = np.asarray(base).shape
+    if not _kernel_eligible(backend, a):
+        return None
+    try:
+        from repro.kernels.circle_score import ops as _cs_ops
+
+        acc, row, shift, best = _cs_ops.circle_score_segmin(
+            base, cand, capacity, valid, seg_ids, init_best
+        )
+        acc, row, shift, best = (
+            np.asarray(acc), np.asarray(row), np.asarray(shift), np.asarray(best)
+        )
+    except Exception:  # pragma: no cover - fallback if pallas unavailable
+        return None
+    if stats is not None:
+        stats.device_reduced += 1
+        stats.bytes_returned += acc.nbytes + row.nbytes + shift.nbytes + best.nbytes
+        stats.bytes_matrix += l * a * 4
+    return acc, row, shift, best
 
 
 @functools.lru_cache(maxsize=16)
@@ -408,7 +542,7 @@ def _exact_search(
         ex = score_all_shifts(base, circle.bw[last], capacity, backend=backend)
         ex = ex[: grids[last]]  # Eq. 4 bound: distinct rotations only
         s_last = int(np.argmin(ex))
-        if ex[s_last] < best_excess - 1e-12:
+        if ex[s_last] < best_excess - ACCEPT_SLACK:
             best_excess = float(ex[s_last])
             best = (0, *mid, s_last)
         if best_excess == 0.0:
@@ -452,7 +586,7 @@ def _coordinate_descent(
             if not changed:
                 break
         ex_now = float(np.maximum(total - capacity, 0.0).sum())
-        if ex_now < best_excess - 1e-12:
+        if ex_now < best_excess - ACCEPT_SLACK:
             best_excess = ex_now
             best = tuple(int(s) for s in shifts)
         if best_excess == 0.0:
@@ -508,30 +642,43 @@ class _GridProblem:
     def update(self, mid: tuple[int, ...], row: np.ndarray) -> None:
         ex = row[: self.grids[self.last]]  # Eq. 4 bound
         s_last = int(np.argmin(ex))
-        if float(ex[s_last]) < self.best_excess - 1e-12:
+        if float(ex[s_last]) < self.best_excess - ACCEPT_SLACK:
             self.best_excess = float(ex[s_last])
             self.best = (0, *mid, s_last)
 
 
 def _solve_grids_batched(
-    probs: Sequence[_GridProblem], backend: str, stats: BatchStats
+    probs: Sequence[_GridProblem],
+    backend: str,
+    stats: BatchStats,
+    device_reduce: bool = True,
 ) -> None:
     """Evaluate every problem's product grid through chunked batched calls.
 
     Rows are grouped by angle count only — per-row capacities let links with
     different capacities share a call — and flushed every
     :data:`GRID_CHUNK_ROWS` rows so memory stays bounded at any grid size.
-    Within one problem rows arrive in product order, so the sequential
-    ``update`` scan reproduces the scalar loop's tie-breaking; flushing
-    between chunks also lets ``iter_rows`` early-out the moment a problem
-    reaches zero excess, exactly like the scalar break.
+
+    On kernel-eligible shapes (``device_reduce=True``) each chunk goes
+    through :func:`_batched_segmin`: one segment per problem (rows stay in
+    product order, the problem's incumbent best rides in as the segment's
+    init), and the per-row argmin *and* the acceptance scan run on device —
+    only per-problem ``(accepted, row, shift, best)`` scalars come back.
+    Otherwise the full ``(B, A)`` matrix is evaluated and the sequential
+    ``update`` scan runs host-side.  Both replay the scalar loop's
+    tie-breaking exactly; flushing between chunks also lets ``iter_rows``
+    early-out the moment a problem reaches zero excess, exactly like the
+    scalar break.
     """
     by_angles: dict[int, list[_GridProblem]] = {}
     for p in probs:
         by_angles.setdefault(p.circle.num_angles, []).append(p)
 
-    for group in by_angles.values():
+    for num_angles, group in by_angles.items():
         pending: list[tuple[_GridProblem, tuple[int, ...], np.ndarray]] = []
+        # hoisted: on the numpy path (small grids) the per-chunk segment
+        # bookkeeping below would be pure overhead
+        try_device = device_reduce and _kernel_eligible(backend, num_angles)
 
         def flush() -> None:
             if not pending:
@@ -539,11 +686,35 @@ def _solve_grids_batched(
             base = np.stack([row for _, _, row in pending])
             cand = np.stack([p.circle.bw[p.last] for p, _, _ in pending])
             caps = np.array([p.capacity for p, _, _ in pending], dtype=np.float32)
-            ex = _batched_excess(base, cand, caps, backend=backend)
             stats.batched_calls += 1
             stats.grid_rows += len(pending)
-            for (p, mid, _), row in zip(pending, ex):
-                p.update(mid, row)
+            reduced = None
+            if try_device:
+                # contiguous segments: rows were appended problem-by-problem
+                segs: list[_GridProblem] = []
+                seg_ids = np.empty(len(pending), dtype=np.int32)
+                for r, (p, _, _) in enumerate(pending):
+                    if not segs or segs[-1] is not p:
+                        segs.append(p)
+                    seg_ids[r] = len(segs) - 1
+                valid = np.array(
+                    [p.grids[p.last] for p, _, _ in pending], dtype=np.int32
+                )
+                init = np.array([p.best_excess for p in segs], dtype=np.float64)
+                reduced = _batched_segmin(
+                    base, cand, caps, valid, seg_ids, init,
+                    backend=backend, stats=stats,
+                )
+            if reduced is not None:
+                acc, row, shift, best = reduced
+                for s, p in enumerate(segs):
+                    if acc[s]:
+                        p.best_excess = float(best[s])
+                        p.best = (0, *pending[row[s]][1], int(shift[s]))
+            else:
+                ex = _batched_excess(base, cand, caps, backend=backend, stats=stats)
+                for (p, mid, _), row_ex in zip(pending, ex):
+                    p.update(mid, row_ex)
             pending.clear()
 
         for p in group:
@@ -609,8 +780,12 @@ class _DescentState:
         return self.total - self.rotated[j], self.circle.bw[j]
 
     def apply(self, j: int, base: np.ndarray, row: np.ndarray) -> None:
+        """Host-side acceptance: argmin over job ``j``'s admissible shifts."""
         ex = row[: self.grids[j]]
-        s_new = int(np.argmin(ex))
+        self.apply_shift(j, base, int(np.argmin(ex)))
+
+    def apply_shift(self, j: int, base: np.ndarray, s_new: int) -> None:
+        """Accept the (host- or device-computed) best shift for job ``j``."""
         if s_new != self.shifts[j]:
             self.shifts[j] = s_new
             new_rot = self.circle.rotated(j, s_new)
@@ -620,7 +795,7 @@ class _DescentState:
 
     def end_trial(self) -> None:
         ex_now = float(np.maximum(self.total - self.capacity, 0.0).sum())
-        if ex_now < self.best_excess - 1e-12:
+        if ex_now < self.best_excess - ACCEPT_SLACK:
             self.best_excess = ex_now
             self.best = tuple(int(s) for s in self.shifts)
         if self.best_excess == 0.0:
@@ -628,17 +803,25 @@ class _DescentState:
 
 
 def _solve_descent_batched(
-    states: Sequence[_DescentState], backend: str, stats: BatchStats
+    states: Sequence[_DescentState],
+    backend: str,
+    stats: BatchStats,
+    device_reduce: bool = True,
 ) -> None:
     """Run all coordinate descents in lockstep, batching each step's rows.
 
     At step (trial, sweep, job j) the base-vs-candidate rows of every
     problem still active at that step are grouped by angle count (per-row
-    capacities ride along) and scored in one :func:`_batched_excess` call —
-    one row per problem, every candidate shift of job ``j`` covered by the
-    call's rotation axis.  Per-problem updates between steps keep the exact
-    scalar semantics (sequential-within-sweep, convergence breaks, seeded
-    restarts).
+    capacities ride along) and scored in one batched call — one row per
+    problem, every candidate shift of job ``j`` covered by the call's
+    rotation axis.  On kernel-eligible shapes (``device_reduce=True``) the
+    call is the fused :func:`_batched_argmin`, so the sweep's acceptance
+    consumes one ``(shift, excess)`` pair per problem instead of the
+    ``(problems, A)`` rotation matrix; otherwise the full matrix comes
+    back and ``np.argmin`` runs host-side.  Per-problem updates between
+    steps keep the exact scalar semantics (sequential-within-sweep,
+    convergence breaks, seeded restarts) — accepted-shift sequences are
+    identical either way.
     """
     for trial in range(_COORD_DESCENT_SEEDS):
         live = [s for s in states if not s.done]
@@ -657,16 +840,31 @@ def _solve_descent_batched(
                 by_angles: dict[int, list[_DescentState]] = {}
                 for s in stepping:
                     by_angles.setdefault(s.circle.num_angles, []).append(s)
-                for group in by_angles.values():
+                for num_angles, group in by_angles.items():
                     rows = [s.job_row(j) for s in group]
                     base = np.stack([b for b, _ in rows])
                     cand = np.stack([c for _, c in rows])
                     caps = np.array([s.capacity for s in group], dtype=np.float32)
-                    ex = _batched_excess(base, cand, caps, backend=backend)
                     stats.batched_calls += 1
                     stats.descent_rows += len(group)
-                    for s, (b, _), row in zip(group, rows, ex):
-                        s.apply(j, b, row)
+                    reduced = None
+                    if device_reduce and _kernel_eligible(backend, num_angles):
+                        valid = np.array(
+                            [s.grids[j] for s in group], dtype=np.int32
+                        )
+                        reduced = _batched_argmin(
+                            base, cand, caps, valid, backend=backend, stats=stats
+                        )
+                    if reduced is not None:
+                        s_new, _ = reduced
+                        for s, (b, _), sn in zip(group, rows, s_new):
+                            s.apply_shift(j, b, int(sn))
+                    else:
+                        ex = _batched_excess(
+                            base, cand, caps, backend=backend, stats=stats
+                        )
+                        for s, (b, _), row in zip(group, rows, ex):
+                            s.apply(j, b, row)
             for s in sweeping:
                 s.in_sweep = s.changed
         for s in live:

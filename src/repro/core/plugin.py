@@ -90,12 +90,17 @@ class CassiniModule:
         aggregate: Callable[[Sequence[float]], float] | None = None,
         max_workers: int | None = None,
         seed: int = 0,
+        device_reduce: bool = True,
     ) -> None:
         self.precision_deg = precision_deg
         self.quantum_ms = quantum_ms
         self.aggregate = aggregate or (lambda xs: float(np.mean(xs)))
         self.max_workers = max_workers
         self.seed = seed
+        # Batched solves keep the rotation-search argmin/acceptance on the
+        # device for kernel-eligible shapes (fused circle_score reduction);
+        # False forces the full-matrix + host-reduction path everywhere.
+        self.device_reduce = device_reduce
         # Candidates at one epoch mostly share link job-sets: memoize the
         # per-link optimization across candidates (and epochs).  All reads
         # and writes go through ``_cache_lock`` so the ThreadPoolExecutor
@@ -281,7 +286,12 @@ class CassiniModule:
         k-job link's shift product grid into batched ``circle_score``
         evaluations (Pallas kernel / vectorized numpy) and lockstep-batches
         the coordinate-descent sweeps above the exact-grid cutoff — no link
-        shape drops to the scalar path.  Results land in the shared link
+        shape drops to the scalar path.  With ``device_reduce`` (the
+        default) the kernel-eligible evaluations use the *fused* reduction:
+        argmin and grid acceptance run inside the kernel and only
+        per-problem scalars return to the host, never the ``(B, A)`` excess
+        matrix (``last_batch_stats.device_reduced`` / ``bytes_returned``
+        prove it).  Results land in the shared link
         cache, so the final per-candidate assembly is pure cache hits and
         the scalar and batched paths produce identical Evaluated tuples;
         ``self.last_batch_stats`` records which batched path each problem
@@ -311,6 +321,7 @@ class CassiniModule:
                 quantum_ms=self.quantum_ms,
                 seed=self.seed,
                 stats=stats,
+                device_reduce=self.device_reduce,
             )
             self.last_batch_stats = stats
             for key, res in zip(keys, solved):

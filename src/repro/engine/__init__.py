@@ -39,6 +39,7 @@ _EXPORTS = {
     "register_scenario": ".scenarios",
     "get_scenario": ".scenarios",
     "list_scenarios": ".scenarios",
+    "MULTITENANT_SWEEP": ".scenarios",
 }
 
 __all__ = sorted(_EXPORTS)

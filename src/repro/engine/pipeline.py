@@ -124,8 +124,12 @@ class ScoreStage(PipelineStage):
 
     With ``batched=True`` (the default) all uncached link problems of the
     epoch — any job count — are solved through the batched grid /
-    lockstep-descent paths of ``find_rotations_batched``;
-    :attr:`last_batch_stats` reflects the most recent batched solve.
+    lockstep-descent paths of ``find_rotations_batched``, and (with the
+    module's ``device_reduce``, also the default) kernel-eligible rotation
+    searches keep the argmin/acceptance reduction on device, returning
+    per-problem scalars instead of the ``(B, A)`` excess matrices;
+    :attr:`last_batch_stats` reflects the most recent batched solve
+    (``device_reduced`` / ``bytes_returned`` expose the transfer savings).
     """
 
     name = "score"

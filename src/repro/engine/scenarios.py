@@ -16,6 +16,7 @@ Adding a new workload (trace × topology × scheduler set) is one
 
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Mapping, Sequence
@@ -47,6 +48,7 @@ __all__ = [
     "register_scenario",
     "get_scenario",
     "list_scenarios",
+    "MULTITENANT_SWEEP",
 ]
 
 SchedulerFactory = Callable[[], Scheduler]
@@ -282,7 +284,7 @@ register_scenario(ScenarioSpec(
 ))
 
 
-def _hetero_16rack_topology() -> Topology:
+def _hetero_16rack_topology(oversubscription: float = 2.0) -> Topology:
     """16 racks × 4 servers with alternating 50/100 Gbps NIC generations —
     the ROADMAP's "larger fabrics, heterogeneous NIC rates" open item."""
     return Topology(
@@ -290,7 +292,7 @@ def _hetero_16rack_topology() -> Topology:
         servers_per_rack=4,
         nic_gbps=50.0,
         rack_nic_gbps=tuple(100.0 if r % 2 else 50.0 for r in range(16)),
-        oversubscription=2.0,
+        oversubscription=oversubscription,
     )
 
 
@@ -307,6 +309,85 @@ register_scenario(ScenarioSpec(
     epoch_ms=240_000.0,
     horizon_ms=3_600_000.0,
 ))
+
+
+# Table-2-style multi-tenant snapshots, promoted from the hand-rolled
+# benchmarks/table2_snapshots driver into registry entries: N concurrent
+# 4-worker tenants pinned onto the heterogeneous 16-rack fabric at t=0 in
+# a deliberately *fragmented* half-rack chain — tenant i takes the back
+# half of rack i and the front half of rack i+1, so every tenant's
+# traffic crosses two rack uplinks and every interior rack's uplink
+# carries two tenants (what fragmentation does in a busy cluster, cf.
+# Table 2's forced r0↔r1 placements) across alternating 50/100 Gbps NIC
+# racks — while no two tenants ever share a server.  Like the paper's
+# snapshots, the placement is fixed and only the time-shift interleaving
+# differs between the two schedulers (ROADMAP scenario-diversity item).
+MULTITENANT_SWEEP: tuple[int, ...] = (2, 4, 8)
+_MULTITENANT_MENU = [
+    ("wideresnet101", 800), ("vgg16", 1400), ("vgg19", 1400),
+    ("resnet50", 1600), ("roberta", 12), ("bert", 8),
+]
+_MULTITENANT_WORKERS = 4  # half of rack i + half of rack i+1
+
+
+def _multitenant_specs(tenants: int) -> list[tuple[str, int, int]]:
+    return [
+        (model, _MULTITENANT_WORKERS, batch)
+        for model, batch in (
+            _MULTITENANT_MENU[i % len(_MULTITENANT_MENU)] for i in range(tenants)
+        )
+    ]
+
+
+def _multitenant_trace(_: Topology, *, tenants: int, iters: int = 200) -> list[Job]:
+    return snapshot_trace(_multitenant_specs(tenants), iters=iters)
+
+
+def _multitenant_placements(tenants: int) -> dict[str, tuple[int, ...]]:
+    """Tenant i → back half of rack i + front half of rack i+1.
+
+    Adjacent tenants meet in every interior rack (shared uplink) but the
+    server sets are pairwise disjoint — no GPU is double-booked.
+    """
+    jobs = snapshot_trace(_multitenant_specs(tenants), iters=1)
+    placements: dict[str, tuple[int, ...]] = {}
+    for i, j in enumerate(jobs):
+        placements[j.job_id] = (
+            4 * i + 2, 4 * i + 3, 4 * (i + 1), 4 * (i + 1) + 1
+        )
+    return placements
+
+
+def _multitenant_schedulers(tenants: int) -> dict[str, SchedulerFactory]:
+    placements = _multitenant_placements(tenants)
+    return {
+        "fair-share": lambda: FixedPlacementScheduler(placements),
+        "cassini": lambda: CassiniAugmented(
+            FixedPlacementScheduler(placements), num_candidates=1
+        ),
+    }
+
+
+for _n in MULTITENANT_SWEEP:
+    register_scenario(ScenarioSpec(
+        name=f"multitenant-{_n}",
+        description=f"Table-2-style snapshot sweep: {_n} concurrent 4-worker "
+                    "tenants half-rack-chained across the hetero-16rack "
+                    "fabric at 4:1 oversubscription (one contended spine "
+                    "uplink per rack, 50/100 Gbps aggregate, no shared "
+                    "servers); fixed placement, fair-share vs CASSINI "
+                    "time-shifts",
+        # 4:1 oversubscription collapses each rack onto a single spine
+        # uplink (4 servers / 4), so chained tenants genuinely share it —
+        # at the default 2:1 the two ECMP uplinks often separate the pair
+        # and the snapshot degenerates to zero contention
+        topology=functools.partial(_hetero_16rack_topology, oversubscription=4.0),
+        trace=functools.partial(_multitenant_trace, tenants=_n),
+        schedulers=_multitenant_schedulers(_n),
+        epoch_ms=240_000.0,
+        horizon_ms=1_800_000.0,
+        compute_jitter=0.0,
+    ))
 
 
 register_scenario(ScenarioSpec(

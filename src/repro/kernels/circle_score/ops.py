@@ -1,22 +1,53 @@
-"""Jitted public entry point for circle_score.
+"""Jitted public entry points for the circle_score kernel family.
 
-``circle_score(base, cand, capacity)`` dispatches to the Pallas kernel
-(interpret mode on CPU — the TPU target compiles the same kernel with
-``interpret=False``) and is what :mod:`repro.core.compat` calls for large
-angle grids.
+``circle_score(base, cand, capacity)`` dispatches to the full-matrix
+Pallas kernel (interpret mode on CPU — the TPU target compiles the same
+kernel with ``interpret=False``) and is what :mod:`repro.core.compat`
+calls for its numpy-free fallback paths and what the tests oracle against.
+
+``circle_score_argmin`` is the fused reduction: per-row
+``(best_shift, best_excess)`` computed inside the kernel's shift loop, so
+only O(L) scalars cross the device→host boundary instead of the O(L·A)
+excess matrix.
+
+``circle_score_segmin`` layers the segmented accept-scan on top: rows
+belong to contiguous *segments* (one segment = one link problem's product
+grid rows within a chunk) and the scan replays the host coordinate-search
+acceptance rule — visit rows in order, accept a row's best shift iff it
+beats the segment's incumbent by more than the 1e-12 slack — entirely on
+device, returning four O(num_segments) vectors.  The scan runs in float64
+(via :func:`jax.experimental.enable_x64`) so the ``excess < best − 1e-12``
+predicate is evaluated in exactly the arithmetic the host search uses
+(python floats), keeping accepted-shift sequences bit-identical even for
+sub-ulp float32 excess differences.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
 
-from .kernel import circle_score_pallas
-from .ref import circle_score_ref
+from .kernel import circle_score_argmin_pallas, circle_score_pallas
+from .ref import circle_score_argmin_ref, circle_score_ref
 
-__all__ = ["circle_score", "circle_score_ref"]
+__all__ = [
+    "circle_score",
+    "circle_score_argmin",
+    "circle_score_segmin",
+    "circle_score_ref",
+    "circle_score_argmin_ref",
+    "ACCEPT_SLACK",
+]
 
 _ON_TPU = jax.default_backend() == "tpu"
+
+# The host rotation search's strict-improvement slack — ONE source of truth,
+# owned by repro.core.compat (numpy-only, no import cycle: compat only loads
+# this module lazily inside functions).  Re-exported here because the device
+# accept scan below evaluates the same predicate.
+from repro.core.compat import ACCEPT_SLACK  # noqa: E402
 
 
 def circle_score(base, cand, capacity) -> jax.Array:
@@ -26,3 +57,81 @@ def circle_score(base, cand, capacity) -> jax.Array:
     cand = jnp.atleast_2d(jnp.asarray(cand, jnp.float32))
     cap = jnp.asarray(capacity, jnp.float32)
     return circle_score_pallas(base, cand, cap, interpret=not _ON_TPU)
+
+
+def circle_score_argmin(base, cand, capacity, valid=None):
+    """Fused rotation search: ``(best_shift, best_excess)`` per row.
+
+    ``valid`` bounds the admissible shifts per row (Eq. 4: job ``j`` only
+    has ``A / r_j`` distinct rotations); ``None`` admits all ``A`` shifts.
+    Bit-identical to ``np.argmin`` over ``circle_score(...)[l, :valid[l]]``
+    (first-index tie-breaking) without ever materializing the matrix.
+    """
+    base = jnp.atleast_2d(jnp.asarray(base, jnp.float32))
+    cand = jnp.atleast_2d(jnp.asarray(cand, jnp.float32))
+    cap = jnp.asarray(capacity, jnp.float32)
+    l, a = base.shape
+    if valid is None:
+        valid = jnp.full((l,), a, jnp.int32)
+    else:
+        valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32).reshape(-1), (l,))
+    return circle_score_argmin_pallas(
+        base, cand, cap, valid, interpret=not _ON_TPU
+    )
+
+
+@jax.jit
+def _accept_scan(val, idx, seg_ids, init_best):
+    """Sequential accept fold over rows, segmented by ``seg_ids``.
+
+    Path-dependent by design (the slack rule is not associative), hence a
+    scan rather than a segmented min.  Must run under x64 so the predicate
+    matches the host's float64 comparison exactly.
+    """
+    num_segs = init_best.shape[0]
+    rows = jnp.arange(val.shape[0], dtype=jnp.int32)
+
+    def step(state, xs):
+        best, row, shift, acc = state
+        v, i, sid, r = xs
+        take = v < best[sid] - ACCEPT_SLACK
+        best = best.at[sid].set(jnp.where(take, v, best[sid]))
+        row = row.at[sid].set(jnp.where(take, r, row[sid]))
+        shift = shift.at[sid].set(jnp.where(take, i, shift[sid]))
+        acc = acc.at[sid].set(jnp.logical_or(acc[sid], take))
+        return (best, row, shift, acc), None
+
+    init = (
+        init_best.astype(jnp.float64),
+        jnp.zeros(num_segs, jnp.int32),
+        jnp.zeros(num_segs, jnp.int32),
+        jnp.zeros(num_segs, jnp.bool_),
+    )
+    (best, row, shift, acc), _ = jax.lax.scan(
+        step, init, (val.astype(jnp.float64), idx, seg_ids, rows)
+    )
+    return acc, row, shift, best
+
+
+def circle_score_segmin(base, cand, capacity, valid, seg_ids, init_best):
+    """Fused rotation search + segmented acceptance, fully device-side.
+
+    Args:
+      base, cand, capacity, valid: as :func:`circle_score_argmin`.
+      seg_ids: (L,) int — segment index of each row (rows of one segment
+        must be contiguous and in host visit order).
+      init_best: (S,) float64 — each segment's incumbent best excess from
+        previous chunks (``inf`` for a fresh segment).
+
+    Returns ``(accepted (S,) bool, row (S,) int32, shift (S,) int32,
+    best (S,) float64)`` — ``row`` is the chunk-global index of the
+    accepted row; entries with ``accepted == False`` carry their init
+    state.  Only these four O(S) vectors leave the device.
+    """
+    idx, val = circle_score_argmin(base, cand, capacity, valid)
+    seg = jnp.asarray(np.asarray(seg_ids), jnp.int32)
+    with enable_x64():
+        acc, row, shift, best = _accept_scan(
+            val, idx, seg, jnp.asarray(np.asarray(init_best, np.float64))
+        )
+    return acc, row, shift, best

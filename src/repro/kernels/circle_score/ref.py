@@ -1,9 +1,10 @@
-"""Pure-jnp oracle for the circle_score kernel."""
+"""Pure oracles for the circle_score kernel family."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def circle_score_ref(base: jax.Array, cand: jax.Array, capacity) -> jax.Array:
@@ -19,3 +20,21 @@ def circle_score_ref(base: jax.Array, cand: jax.Array, capacity) -> jax.Array:
     cap = cap.reshape(-1, 1, 1) if cap.ndim else cap
     total = base[:, None, :] + rolled - cap
     return jnp.maximum(total, 0.0).sum(axis=-1)
+
+
+def circle_score_argmin_ref(base, cand, capacity, valid=None):
+    """Host oracle for the fused reduction: full matrix, then per-row
+    ``np.argmin`` over the first ``valid[l]`` admissible shifts (first-index
+    tie-breaking — exactly what the scalar rotation search does)."""
+    mat = np.asarray(circle_score_ref(
+        jnp.asarray(base, jnp.float32), jnp.asarray(cand, jnp.float32), capacity
+    ))
+    l, a = mat.shape
+    valid = np.full(l, a) if valid is None else np.broadcast_to(valid, (l,))
+    idx = np.empty(l, np.int32)
+    val = np.empty(l, np.float32)
+    for i in range(l):
+        s = int(np.argmin(mat[i, : valid[i]]))
+        idx[i] = s
+        val[i] = mat[i, s]
+    return idx, val

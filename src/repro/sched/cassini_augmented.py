@@ -30,6 +30,7 @@ class CassiniAugmented(Scheduler):
         pace_threshold: float = 0.9,
         batched: bool = True,
         seed: int = 0,
+        device_reduce: bool = True,
     ) -> None:
         # pacing (isochronous grid) is only armed for jobs whose every
         # contended link scored >= pace_threshold: holding the grid on a
@@ -45,7 +46,8 @@ class CassiniAugmented(Scheduler):
         from repro.engine.pipeline import SchedulingPipeline
 
         self.module = CassiniModule(
-            precision_deg=precision_deg, quantum_ms=quantum_ms, seed=seed
+            precision_deg=precision_deg, quantum_ms=quantum_ms, seed=seed,
+            device_reduce=device_reduce,
         )
         self.pipeline = SchedulingPipeline.cassini(
             host,

@@ -162,6 +162,48 @@ def test_cache_contents_match_scalar_path_seeded():
     assert m_batched.last_batch_stats.scalar_fallbacks == 0
 
 
+@pytest.mark.parametrize("seed", range(3))
+def test_descent_accepted_shift_sequences_device_on_off(seed):
+    """The lockstep descent must walk the *same* accepted-shift sequence
+    whether each step's argmin runs on device (fused kernel) or on the host
+    (full matrix + np.argmin) — not just end in the same optimum.  Forcing
+    backend='pallas' makes small circles kernel-eligible so the device path
+    actually runs."""
+    from repro.core.compat import _DescentState
+
+    rng = np.random.default_rng(300 + seed)
+    problems = [_random_problem(rng, f"p{i}", 4) for i in range(2)]
+
+    def record_run(device_reduce):
+        accepted: list[tuple[int, int, int]] = []
+        orig = _DescentState.apply_shift
+
+        def recording(self, j, base, s_new):
+            accepted.append((self.index, j, int(s_new)))
+            return orig(self, j, base, s_new)
+
+        stats = BatchStats()
+        try:
+            _DescentState.apply_shift = recording
+            results = find_rotations_batched(
+                problems, backend="pallas", stats=stats,
+                device_reduce=device_reduce,
+            )
+        finally:
+            _DescentState.apply_shift = orig
+        return accepted, results, stats
+
+    acc_on, res_on, stats_on = record_run(True)
+    acc_off, res_off, stats_off = record_run(False)
+    assert acc_on == acc_off          # identical step-by-step acceptance
+    assert len(acc_on) > 0
+    _assert_bit_identical(res_off, res_on)
+    assert stats_on.descent_problems == stats_off.descent_problems == 2
+    assert stats_on.device_reduced == stats_on.batched_calls > 0
+    assert stats_off.device_reduced == 0
+    assert stats_on.bytes_returned < stats_off.bytes_returned
+
+
 def test_batch_stats_routes_every_problem():
     """Stats partition the problem set: trivial + grid + descent covers all
     shapes with no scalar fallback."""

@@ -252,6 +252,40 @@ def test_hetero_16rack_topology_and_cassini_beats_host():
             >= host.metrics.summary()["jobs_finished"])
 
 
+def test_multitenant_sweep_registered_and_contended():
+    """Registry smoke test for the Table-2-style multi-tenant sweep: the
+    2/4/8-tenant scenarios exist on the hetero-16rack fabric, the half-rack
+    chain splits every tenant across two racks so interior uplinks carry
+    two tenants — without any two tenants sharing a server — and CASSINI's
+    time-shifts are no worse than fair-share on avg JCT at 4 tenants."""
+    from repro.engine.scenarios import MULTITENANT_SWEEP
+
+    assert MULTITENANT_SWEEP == (2, 4, 8)
+    for n in MULTITENANT_SWEEP:
+        spec = get_scenario(f"multitenant-{n}")
+        assert set(spec.scheduler_names()) == {"fair-share", "cassini"}
+        built = spec.build("fair-share")
+        assert built.topology.num_racks == 16
+        assert len(built.jobs) == n
+        assert all(j.num_workers == 4 for j in built.jobs)
+        placements = built.scheduler.placements
+        assert len(placements) == n
+        # no GPU double-booked across tenants
+        all_servers = [s for srv in placements.values() for s in srv]
+        assert len(all_servers) == len(set(all_servers))
+        # every tenant crosses two racks, chained: tenant i's front-half
+        # servers sit in tenant i+1's home rack (shared uplink)
+        homes = [built.topology.rack_of(min(srv)) for srv in placements.values()]
+        spills = [built.topology.rack_of(max(srv)) for srv in placements.values()]
+        assert all(s == h + 1 for h, s in zip(homes, spills))
+        assert spills[:-1] == homes[1:]
+
+    spec4 = get_scenario("multitenant-4")
+    fair = spec4.run("fair-share")
+    cass = spec4.run("cassini")
+    assert cass.metrics.avg_jct_ms <= fair.metrics.avg_jct_ms
+
+
 def test_get_scenario_unknown_name():
     with pytest.raises(KeyError, match="unknown scenario"):
         get_scenario("no-such-scenario")

@@ -1,0 +1,317 @@
+"""Parity harness for the fused device-resident rotation search.
+
+``circle_score_argmin`` must match host ``np.argmin`` over the full
+excess matrix *bit for bit* — same excess values, first-index (lowest
+shift) tie-breaking — for every row shape the batched search can
+produce: equal excess at multiple shifts, zero-capacity rows (every
+shift ties), all-infeasible rows (no shift reaches zero excess) and
+per-row admissible-shift bounds.  ``circle_score_segmin`` must replay
+the product-grid acceptance scan (strict 1e-12 improvement, rows in
+order, incumbent carried across chunks) exactly.  Lane padding — the
+default that makes any angle count Mosaic-alignable — must not change
+one output bit.
+
+The hypothesis properties need the dev extra; seeded numpy sweeps cover
+the same distributions where it is unavailable.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.compat import BatchStats, find_rotations, find_rotations_batched
+from repro.core.circle import CommPattern, Phase
+from repro.kernels.circle_score.kernel import (
+    LANE_MULTIPLE,
+    circle_score_argmin_pallas,
+    circle_score_pallas,
+)
+from repro.kernels.circle_score.ops import (
+    ACCEPT_SLACK,
+    circle_score,
+    circle_score_argmin,
+    circle_score_argmin_ref,
+    circle_score_segmin,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev extra absent
+    HAVE_HYPOTHESIS = False
+
+
+def _random_rows(rng, l, a, *, zero_cap_frac=0.25, infeasible_frac=0.25):
+    base = (rng.random((l, a)) * 60).astype(np.float32)
+    cand = (rng.random((l, a)) * 60).astype(np.float32)
+    caps = rng.choice([25.0, 50.0, 100.0], l).astype(np.float32)
+    k = int(l * zero_cap_frac)
+    caps[:k] = 0.0                       # zero capacity: every shift ties
+    m = int(l * infeasible_frac)
+    base[k:k + m] += 200.0               # all-infeasible: excess everywhere
+    valid = rng.integers(1, a + 1, l).astype(np.int32)
+    return base, cand, caps, valid
+
+
+def _assert_parity(base, cand, caps, valid):
+    idx, val = circle_score_argmin(base, cand, caps, valid)
+    idx, val = np.asarray(idx), np.asarray(val)
+    ref_idx, ref_val = circle_score_argmin_ref(base, cand, caps, valid)
+    np.testing.assert_array_equal(idx, ref_idx)
+    np.testing.assert_array_equal(val, ref_val)
+    # and against the kernel's own full matrix (the exact values the host
+    # reduction would have seen)
+    mat = np.asarray(circle_score(base, cand, caps))
+    for i in range(len(idx)):
+        assert idx[i] == np.argmin(mat[i, : valid[i]])
+        assert val[i] == mat[i, idx[i]]
+
+
+# ---------------------------------------------------------------------- #
+# per-row argmin parity
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed,l,a", [(0, 6, 72), (1, 4, 257), (2, 9, 144),
+                                      (3, 3, 720), (4, 33, 96)])
+def test_argmin_parity_seeded(seed, l, a):
+    rng = np.random.default_rng(seed)
+    _assert_parity(*_random_rows(rng, l, a))
+
+
+def test_argmin_ties_pick_lowest_shift():
+    """Exactly periodic candidate: shifts s and s + A/2 produce identical
+    excess — the fused reduction must return the lower one, like argmin."""
+    a = 144
+    base = np.zeros((2, a), np.float32)
+    base[:, :12] = 80.0
+    cand = np.zeros((2, a), np.float32)
+    cand[:, 20:32] = 60.0
+    cand[:, 20 + a // 2: 32 + a // 2] = 60.0   # period A/2 ⇒ full-circle ties
+    idx, val = circle_score_argmin(base, cand, 50.0)
+    mat = np.asarray(circle_score(base, cand, 50.0))
+    for i in range(2):
+        winners = np.flatnonzero(mat[i] == mat[i].min())
+        assert len(winners) >= 2               # the tie actually happened
+        assert int(np.asarray(idx)[i]) == winners[0]
+
+
+def test_argmin_zero_capacity_rows():
+    """C = 0 makes every rotation's excess the same total demand.  With
+    integer demands the float32 sums are exact, so all A shifts tie
+    *exactly* and the reduction must settle on shift 0 (lowest wins)."""
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, 40, (3, 72)).astype(np.float32)
+    cand = rng.integers(0, 40, (3, 72)).astype(np.float32)
+    idx, val = circle_score_argmin(base, cand, 0.0)
+    assert np.all(np.asarray(idx) == 0)
+    np.testing.assert_array_equal(
+        np.asarray(val), (base + cand).sum(axis=1, dtype=np.float32)
+    )
+
+
+def test_argmin_all_infeasible_rows():
+    """No rotation reaches zero excess: the early-exit must not fire and the
+    scan must still return the true minimum."""
+    rng = np.random.default_rng(6)
+    base = (rng.random((4, 96)) * 30 + 100).astype(np.float32)
+    cand = (rng.random((4, 96)) * 30).astype(np.float32)
+    idx, val = circle_score_argmin(base, cand, 50.0)
+    assert np.all(np.asarray(val) > 0.0)
+    _assert_parity(base, cand, np.full(4, 50.0, np.float32),
+                   np.full(4, 96, np.int32))
+
+
+# ---------------------------------------------------------------------- #
+# segmented acceptance scan
+# ---------------------------------------------------------------------- #
+def _host_fold(mat, valid, seg_ids, init_best):
+    """Reference: the scalar product-grid acceptance loop."""
+    num_segs = len(init_best)
+    best = [float(b) for b in init_best]
+    row = [0] * num_segs
+    shift = [0] * num_segs
+    acc = [False] * num_segs
+    for r in range(mat.shape[0]):
+        sid = int(seg_ids[r])
+        s = int(np.argmin(mat[r, : valid[r]]))
+        if float(mat[r, s]) < best[sid] - ACCEPT_SLACK:
+            best[sid] = float(mat[r, s])
+            row[sid] = r
+            shift[sid] = s
+            acc[sid] = True
+    return acc, row, shift, best
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_segmin_matches_host_acceptance_scan(seed):
+    rng = np.random.default_rng(100 + seed)
+    l, a = 24, 144
+    base, cand, caps, valid = _random_rows(rng, l, a)
+    seg_sizes = [5, 1, 8, 10]
+    seg_ids = np.repeat(np.arange(4), seg_sizes).astype(np.int32)
+    # mixed incumbents: fresh (inf), already-zero (0 — nothing can beat it),
+    # and a finite best carried from a "previous chunk"
+    init = np.array([np.inf, 0.0, np.inf, 300.0], np.float64)
+    acc, row, shift, best = map(
+        np.asarray, circle_score_segmin(base, cand, caps, valid, seg_ids, init)
+    )
+    mat = np.asarray(circle_score(base, cand, caps))
+    h_acc, h_row, h_shift, h_best = _host_fold(mat, valid, seg_ids, init)
+    np.testing.assert_array_equal(acc, h_acc)
+    np.testing.assert_array_equal(best, h_best)
+    for s in range(4):
+        if acc[s]:
+            assert row[s] == h_row[s] and shift[s] == h_shift[s]
+    assert not acc[1]  # zero incumbent is unbeatable
+
+
+def test_segmin_equal_row_does_not_displace_earlier():
+    """Two identical rows in one segment: the strict-slack rule keeps the
+    first accepted row (np.argmin-style earliest-wins across rows)."""
+    rng = np.random.default_rng(9)
+    one = (rng.random((1, 72)) * 80).astype(np.float32)
+    base = np.repeat(one, 2, axis=0)
+    cand = np.repeat((rng.random((1, 72)) * 80).astype(np.float32), 2, axis=0)
+    caps = np.full(2, 50.0, np.float32)
+    valid = np.full(2, 72, np.int32)
+    seg = np.zeros(2, np.int32)
+    acc, row, shift, best = map(
+        np.asarray,
+        circle_score_segmin(base, cand, caps, valid, seg, np.array([np.inf])),
+    )
+    assert acc[0] and row[0] == 0
+
+
+# ---------------------------------------------------------------------- #
+# lane padding (Mosaic alignment satellite)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("l,a", [(3, 72), (5, 257), (2, 100), (4, 720)])
+def test_lane_padding_changes_no_output_bit(l, a):
+    """Padding the angle axis to a multiple of LANE_MULTIPLE (the default,
+    satisfying the kernel's Mosaic lane requirement for any circle) must
+    leave every score bit-identical — the kernels statically re-slice to
+    the real width before each reduction."""
+    rng = np.random.default_rng(a)
+    base, cand, caps, valid = _random_rows(rng, l, a)
+    on = np.asarray(circle_score_pallas(base, cand, caps, lane_pad=True))
+    off = np.asarray(circle_score_pallas(base, cand, caps, lane_pad=False))
+    np.testing.assert_array_equal(on, off)
+    assert on.shape == (l, a)  # padding never leaks into the result
+
+    assert a % LANE_MULTIPLE != 0  # every case exercises a padded width
+
+    i_on, v_on = circle_score_argmin_pallas(base, cand, caps, valid, lane_pad=True)
+    i_off, v_off = circle_score_argmin_pallas(base, cand, caps, valid, lane_pad=False)
+    np.testing.assert_array_equal(np.asarray(i_on), np.asarray(i_off))
+    np.testing.assert_array_equal(np.asarray(v_on), np.asarray(v_off))
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end: device-reduced search == scalar search
+# ---------------------------------------------------------------------- #
+def _link_problems(rng, n, k):
+    periods = (160.0, 200.0, 240.0, 320.0, 400.0, 480.0)
+    demands = (0.0, 4.0, 20.0, 40.0, 45.0, 60.0)
+    out = []
+    for i in range(n):
+        pats = []
+        for j in range(k):
+            it = float(rng.choice(periods))
+            phases = tuple(
+                Phase(float(rng.uniform(0, it)), float(rng.uniform(0, 0.9 * it)),
+                      float(rng.choice(demands)))
+                for _ in range(int(rng.integers(1, 3)))
+            )
+            pats.append(CommPattern(it, phases, name=f"f{i}j{j}"))
+        out.append((pats, float(rng.choice((25.0, 50.0, 100.0)))))
+    return out
+
+
+@pytest.mark.parametrize("seed,k", [(0, 2), (1, 3), (2, 3)])
+def test_grid_device_reduce_bit_identical_forced_pallas(seed, k):
+    """backend='pallas' makes even small circles kernel-eligible, so the
+    fused grid path runs; results must equal the scalar search and the
+    full-matrix batched path bit for bit, with every call device-reduced."""
+    rng = np.random.default_rng(seed)
+    problems = _link_problems(rng, 3, k)
+    scalar = [find_rotations(p, c, backend="pallas") for p, c in problems]
+    stats_on = BatchStats()
+    on = find_rotations_batched(
+        problems, backend="pallas", stats=stats_on, device_reduce=True
+    )
+    stats_off = BatchStats()
+    off = find_rotations_batched(
+        problems, backend="pallas", stats=stats_off, device_reduce=False
+    )
+    for s, b_on, b_off in zip(scalar, on, off):
+        assert b_on.score == s.score == b_off.score
+        assert b_on.shifts_steps == s.shifts_steps == b_off.shifts_steps
+        assert b_on.shifts_ms == s.shifts_ms == b_off.shifts_ms
+    assert stats_on.device_reduced == stats_on.batched_calls > 0
+    assert stats_off.device_reduced == 0
+    assert stats_on.bytes_returned < stats_off.bytes_returned
+    assert stats_on.bytes_matrix == stats_off.bytes_matrix
+
+
+def test_grid_device_reduce_across_chunks(monkeypatch):
+    """A tiny GRID_CHUNK_ROWS splits problems mid-grid; the incumbent best
+    must carry into the next chunk's device scan (init_best) so the result
+    still equals the unchunked scalar search."""
+    from repro.core import compat
+
+    rng = np.random.default_rng(42)
+    problems = _link_problems(rng, 3, 3)
+    scalar = [find_rotations(p, c, backend="pallas") for p, c in problems]
+    monkeypatch.setattr(compat, "GRID_CHUNK_ROWS", 5)
+    stats = BatchStats()
+    batched = find_rotations_batched(
+        problems, backend="pallas", stats=stats, device_reduce=True
+    )
+    for s, b in zip(scalar, batched):
+        assert b.score == s.score and b.shifts_steps == s.shifts_steps
+    assert stats.device_reduced == stats.batched_calls > 1
+
+
+# ---------------------------------------------------------------------- #
+# hypothesis properties (dev extra)
+# ---------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_argmin_parity_property(data):
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        l = data.draw(st.integers(1, 12))
+        a = data.draw(st.sampled_from((72, 96, 144, 257)))
+        rng = np.random.default_rng(seed)
+        zero_frac = data.draw(st.sampled_from((0.0, 0.5, 1.0)))
+        inf_frac = data.draw(st.sampled_from((0.0, 0.5)))
+        _assert_parity(*_random_rows(
+            rng, l, a, zero_cap_frac=zero_frac, infeasible_frac=inf_frac
+        ))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.data())
+    def test_segmin_matches_host_scan_property(data):
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        num_segs = data.draw(st.integers(1, 5))
+        sizes = [data.draw(st.integers(1, 6)) for _ in range(num_segs)]
+        a = data.draw(st.sampled_from((72, 144)))
+        l = sum(sizes)
+        base, cand, caps, valid = _random_rows(rng, l, a)
+        seg_ids = np.repeat(np.arange(num_segs), sizes).astype(np.int32)
+        init = np.array(
+            [data.draw(st.sampled_from((np.inf, 0.0, 500.0)))
+             for _ in range(num_segs)], np.float64,
+        )
+        acc, row, shift, best = map(
+            np.asarray,
+            circle_score_segmin(base, cand, caps, valid, seg_ids, init),
+        )
+        mat = np.asarray(circle_score(base, cand, caps))
+        h_acc, h_row, h_shift, h_best = _host_fold(mat, valid, seg_ids, init)
+        np.testing.assert_array_equal(acc, h_acc)
+        np.testing.assert_array_equal(best, h_best)
+        for s in range(num_segs):
+            if acc[s]:
+                assert row[s] == h_row[s] and shift[s] == h_shift[s]
