@@ -96,6 +96,39 @@ def large_grid_k3_problems(num_links=8, capacity=50.0):
     return out
 
 
+def mixed_angle_problems(wraps=(7, 11, 13, 17, 19, 23), links_per=4,
+                         capacity=50.0):
+    """k=2 link problems whose unified circles land on *different* angle
+    counts — the heterogeneous-fabric regime the ragged launch targets.
+
+    Each group pairs a slow job (period ``100·w`` ms) with a fast one
+    (100 ms): at 0.5° precision the base 720-angle circle is rounded up to
+    a multiple of ``lcm(wraps) = w``, so ``w ∈ {7, 11, 13, 17, 19, 23}``
+    yields six distinct angle counts (721, 726, 728, 731, 722, 736 — all
+    kernel-eligible).  The per-angle-count launch path pays one dispatch
+    (and one under-filled 32-row block, scanned to its own shift bound)
+    per group; the ragged path packs every row into ONE launch whose
+    blocks share the scan.  Demands are kept contended so the zero-excess
+    early exit does not shortcut either path.
+    """
+    from repro.core.circle import CommPattern, Phase
+
+    out = []
+    for wi, w in enumerate(wraps):
+        for i in range(links_per):
+            slow = CommPattern(
+                100.0 * w,
+                (Phase((5.0 + 9.0 * wi + 3.0 * i) * w, 38.0 * w, 44.0),),
+                name=f"m{w}s{i}",
+            )
+            fast = CommPattern(
+                100.0, (Phase(11.0 + 5.0 * i + 2.0 * wi, 41.0, 39.0),),
+                name=f"m{w}f{i}",
+            )
+            out.append(([slow, fast], capacity))
+    return out
+
+
 def sched_epoch_state(scenario_name="hetero-16rack", max_jobs=10):
     """A mid-simulation ``ClusterState`` for end-to-end epoch benches:
     the scenario's first ``max_jobs`` trace jobs, treated as running."""

@@ -1,0 +1,200 @@
+"""Cross-PR bench regression gate: diff a BENCH.json run against the
+committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare [--current BENCH.json] \
+        [--baseline benchmarks/baselines/bench_baseline.json] \
+        [--threshold 0.20] [--summary report.md] [--update-baseline]
+
+The bench harness (``benchmarks/run.py --json``) writes machine-readable
+rows; this tool holds every PR's run against the baseline committed at
+``benchmarks/baselines/bench_baseline.json`` and exits nonzero when the
+perf trajectory regresses:
+
+  * the current run recorded a bench failure (``"failed"`` in the doc);
+  * a baseline row is missing from the current run (a silently dropped
+    bench can never "pass" by absence);
+  * a row's wall time drifted more than ``--threshold`` (default +20%)
+    above baseline;
+  * a *lost speedup assertion*: a row whose baseline ``speedup`` was
+    ≥ 1.0 (a claimed win over some reference path) now measures < 1.0,
+    or no longer reports a speedup at all.
+
+A per-row delta table is printed to stdout and, with ``--summary PATH``,
+appended as markdown (CI passes ``$GITHUB_STEP_SUMMARY`` so the table
+lands in the job summary).  New rows (present only in the current run)
+are reported but never fail the gate.
+
+When a regression is intentional (e.g. a bench was redesigned or a
+slower-but-correct fix landed), the builder refreshes the baseline with
+``--update-baseline`` and commits the result.
+
+Caveat: the wall-time gate compares *absolute* microseconds against a
+baseline measured on whatever machine last updated it, so heterogeneous
+CI runner hardware can trip it without a code change — the speedup
+checks are machine-relative and robust; if the wall gate proves noisy on
+a runner pool, raise ``--threshold`` in the workflow rather than
+laundering baselines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+DEFAULT_CURRENT = "BENCH.json"
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(__file__), "baselines", "bench_baseline.json"
+)
+DEFAULT_THRESHOLD = 0.20
+
+
+def load_rows(path: str) -> tuple[dict[str, dict], dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("rows", [])}, doc
+
+
+def fmt_us(v) -> str:
+    return f"{v:,.0f}" if isinstance(v, (int, float)) else "—"
+
+
+def fmt_speedup(v) -> str:
+    return f"{v:.2f}x" if isinstance(v, (int, float)) else "—"
+
+
+def compare(
+    current: dict[str, dict],
+    baseline: dict[str, dict],
+    threshold: float,
+) -> tuple[list[tuple], list[str]]:
+    """Returns (table_rows, failures).  Each table row is
+    ``(name, base_us, cur_us, delta_str, base_speedup, cur_speedup,
+    status)``."""
+    table: list[tuple] = []
+    failures: list[str] = []
+    for name, b in baseline.items():
+        c = current.get(name)
+        if c is None:
+            table.append((name, b.get("us_per_call"), None, "—",
+                          b.get("speedup"), None, "MISSING"))
+            failures.append(f"row {name!r} present in baseline but missing "
+                            f"from the current run")
+            continue
+        b_us, c_us = b.get("us_per_call"), c.get("us_per_call")
+        delta = (c_us - b_us) / b_us if b_us else 0.0
+        status = "ok"
+        if delta > threshold:
+            status = "SLOWER"
+            failures.append(
+                f"row {name!r} wall time drifted +{delta:.0%} "
+                f"({fmt_us(b_us)}us → {fmt_us(c_us)}us, gate +{threshold:.0%})"
+            )
+        b_sp, c_sp = b.get("speedup"), c.get("speedup")
+        if isinstance(b_sp, (int, float)) and b_sp >= 1.0:
+            if not isinstance(c_sp, (int, float)) or c_sp < 1.0:
+                status = "LOST-SPEEDUP"
+                failures.append(
+                    f"row {name!r} lost its speedup assertion "
+                    f"(baseline {fmt_speedup(b_sp)} → {fmt_speedup(c_sp)})"
+                )
+        table.append((name, b_us, c_us, f"{delta:+.1%}", b_sp, c_sp, status))
+    for name, c in current.items():
+        if name not in baseline:
+            table.append((name, None, c.get("us_per_call"), "—",
+                          None, c.get("speedup"), "new"))
+    return table, failures
+
+
+def render_markdown(table, failures, threshold, wall_note) -> str:
+    lines = [
+        "## Bench regression gate",
+        "",
+        f"Per-row wall-time gate: +{threshold:.0%} vs committed baseline; "
+        f"speedup assertions must not drop below 1.0x. {wall_note}",
+        "",
+        "| bench row | baseline us | current us | Δ wall | baseline speedup "
+        "| current speedup | status |",
+        "|---|---:|---:|---:|---:|---:|---|",
+    ]
+    for name, b_us, c_us, delta, b_sp, c_sp, status in table:
+        mark = {"ok": "✅", "new": "🆕"}.get(status, "❌")
+        lines.append(
+            f"| `{name}` | {fmt_us(b_us)} | {fmt_us(c_us)} | {delta} "
+            f"| {fmt_speedup(b_sp)} | {fmt_speedup(c_sp)} | {mark} {status} |"
+        )
+    lines.append("")
+    if failures:
+        lines.append(f"**GATE FAILED** ({len(failures)} regression(s)):")
+        lines.extend(f"- {f}" for f in failures)
+        lines.append("")
+        lines.append(
+            "If intentional, refresh the baseline: `PYTHONPATH=src python -m "
+            "benchmarks.run --only kernels --json BENCH.json && python -m "
+            "benchmarks.compare --update-baseline` and commit it."
+        )
+    else:
+        lines.append("Gate passed: no wall-time drift beyond threshold, all "
+                     "speedup assertions held.")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="BENCH.json of the current run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline JSON")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max tolerated per-row wall-time drift "
+                         "(fraction, default 0.20)")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append the markdown delta table to PATH "
+                         "(CI: $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="replace the baseline with the current run "
+                         "(intentional perf change) and exit")
+    args = ap.parse_args()
+
+    if args.update_baseline:
+        # refuse to install a failed/partial run as the new baseline: the
+        # missing-row gate only protects rows the baseline knows about, so
+        # a truncated doc would permanently un-gate every dropped bench
+        _, cur_doc = load_rows(args.current)
+        if "failed" in cur_doc:
+            print(
+                f"refusing to update baseline: {args.current} records a "
+                f"failed bench run ({cur_doc['failed']})",
+                file=sys.stderr,
+            )
+            raise SystemExit(1)
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated from {args.current} -> {args.baseline}")
+        return
+
+    current, cur_doc = load_rows(args.current)
+    baseline, base_doc = load_rows(args.baseline)
+    table, failures = compare(current, baseline, args.threshold)
+    if "failed" in cur_doc:
+        failures.insert(0, f"current bench run failed its own gate: "
+                           f"{cur_doc['failed']}")
+    wall_note = (
+        f"Total wall: baseline {base_doc.get('wall_s', '?')}s, "
+        f"current {cur_doc.get('wall_s', '?')}s."
+    )
+    md = render_markdown(table, failures, args.threshold, wall_note)
+    print(md)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md)
+    if failures:
+        for f in failures:
+            print(f"BENCH REGRESSION: {f}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,16 @@
 """Benchmark harness: one module per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline] \
-        [--json BENCH.json]
+        [--json [BENCH.json]]
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
 writes the rows as machine-readable JSON (name, us_per_call, speedup,
-derived) so the perf trajectory can be tracked across PRs (CI uploads
-``BENCH_PR3.json`` as an artifact from the kernels smoke step).
+derived) — bare ``--json`` defaults to ``BENCH.json``, the artifact CI
+uploads from the bench job and diffs against the committed baseline via
+``benchmarks/compare.py`` (cross-PR regression gate).  A bench row's own
+assertion failing after its measurement was flushed exits nonzero with a
+one-line ``BENCH GATE FAILED`` reason, so the partial artifact can never
+mask which gate tripped.
 """
 
 from __future__ import annotations
@@ -15,6 +19,7 @@ import argparse
 import json
 import sys
 import time
+import traceback
 
 ALL = [
     "fig2_interleave",
@@ -73,6 +78,7 @@ def _kernel_bench():
            "derived": "chunked SSD w/ VMEM state carry"}
     yield from _batched_scoring_bench()
     yield from _fused_reduction_bench()
+    yield from _ragged_launch_bench()
 
 
 def _batched_scoring_bench():
@@ -223,40 +229,131 @@ def _fused_reduction_bench():
         )
 
 
+def _ragged_launch_bench():
+    """Ragged single-launch rotation search vs the per-angle-count launch
+    grouping it replaces (heterogeneous-fabric regime: links whose unified
+    circles have different angle counts).
+
+    CI assertions: the ragged path must issue exactly ONE kernel launch
+    for the whole mixed-angle batch (``launches == batched_calls == 1``)
+    where the grouped path pays one per distinct angle count, every row
+    must ship ragged with bounded padding waste, the selected rotations
+    must be bit-identical to both the per-group launches and the scalar
+    search, and the single launch must be ≥ 1.5x faster than the grouped
+    dispatch fan-out.
+    """
+    from repro.core.compat import BatchStats, find_rotations, find_rotations_batched
+
+    from .common import mixed_angle_problems, timed
+
+    probs = mixed_angle_problems()
+    deg = 0.5
+    scalar = [find_rotations(p, c, precision_deg=deg) for p, c in probs]
+    num_groups = len({s.circle.num_angles for s in scalar})
+
+    ragged_fn = lambda: find_rotations_batched(
+        probs, precision_deg=deg, ragged=True
+    )
+    grouped_fn = lambda: find_rotations_batched(
+        probs, precision_deg=deg, ragged=False
+    )
+    ragged_fn()    # warm both jit caches
+    grouped_fn()
+    res_ragged, us_ragged = timed(ragged_fn)
+    res_grouped, us_grouped = timed(grouped_fn)
+    speedup = us_grouped / us_ragged
+
+    stats_r = BatchStats()
+    find_rotations_batched(probs, precision_deg=deg, stats=stats_r, ragged=True)
+    stats_g = BatchStats()
+    find_rotations_batched(probs, precision_deg=deg, stats=stats_g, ragged=False)
+    # row first, gates after: a failing assertion below still leaves the
+    # measured row in the --json artifact to explain itself
+    yield {
+        "name": f"kernels/score_ragged_launch({len(probs)}x2job,{deg:g}deg)",
+        "us_per_call": us_ragged,
+        "speedup": speedup,
+        "derived": (
+            f"per_group_launches={us_grouped:.0f}us speedup={speedup:.2f}x "
+            f"({num_groups} angle counts; ragged {stats_r.launches} launch "
+            f"vs grouped {stats_g.launches}, {stats_r.ragged_rows} rows, "
+            f"pad_fraction={stats_r.pad_fraction:.3f}; tournament-tree "
+            f"argmin, per-row num_angles/valid masking)"
+        ),
+    }
+    if any(
+        r.shifts_steps != g.shifts_steps or r.shifts_steps != s.shifts_steps
+        for r, g, s in zip(res_ragged, res_grouped, scalar)
+    ):
+        raise RuntimeError(
+            "ragged launch diverged from the per-group/scalar search"
+        )
+    if not (stats_r.launches == stats_r.batched_calls == 1):
+        raise RuntimeError(
+            f"mixed-angle batch must ship as ONE ragged launch, got "
+            f"launches={stats_r.launches} batched_calls={stats_r.batched_calls}"
+        )
+    if stats_g.launches != num_groups or num_groups < 4:
+        raise RuntimeError(
+            f"grouped comparison path must pay one launch per angle count "
+            f"({num_groups}), got {stats_g.launches}"
+        )
+    if stats_r.ragged_rows != len(probs) or not 0.0 <= stats_r.pad_fraction < 0.5:
+        raise RuntimeError(
+            f"every row must ship ragged with bounded padding: "
+            f"rows={stats_r.ragged_rows}/{len(probs)} "
+            f"pad_fraction={stats_r.pad_fraction:.3f}"
+        )
+    if speedup < 1.5:
+        raise RuntimeError(
+            f"ragged single launch must be >=1.5x over per-group launches: "
+            f"{speedup:.2f}x (grouped={us_grouped:.0f}us ragged={us_ragged:.0f}us)"
+        )
+
+
 def _sched_epoch_bench():
     """End-to-end scheduler-level rows: one full ``SchedulingPipeline.cassini``
     epoch (Allocate → Propose → Score → Align) on the hetero-16rack
     scenario, so kernel-level scoring wins stay visible where they matter.
 
-    Three rows: the paper-default 5° epoch (A=72 circles — numpy grids,
-    device reduction not eligible), and a fine-grid 0.5° epoch with the
-    fused reduction on vs off (A=720 circles: the scoring stage actually
-    runs through the device-resident rotation search).
+    Four rows: the paper-default 5° epoch (A=72 circles — numpy grids,
+    device reduction not eligible), and fine-grid 0.5° epochs (A≥720
+    circles: the scoring stage actually runs through the device-resident
+    rotation search) with the fused ragged reduction on, the per-group
+    launch fan-out, and the full-matrix round-trip.
+
+    CI assertion (ragged fine-grid row): every grid chunk / descent step
+    of the epoch must ship as exactly ONE kernel launch
+    (``BatchStats.launches == batched_calls``) with every row ragged —
+    the heterogeneous 16-rack fabric no longer pays a dispatch per
+    angle-count group.
     """
     from repro.sched import CassiniAugmented, ThemisScheduler
 
     from .common import sched_epoch_state, timed
 
     cases = (
-        # (precision_deg, device_reduce, label)
-        (5.0, True, "paper default"),
-        (0.5, True, "fine grid, fused reduction"),
-        (0.5, False, "fine grid, full-matrix round-trip"),
+        # (precision_deg, device_reduce, ragged, label)
+        (5.0, True, True, "paper default"),
+        (0.5, True, True, "fine grid, ragged single-launch"),
+        (0.5, True, False, "fine grid, per-group launches"),
+        (0.5, False, False, "fine grid, full-matrix round-trip"),
     )
     state = sched_epoch_state("hetero-16rack", max_jobs=10)
-    for deg, device_reduce, label in cases:
+    for deg, device_reduce, ragged, label in cases:
         def one_epoch():
             # fresh module each call: epoch cost includes every link solve,
             # not a pure cache-hit replay
             s = CassiniAugmented(
                 ThemisScheduler(), precision_deg=deg,
-                device_reduce=device_reduce,
+                device_reduce=device_reduce, ragged=ragged,
             )
             return s.schedule(state)
         one_epoch()  # warm the jit caches
         _, us_epoch = timed(one_epoch, repeat=3)
         sched = CassiniAugmented(
-            ThemisScheduler(), precision_deg=deg, device_reduce=device_reduce
+            ThemisScheduler(), precision_deg=deg,
+            device_reduce=device_reduce, ragged=ragged,
         )
         sched.schedule(state)
         score_stage = next(
@@ -265,22 +362,41 @@ def _sched_epoch_bench():
         stats = score_stage.last_batch_stats
         yield {
             "name": f"sched_epoch/hetero-16rack({deg:g}deg,"
-                    f"device_reduce={device_reduce})",
+                    f"device_reduce={device_reduce},ragged={ragged})",
             "us_per_call": us_epoch,
             "derived": (
                 f"full cassini epoch, 10 jobs, 16 racks ({label}); "
                 f"batch={stats}"
             ),
         }
+        if deg == 0.5 and device_reduce and ragged:
+            # acceptance gate: one kernel launch per grid/descent step on
+            # the heterogeneous fabric, all rows through the ragged path
+            if stats.launches != stats.batched_calls or stats.launches == 0:
+                raise RuntimeError(
+                    f"hetero-16rack fine-grid epoch must issue exactly one "
+                    f"kernel launch per grid/descent step: launches="
+                    f"{stats.launches} batched_calls={stats.batched_calls}"
+                )
+            if stats.ragged_rows != stats.grid_rows + stats.descent_rows:
+                raise RuntimeError(
+                    f"every fine-grid row must ship ragged: "
+                    f"{stats.ragged_rows} vs "
+                    f"{stats.grid_rows + stats.descent_rows} ({stats})"
+                )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
-    ap.add_argument("--json", default=None, metavar="PATH",
+    ap.add_argument("--json", nargs="?", const="BENCH.json", default=None,
+                    metavar="PATH",
                     help="also write rows as JSON (machine-readable perf "
-                         "trajectory; CI uploads it as an artifact)")
+                         "trajectory; CI uploads it as an artifact and "
+                         "diffs it against the committed baseline via "
+                         "benchmarks/compare.py). Bare --json writes "
+                         "BENCH.json")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
 
@@ -305,8 +421,10 @@ def main() -> None:
             json.dump(doc, f, indent=2)
             f.write("\n")
 
+    current = "?"
     try:
         for name in names:
+            current = name
             if name == "kernels":
                 rows = _kernel_bench()
             elif name == "sched_epoch":
@@ -328,9 +446,20 @@ def main() -> None:
                 if args.json:
                     write_json()
     except Exception as e:
+        # the partial JSON artifact keeps every completed measurement AND
+        # the failure, but a partial artifact alone can mask *which* gate
+        # tripped — always exit nonzero with a one-line reason naming it
+        # (traceback first, so unexpected crashes stay debuggable)
+        reason = f"{type(e).__name__}: {e}"
         if args.json:
-            write_json(error=f"{type(e).__name__}: {e}")
-        raise
+            write_json(error=reason)
+        traceback.print_exc()
+        print(
+            f"BENCH GATE FAILED ({current}, after {len(all_rows)} rows): "
+            f"{reason}",
+            file=sys.stderr, flush=True,
+        )
+        raise SystemExit(1)
     if args.json:
         print(f"# wrote {len(all_rows)} rows to {args.json}", file=sys.stderr)
     print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)

@@ -19,11 +19,17 @@ demand" — is the compute hot-spot and is implemented three ways:
   * the full-matrix Pallas TPU kernel :mod:`repro.kernels.circle_score`
     (batched tiles; also the numpy paths' reference), and
   * the *fused-reduction* kernels (``circle_score_argmin`` /
-    ``circle_score_segmin``): the per-row argmin and the product-grid
-    acceptance scan run inside the kernel, so the batched search returns
-    O(problems) scalars instead of round-tripping the ``(B, A)`` excess
-    matrix through the host (``device_reduce=True``, the default on the
-    kernel-eligible paths).
+    ``circle_score_segmin``): the per-row argmin (a chunked
+    tournament-tree reduction) and the product-grid acceptance scan run
+    inside the kernel, so the batched search returns O(problems) scalars
+    instead of round-tripping the ``(B, A)`` excess matrix through the
+    host (``device_reduce=True``, the default on the kernel-eligible
+    paths).  The fused paths are *ragged* by default (``ragged=True``):
+    rows from link problems with **different** unified-circle angle
+    counts ship as ONE kernel launch per grid chunk / descent step, each
+    row masked to its own ``num_angles``/``valid`` window — a
+    heterogeneous fabric no longer pays one dispatch per angle-count
+    group (``BatchStats.launches``/``ragged_rows``/``pad_fraction``).
 """
 
 from __future__ import annotations
@@ -92,6 +98,16 @@ class BatchStats:
     kernel-eligible shapes ``device_reduced == batched_calls`` and the
     ratio ``bytes_matrix / bytes_returned`` is ~A/2 or better (asserted
     ≥ 100x in the CI bench for large grids).
+
+    The launch counters prove the per-angle-count dispatch fan-out is
+    gone on the ragged path: ``launches`` counts kernel dispatches (the
+    grouped comparison path pays one per angle-count group per step;
+    ragged pays exactly one per grid chunk / descent step —
+    ``launches == batched_calls``, asserted in the CI bench),
+    ``ragged_rows`` the rows that shipped through ragged single-launch
+    batches, and ``pad_fraction`` how much of the ragged launches' lane
+    footprint was padding (``ragged_real_elems`` / ``ragged_pad_elems``
+    are the raw element counts behind it).
     """
 
     problems: int = 0
@@ -104,6 +120,10 @@ class BatchStats:
     device_reduced: int = 0     # calls whose argmin/accept ran on device
     bytes_returned: int = 0     # bytes returned by batched evaluations
     bytes_matrix: int = 0       # bytes the full (B, A) matrices would move
+    launches: int = 0           # kernel dispatches (ragged: one per step)
+    ragged_rows: int = 0        # rows shipped via ragged single launches
+    ragged_real_elems: int = 0  # real (unpadded) elements in those launches
+    ragged_pad_elems: int = 0   # lane-padded elements those launches shipped
 
     @property
     def scalar_fallbacks(self) -> int:
@@ -117,6 +137,14 @@ class BatchStats:
         if self.bytes_returned == 0:
             return float("inf") if self.bytes_matrix else 1.0
         return self.bytes_matrix / self.bytes_returned
+
+    @property
+    def pad_fraction(self) -> float:
+        """Fraction of the ragged launches' lane footprint that was padding
+        (0.0 when no ragged launch ran)."""
+        if self.ragged_pad_elems == 0:
+            return 0.0
+        return 1.0 - self.ragged_real_elems / self.ragged_pad_elems
 
 
 @dataclass(frozen=True)
@@ -227,6 +255,7 @@ def find_rotations_batched(
     dilate_steps: int = 1,
     stats: BatchStats | None = None,
     device_reduce: bool = True,
+    ragged: bool = True,
 ) -> list[CompatResult]:
     """Solve many independent link-level Table-1 problems in one pass.
 
@@ -237,30 +266,37 @@ def find_rotations_batched(
       * ``k ≤ MAX_EXACT_JOBS`` jobs whose admissible shift combinations fit
         :data:`EXACT_GRID_LIMIT` — the scalar path's exact-search regime —
         enumerate the (k−1)-dimensional shift product grid as rows of a
-        ``(B, A)`` base-demand array (jobs 1..k−2 baked into each row, the
-        last job scored for all its rotations at once).  Rows from *all*
-        such problems are grouped by angle count (capacities ride along
-        per-row), chunked to :data:`GRID_CHUNK_ROWS`, and evaluated through
-        the kernel-eligible fused reduction (:func:`_batched_segmin` — the
-        per-chunk argmin *and* the product-grid acceptance scan run on
-        device, returning O(problems) scalars) or the full-matrix
-        evaluation (:func:`_batched_excess`: Pallas ``circle_score`` kernel
-        on large grids, vectorized numpy otherwise) plus the host scan.
+        base-demand array (jobs 1..k−2 baked into each row, the last job
+        scored for all its rotations at once), chunked to
+        :data:`GRID_CHUNK_ROWS`.  On the default *ragged* kernel path all
+        kernel-eligible rows of a chunk — **whatever mix of angle counts**
+        — ship as ONE launch (:func:`_batched_segmin_ragged`: per-row
+        ``num_angles`` masking, tournament-tree argmin and the
+        product-grid acceptance scan all inside the kernel, O(problems)
+        scalars back).  Non-eligible (small-angle) rows keep the
+        vectorized-numpy full-matrix evaluation, grouped by angle count.
 
       * everything above the exact-grid cutoff runs the same seeded
         coordinate descent as the scalar path, but *lockstep-batched*: at
         each (trial, sweep, job) step the "score every rotation of the job
         being optimized" rows of all still-active problems are packed into
-        one batched call — :func:`_batched_argmin` on the kernel path, so
-        each step returns one accepted shift per problem instead of the
-        per-problem rotation rows.
+        one batched call — one ragged launch per step on the kernel path
+        (:func:`_batched_argmin_ragged`), so each step returns one
+        accepted shift per problem instead of the per-problem rotation
+        rows.
 
-    ``device_reduce=False`` forces the full-matrix evaluation + host
-    reduction everywhere (the pre-fusion behaviour; results are identical
-    either way — tests assert it).  Pass a :class:`BatchStats` to observe
-    which path each problem took (benchmarks assert ``scalar_fallbacks ==
-    0``, and ``device_reduced`` / ``bytes_returned`` prove the ``(B, A)``
-    round-trip is gone on kernel-eligible shapes).
+    ``ragged=False`` restores the per-angle-count grouping (one launch per
+    angle-count group per chunk/step — the pre-ragged behaviour, kept as
+    the benchmark comparison path); ``device_reduce=False`` forces the
+    full-matrix evaluation + host reduction everywhere (the pre-fusion
+    behaviour, which is always grouped).  Results are bit-identical on
+    every path — tests assert it; the fold-sum padding invariance of the
+    kernel family is what makes the ragged launch exact.  Pass a
+    :class:`BatchStats` to observe which path each problem took
+    (benchmarks assert ``scalar_fallbacks == 0``, ``device_reduced`` /
+    ``bytes_returned`` prove the ``(B, A)`` round-trip is gone, and
+    ``launches == batched_calls`` proves one kernel launch per
+    grid-chunk/descent step on the ragged path).
 
     Returns one :class:`CompatResult` per problem, in input order,
     bit-identical to what per-problem ``find_rotations`` calls would produce
@@ -292,12 +328,12 @@ def find_rotations_batched(
             )
 
     if grid_probs:
-        _solve_grids_batched(grid_probs, backend, stats, device_reduce)
+        _solve_grids_batched(grid_probs, backend, stats, device_reduce, ragged)
         stats.grid_problems += len(grid_probs)
         for gp in grid_probs:
             results[gp.index] = _finalize(gp.circle, gp.best, gp.capacity)
     if descent_probs:
-        _solve_descent_batched(descent_probs, backend, stats, device_reduce)
+        _solve_descent_batched(descent_probs, backend, stats, device_reduce, ragged)
         stats.descent_problems += len(descent_probs)
         for dp in descent_probs:
             results[dp.index] = _finalize(dp.circle, dp.best, dp.capacity)
@@ -409,9 +445,13 @@ def _batched_excess(
         try:
             from repro.kernels.circle_score import ops as _cs_ops
 
-            return np.asarray(_cs_ops.circle_score(base, cand, cap))
+            out = np.asarray(_cs_ops.circle_score(base, cand, cap))
         except Exception:  # pragma: no cover - fallback if pallas unavailable
             pass
+        else:
+            if stats is not None:
+                stats.launches += 1
+            return out
     idx = _roll_index(a)                                       # (S, A)
     cap_rows = np.broadcast_to(cap.reshape(-1, 1, 1), (l, 1, 1))
     out = np.empty((l, a), dtype=np.float32)
@@ -455,8 +495,43 @@ def _batched_argmin(
         return None
     if stats is not None:
         stats.device_reduced += 1
+        stats.launches += 1
         stats.bytes_returned += idx.nbytes + val.nbytes
         stats.bytes_matrix += l * a * 4
+    return idx, val
+
+
+def _batched_argmin_ragged(
+    base: np.ndarray,
+    cand: np.ndarray,
+    capacity: np.ndarray,
+    valid: np.ndarray,
+    num_angles: np.ndarray,
+    *,
+    stats: BatchStats | None = None,
+) -> tuple[np.ndarray, np.ndarray] | None:
+    """Ragged fused rotation search: mixed angle counts, ONE launch.
+
+    ``base`` / ``cand`` are packed ``(L, W)`` rows (row ``l`` real in
+    ``[:num_angles[l]]``, zero above).  The caller has already partitioned
+    rows by kernel eligibility, so this only returns ``None`` when the
+    kernel import itself fails (pallas unavailable) — the caller then
+    falls back to the grouped full-matrix evaluation.
+    """
+    try:
+        from repro.kernels.circle_score import ops as _cs_ops
+
+        idx, val = _cs_ops.circle_score_ragged_argmin(
+            base, cand, capacity, valid, num_angles
+        )
+        idx, val = np.asarray(idx), np.asarray(val)
+    except ValueError:
+        raise  # input-validation rejections must not become silent fallbacks
+    except Exception:  # pragma: no cover - fallback if pallas unavailable
+        return None
+    if stats is not None:
+        _account_ragged(stats, base.shape, num_angles)
+        stats.bytes_returned += idx.nbytes + val.nbytes
     return idx, val
 
 
@@ -497,9 +572,68 @@ def _batched_segmin(
         return None
     if stats is not None:
         stats.device_reduced += 1
+        stats.launches += 1
         stats.bytes_returned += acc.nbytes + row.nbytes + shift.nbytes + best.nbytes
         stats.bytes_matrix += l * a * 4
     return acc, row, shift, best
+
+
+def _batched_segmin_ragged(
+    base: np.ndarray,
+    cand: np.ndarray,
+    capacity: np.ndarray,
+    valid: np.ndarray,
+    num_angles: np.ndarray,
+    seg_ids: np.ndarray,
+    init_best: np.ndarray,
+    *,
+    stats: BatchStats | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray] | None:
+    """Ragged fused search + segmented acceptance scan: ONE launch per
+    chunk, whatever mix of angle counts the chunk's problems carry (see
+    :func:`_batched_segmin` for the segment semantics).  Returns ``None``
+    only when the kernel import fails."""
+    try:
+        from repro.kernels.circle_score import ops as _cs_ops
+
+        acc, row, shift, best = _cs_ops.circle_score_ragged_segmin(
+            base, cand, capacity, valid, num_angles, seg_ids, init_best
+        )
+        acc, row, shift, best = (
+            np.asarray(acc), np.asarray(row), np.asarray(shift), np.asarray(best)
+        )
+    except ValueError:
+        raise  # input-validation rejections must not become silent fallbacks
+    except Exception:  # pragma: no cover - fallback if pallas unavailable
+        return None
+    if stats is not None:
+        _account_ragged(stats, base.shape, num_angles)
+        stats.bytes_returned += acc.nbytes + row.nbytes + shift.nbytes + best.nbytes
+    return acc, row, shift, best
+
+
+def _account_ragged(
+    stats: BatchStats, shape: tuple[int, int], num_angles: np.ndarray
+) -> None:
+    """Launch/row/padding telemetry shared by the ragged evaluators.
+
+    ``bytes_matrix`` grows by each row's *real* width (Σ A_l · 4), exactly
+    what the grouped full-matrix path would account for the same rows, so
+    ragged-on/off byte comparisons stay apples-to-apples.
+    """
+    l, w = shape
+    try:
+        from repro.kernels.circle_score.kernel import LANE_MULTIPLE
+
+        wl = -(-w // LANE_MULTIPLE) * LANE_MULTIPLE
+    except Exception:  # pragma: no cover - pallas unavailable
+        wl = w
+    stats.device_reduced += 1
+    stats.launches += 1
+    stats.ragged_rows += l
+    stats.ragged_real_elems += int(np.sum(num_angles))
+    stats.ragged_pad_elems += l * wl
+    stats.bytes_matrix += int(np.sum(num_angles)) * 4
 
 
 @functools.lru_cache(maxsize=16)
@@ -652,12 +786,134 @@ def _solve_grids_batched(
     backend: str,
     stats: BatchStats,
     device_reduce: bool = True,
+    ragged: bool = True,
 ) -> None:
     """Evaluate every problem's product grid through chunked batched calls.
 
-    Rows are grouped by angle count only — per-row capacities let links with
-    different capacities share a call — and flushed every
-    :data:`GRID_CHUNK_ROWS` rows so memory stays bounded at any grid size.
+    On the default ragged kernel path every kernel-eligible problem —
+    whatever its angle count — feeds ONE shared pending-row stream,
+    flushed every :data:`GRID_CHUNK_ROWS` rows as a single ragged launch
+    (:func:`_solve_grids_ragged`).  Non-eligible problems (and the
+    ``ragged=False`` / ``device_reduce=False`` comparison modes) keep the
+    per-angle-count grouping (:func:`_solve_grids_grouped`).  All paths
+    replay the scalar loop's tie-breaking exactly; flushing between
+    chunks also lets ``iter_rows`` early-out the moment a problem reaches
+    zero excess, exactly like the scalar break.
+    """
+    if ragged and device_reduce:
+        kernel_probs = [
+            p for p in probs if _kernel_eligible(backend, p.circle.num_angles)
+        ]
+        if kernel_probs:
+            _solve_grids_ragged(kernel_probs, backend, stats)
+        probs = [
+            p for p in probs if not _kernel_eligible(backend, p.circle.num_angles)
+        ]
+    if probs:
+        _solve_grids_grouped(probs, backend, stats, device_reduce)
+
+
+def _grid_segments(
+    pending: Sequence[tuple["_GridProblem", tuple[int, ...], np.ndarray]],
+) -> tuple[list["_GridProblem"], np.ndarray, np.ndarray]:
+    """Contiguous per-problem segments of a pending-row chunk (rows were
+    appended problem-by-problem in product order): ``(segs, seg_ids,
+    init)`` where ``init`` carries each problem's incumbent best excess
+    into the device acceptance scan."""
+    segs: list[_GridProblem] = []
+    seg_ids = np.empty(len(pending), dtype=np.int32)
+    for r, (p, _, _) in enumerate(pending):
+        if not segs or segs[-1] is not p:
+            segs.append(p)
+        seg_ids[r] = len(segs) - 1
+    init = np.array([p.best_excess for p in segs], dtype=np.float64)
+    return segs, seg_ids, init
+
+
+def _apply_segmin(
+    segs: Sequence["_GridProblem"],
+    pending: Sequence[tuple["_GridProblem", tuple[int, ...], np.ndarray]],
+    reduced: tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray],
+) -> None:
+    """Write the device acceptance scan's per-segment results back into
+    the problems (shared by the ragged and grouped flushes — the two
+    paths must stay bit-identical)."""
+    acc, row, shift, best = reduced
+    for s, p in enumerate(segs):
+        if acc[s]:
+            p.best_excess = float(best[s])
+            p.best = (0, *pending[row[s]][1], int(shift[s]))
+
+
+def _solve_grids_ragged(
+    probs: Sequence[_GridProblem],
+    backend: str,
+    stats: BatchStats,
+) -> None:
+    """One ragged launch per grid chunk: rows from *all* problems, mixed
+    angle counts, packed to the chunk's max width with per-row
+    ``num_angles`` riding into the kernel.  Segments stay contiguous
+    (rows are appended problem-by-problem in product order) and each
+    problem's incumbent best rides in as its segment's init, so the
+    device acceptance scan replays the host rule exactly — results are
+    bit-identical to the per-group launches by the fold-sum padding
+    invariance."""
+    pending: list[tuple[_GridProblem, tuple[int, ...], np.ndarray]] = []
+
+    def flush() -> None:
+        if not pending:
+            return
+        stats.batched_calls += 1
+        stats.grid_rows += len(pending)
+        widths = np.array(
+            [p.circle.num_angles for p, _, _ in pending], dtype=np.int32
+        )
+        w = int(widths.max())
+        base = np.zeros((len(pending), w))
+        cand = np.zeros((len(pending), w))
+        for r, (p, _, row) in enumerate(pending):
+            base[r, : row.shape[0]] = row
+            cand[r, : row.shape[0]] = p.circle.bw[p.last]
+        caps = np.array([p.capacity for p, _, _ in pending], dtype=np.float32)
+        valid = np.array([p.grids[p.last] for p, _, _ in pending], dtype=np.int32)
+        segs, seg_ids, init = _grid_segments(pending)
+        reduced = _batched_segmin_ragged(
+            base, cand, caps, valid, widths, seg_ids, init, stats=stats
+        )
+        if reduced is not None:
+            _apply_segmin(segs, pending, reduced)
+        else:  # pragma: no cover - pallas unavailable: grouped full-matrix
+            by_angles: dict[int, list[int]] = {}
+            for r, (p, _, _) in enumerate(pending):
+                by_angles.setdefault(p.circle.num_angles, []).append(r)
+            for a, rows in by_angles.items():
+                ex = _batched_excess(
+                    base[rows][:, :a], cand[rows][:, :a], caps[rows],
+                    backend=backend, stats=stats,
+                )
+                for r, row_ex in zip(rows, ex):
+                    pending[r][0].update(pending[r][1], row_ex)
+        pending.clear()
+
+    for p in probs:
+        for mid, base_row in p.iter_rows():
+            pending.append((p, mid, base_row))
+            if len(pending) >= GRID_CHUNK_ROWS:
+                flush()
+    flush()
+
+
+def _solve_grids_grouped(
+    probs: Sequence[_GridProblem],
+    backend: str,
+    stats: BatchStats,
+    device_reduce: bool = True,
+) -> None:
+    """Per-angle-count grouping (the pre-ragged layout, kept for the
+    vectorized-numpy rows and as the ragged comparison path): rows are
+    grouped by angle count — per-row capacities let links with different
+    capacities share a call — and flushed every :data:`GRID_CHUNK_ROWS`
+    rows, one launch per group per chunk.
 
     On kernel-eligible shapes (``device_reduce=True``) each chunk goes
     through :func:`_batched_segmin`: one segment per problem (rows stay in
@@ -665,10 +921,7 @@ def _solve_grids_batched(
     init), and the per-row argmin *and* the acceptance scan run on device —
     only per-problem ``(accepted, row, shift, best)`` scalars come back.
     Otherwise the full ``(B, A)`` matrix is evaluated and the sequential
-    ``update`` scan runs host-side.  Both replay the scalar loop's
-    tie-breaking exactly; flushing between chunks also lets ``iter_rows``
-    early-out the moment a problem reaches zero excess, exactly like the
-    scalar break.
+    ``update`` scan runs host-side.
     """
     by_angles: dict[int, list[_GridProblem]] = {}
     for p in probs:
@@ -690,27 +943,16 @@ def _solve_grids_batched(
             stats.grid_rows += len(pending)
             reduced = None
             if try_device:
-                # contiguous segments: rows were appended problem-by-problem
-                segs: list[_GridProblem] = []
-                seg_ids = np.empty(len(pending), dtype=np.int32)
-                for r, (p, _, _) in enumerate(pending):
-                    if not segs or segs[-1] is not p:
-                        segs.append(p)
-                    seg_ids[r] = len(segs) - 1
+                segs, seg_ids, init = _grid_segments(pending)
                 valid = np.array(
                     [p.grids[p.last] for p, _, _ in pending], dtype=np.int32
                 )
-                init = np.array([p.best_excess for p in segs], dtype=np.float64)
                 reduced = _batched_segmin(
                     base, cand, caps, valid, seg_ids, init,
                     backend=backend, stats=stats,
                 )
             if reduced is not None:
-                acc, row, shift, best = reduced
-                for s, p in enumerate(segs):
-                    if acc[s]:
-                        p.best_excess = float(best[s])
-                        p.best = (0, *pending[row[s]][1], int(shift[s]))
+                _apply_segmin(segs, pending, reduced)
             else:
                 ex = _batched_excess(base, cand, caps, backend=backend, stats=stats)
                 for (p, mid, _), row_ex in zip(pending, ex):
@@ -807,22 +1049,75 @@ def _solve_descent_batched(
     backend: str,
     stats: BatchStats,
     device_reduce: bool = True,
+    ragged: bool = True,
 ) -> None:
     """Run all coordinate descents in lockstep, batching each step's rows.
 
     At step (trial, sweep, job j) the base-vs-candidate rows of every
-    problem still active at that step are grouped by angle count (per-row
-    capacities ride along) and scored in one batched call — one row per
-    problem, every candidate shift of job ``j`` covered by the call's
-    rotation axis.  On kernel-eligible shapes (``device_reduce=True``) the
-    call is the fused :func:`_batched_argmin`, so the sweep's acceptance
-    consumes one ``(shift, excess)`` pair per problem instead of the
-    ``(problems, A)`` rotation matrix; otherwise the full matrix comes
-    back and ``np.argmin`` runs host-side.  Per-problem updates between
+    problem still active at that step are scored in one batched call —
+    one row per problem, every candidate shift of job ``j`` covered by
+    the call's rotation axis.  On the default ragged kernel path *all*
+    kernel-eligible rows ship as ONE launch per step whatever mix of
+    angle counts they carry (:func:`_batched_argmin_ragged` — the
+    padding/masking invariants make the result bit-identical to the
+    per-group launches); ``ragged=False`` restores the per-angle-count
+    grouping, and non-eligible rows always take the grouped full-matrix
+    evaluation plus host ``np.argmin``.  Per-problem updates between
     steps keep the exact scalar semantics (sequential-within-sweep,
     convergence breaks, seeded restarts) — accepted-shift sequences are
-    identical either way.
+    identical on every path.
     """
+    def step_grouped(group_states: list[_DescentState], j: int) -> None:
+        by_angles: dict[int, list[_DescentState]] = {}
+        for s in group_states:
+            by_angles.setdefault(s.circle.num_angles, []).append(s)
+        for num_angles, group in by_angles.items():
+            rows = [s.job_row(j) for s in group]
+            base = np.stack([b for b, _ in rows])
+            cand = np.stack([c for _, c in rows])
+            caps = np.array([s.capacity for s in group], dtype=np.float32)
+            stats.batched_calls += 1
+            stats.descent_rows += len(group)
+            reduced = None
+            if device_reduce and _kernel_eligible(backend, num_angles):
+                valid = np.array([s.grids[j] for s in group], dtype=np.int32)
+                reduced = _batched_argmin(
+                    base, cand, caps, valid, backend=backend, stats=stats
+                )
+            if reduced is not None:
+                s_new, _ = reduced
+                for s, (b, _), sn in zip(group, rows, s_new):
+                    s.apply_shift(j, b, int(sn))
+            else:
+                ex = _batched_excess(base, cand, caps, backend=backend, stats=stats)
+                for s, (b, _), row in zip(group, rows, ex):
+                    s.apply(j, b, row)
+
+    def step_ragged(group: list[_DescentState], j: int) -> list[_DescentState]:
+        """One ragged launch for the step's kernel-eligible rows; returns
+        the states a failed kernel import pushes back to the grouped path."""
+        rows = [s.job_row(j) for s in group]
+        widths = np.array([s.circle.num_angles for s in group], dtype=np.int32)
+        w = int(widths.max())
+        base = np.zeros((len(group), w))
+        cand = np.zeros((len(group), w))
+        for r, (b, c) in enumerate(rows):
+            base[r, : b.shape[0]] = b
+            cand[r, : c.shape[0]] = c
+        caps = np.array([s.capacity for s in group], dtype=np.float32)
+        valid = np.array([s.grids[j] for s in group], dtype=np.int32)
+        reduced = _batched_argmin_ragged(
+            base, cand, caps, valid, widths, stats=stats
+        )
+        if reduced is None:  # pragma: no cover - pallas unavailable
+            return group
+        stats.batched_calls += 1
+        stats.descent_rows += len(group)
+        s_new, _ = reduced
+        for s, (b, _), sn in zip(group, rows, s_new):
+            s.apply_shift(j, b, int(sn))
+        return []
+
     for trial in range(_COORD_DESCENT_SEEDS):
         live = [s for s in states if not s.done]
         if not live:
@@ -837,34 +1132,20 @@ def _solve_descent_batched(
                 s.changed = False
             for j in range(max(s.n for s in sweeping)):
                 stepping = [s for s in sweeping if j < s.n]
-                by_angles: dict[int, list[_DescentState]] = {}
-                for s in stepping:
-                    by_angles.setdefault(s.circle.num_angles, []).append(s)
-                for num_angles, group in by_angles.items():
-                    rows = [s.job_row(j) for s in group]
-                    base = np.stack([b for b, _ in rows])
-                    cand = np.stack([c for _, c in rows])
-                    caps = np.array([s.capacity for s in group], dtype=np.float32)
-                    stats.batched_calls += 1
-                    stats.descent_rows += len(group)
-                    reduced = None
-                    if device_reduce and _kernel_eligible(backend, num_angles):
-                        valid = np.array(
-                            [s.grids[j] for s in group], dtype=np.int32
-                        )
-                        reduced = _batched_argmin(
-                            base, cand, caps, valid, backend=backend, stats=stats
-                        )
-                    if reduced is not None:
-                        s_new, _ = reduced
-                        for s, (b, _), sn in zip(group, rows, s_new):
-                            s.apply_shift(j, b, int(sn))
-                    else:
-                        ex = _batched_excess(
-                            base, cand, caps, backend=backend, stats=stats
-                        )
-                        for s, (b, _), row in zip(group, rows, ex):
-                            s.apply(j, b, row)
+                grouped = stepping
+                if ragged and device_reduce:
+                    eligible = [
+                        s for s in stepping
+                        if _kernel_eligible(backend, s.circle.num_angles)
+                    ]
+                    grouped = [
+                        s for s in stepping
+                        if not _kernel_eligible(backend, s.circle.num_angles)
+                    ]
+                    if eligible:
+                        grouped = grouped + step_ragged(eligible, j)
+                if grouped:
+                    step_grouped(grouped, j)
             for s in sweeping:
                 s.in_sweep = s.changed
         for s in live:

@@ -91,6 +91,7 @@ class CassiniModule:
         max_workers: int | None = None,
         seed: int = 0,
         device_reduce: bool = True,
+        ragged: bool = True,
     ) -> None:
         self.precision_deg = precision_deg
         self.quantum_ms = quantum_ms
@@ -101,6 +102,12 @@ class CassiniModule:
         # device for kernel-eligible shapes (fused circle_score reduction);
         # False forces the full-matrix + host-reduction path everywhere.
         self.device_reduce = device_reduce
+        # Ragged single-launch batching: all kernel-eligible link problems
+        # of an epoch ship as ONE kernel launch per grid-chunk/descent
+        # step, whatever mix of unified-circle angle counts they carry;
+        # False restores the per-angle-count launch grouping (comparison
+        # path — results are bit-identical either way).
+        self.ragged = ragged
         # Candidates at one epoch mostly share link job-sets: memoize the
         # per-link optimization across candidates (and epochs).  All reads
         # and writes go through ``_cache_lock`` so the ThreadPoolExecutor
@@ -322,6 +329,7 @@ class CassiniModule:
                 seed=self.seed,
                 stats=stats,
                 device_reduce=self.device_reduce,
+                ragged=self.ragged,
             )
             self.last_batch_stats = stats
             for key, res in zip(keys, solved):

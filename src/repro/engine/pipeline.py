@@ -127,9 +127,15 @@ class ScoreStage(PipelineStage):
     lockstep-descent paths of ``find_rotations_batched``, and (with the
     module's ``device_reduce``, also the default) kernel-eligible rotation
     searches keep the argmin/acceptance reduction on device, returning
-    per-problem scalars instead of the ``(B, A)`` excess matrices;
-    :attr:`last_batch_stats` reflects the most recent batched solve
-    (``device_reduced`` / ``bytes_returned`` expose the transfer savings).
+    per-problem scalars instead of the ``(B, A)`` excess matrices.  With
+    the module's ``ragged`` (also the default) those kernel-eligible
+    problems additionally ship as ONE ragged launch per grid-chunk /
+    descent step regardless of their unified-circle angle counts — a
+    heterogeneous fabric no longer pays one dispatch per angle-count
+    group.  :attr:`last_batch_stats` reflects the most recent batched
+    solve (``device_reduced`` / ``bytes_returned`` expose the transfer
+    savings; ``launches`` / ``ragged_rows`` / ``pad_fraction`` the launch
+    consolidation).
     """
 
     name = "score"

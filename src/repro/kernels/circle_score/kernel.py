@@ -2,42 +2,66 @@
 
 For every link row ``l`` and candidate rotation ``s``:
 
-    out[l, s] = Σ_α max(0, base[l, α] + cand[l, (α − s) mod A] − C)
+    out[l, s] = Σ_α max(0, base[l, α] + cand[l, (α − s) mod A_l] − C_l)
 
 This is the inner loop of the rotation search (:mod:`repro.core.compat`) —
 a circular-shift correlation with a ReLU inside the reduction, evaluated
-for *all* A rotations of a candidate job against the already-placed demand
-``base``.  The scheduler evaluates thousands of (candidate × link) rows
-per epoch at 10 candidates × O(links) (Algorithm 2), so the batched form
-is the hot-spot.
+for *all* admissible rotations of a candidate job against the
+already-placed demand ``base``.  The scheduler evaluates thousands of
+(candidate × link) rows per epoch at 10 candidates × O(links)
+(Algorithm 2), so the batched form is the hot-spot.
 
-Two kernel variants share the same inner loop:
+Two kernel variants share the same inner arithmetic:
 
   * :func:`circle_score_pallas` — the full ``(L, A)`` excess matrix
-    (kept for the numpy fallback paths and for tests);
-  * :func:`circle_score_argmin_pallas` — the fused argmin/accept
-    reduction: the running ``(best_shift, best_excess)`` per row is
-    carried *inside* the shift loop, so only ``O(L)`` scalars ever leave
-    the device instead of the ``O(L·A)`` matrix.  The loop is a
-    ``while_loop`` bounded by the per-row admissible-shift counts
-    (``valid`` — Eq. 4 only admits ``A / r_j`` distinct rotations) and
-    exits early once every row in the block has reached zero excess
-    (excess sums are non-negative and acceptance is strict, so nothing
-    can beat zero).  Tie-breaking is lowest-shift-wins (strict ``<``
-    against the running min while scanning shifts in ascending order),
-    bit-identical to host ``np.argmin``.
+    (kept for the host-reduction fallback paths and for tests);
+  * :func:`circle_score_argmin_pallas` — the fused *ragged* reduction:
+    every row carries its own angle count ``num_angles[l]`` (``A_l``) and
+    admissible-shift bound ``valid[l]``, so link problems built on
+    *different* unified circles ship in ONE launch.  The argmin is a
+    **chunked tournament tree**: each round evaluates
+    :data:`SHIFT_CHUNK` independent shifts, reduces them with a
+    log-depth pairwise ``(value, index)`` tournament and merges one
+    champion into the ``(BL, 1)`` running best — the lexicographic
+    compare (take the right operand iff ``(rv < lv) or (rv == lv and
+    ri < li)``) preserves the strict-``<`` lowest-shift tie-break of
+    host ``np.argmin`` for *any* tree shape, and the sequential depth
+    drops by the chunk factor versus the old one-shift-per-iteration
+    scan.  Only ``O(L)`` scalars ever leave the device.
 
-TPU mapping: the circle rows live in VMEM (A ≤ ~2k angles ⇒ a (BL, A)
-f32 tile is ≤ 1 MiB); rolls are realized as dynamic slices of a
-concatenated (BL, 2A) buffer — no gathers — and the shift loop is
-sequential so the kernel is O(A²) VPU work per row with a single HBM
-round-trip.  Mosaic lowering wants lane-aligned tiles: with
-``lane_pad=True`` (the default) the angle axis is zero-padded up to a
-multiple of :data:`LANE_MULTIPLE` and statically re-sliced to the real
-width before each reduction, so *any* unified-circle angle count
-satisfies the alignment requirement while the padding provably cannot
-change a single output bit (the reductions see exactly the unpadded
-operands).
+Ragged row layout and masking invariants (see docs/architecture.md):
+
+  * the angle axis is padded to the batch-wide lane width ``AP`` (a
+    multiple of :data:`LANE_MULTIPLE`); ``base`` is zero beyond ``A_l``;
+  * the candidate ships as a *periodic* buffer
+    ``cc[l, u] = cand[l, (u − AP) mod A_l]`` of width ``2·AP``, so the
+    roll by any shift ``s`` is one dynamic slice at the row-independent
+    start ``AP − s`` — no in-kernel gathers, any mix of periods;
+  * per-shift excess terms at angles ``α ≥ A_l`` are masked to exactly
+    ``0.0`` before the row reduction, and shifts ``s ≥ valid[l]`` are
+    masked to ``+inf`` before the tournament — padded angles and
+    inadmissible shifts provably cannot win any reduction;
+  * row sums use :func:`_fold_sum`: ascending sequential accumulation
+    of 128-lane groups into one fixed-width partial plus one fixed-shape
+    reduce.  Zero groups appended by wider padding are exact additive
+    identities, so the fold at *any* padded width ``≥ A_l`` produces
+    bit-identical float32 sums — this is what makes a ragged launch
+    bit-identical to per-group launches (and to the full-matrix kernel
+    the scalar search scores through), regardless of what other rows
+    share the batch.
+
+The tournament loop exits early once every row's running best has
+reached zero — excess sums are non-negative and ties resolve to the
+earlier shift, so nothing can displace a found zero, and each row's
+evaluated prefix is guaranteed to contain its first zero shift, which
+the tournament selects exactly like ``np.argmin`` over the full window.
+
+TPU mapping: the circle rows live in VMEM (A ≤ ~2k angles ⇒ a (BL, AP)
+f32 tile is ≤ 1 MiB); rolls are realized as dynamic slices of the
+periodic (BL, 2·AP) buffer — no gathers — the chunk's shift evaluations
+are independent (pipelineable; the only carried state is the (BL, 1)
+champion pair) and both reductions (fold sum, tournament argmin) are
+log-depth.
 """
 
 from __future__ import annotations
@@ -55,27 +79,116 @@ DEFAULT_BLOCK_L = 32
 # zero-pad the angle axis up to this multiple by default (masked in-kernel,
 # exact — see module docstring).
 LANE_MULTIPLE = 128
+# Shifts evaluated per tournament round of the fused argmin kernel: each
+# loop iteration scores this many consecutive shifts (independent slices,
+# unrolled — no carried dependence between them), reduces them with a
+# log-depth tournament and merges one (value, index) champion pair into
+# the (BL, 1) running best.  Cuts the loop's sequential depth by 8x while
+# keeping the carried state tiny — materializing the full per-shift value
+# matrix instead (one store per iteration) measured ~4x slower because
+# the loop then drags a (BL, AP) buffer through every iteration.
+SHIFT_CHUNK = 8
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _fold_sum(x: jax.Array) -> jax.Array:
+    """Padding-invariant row sums: ``(BL, W) → (BL, 1)``.
+
+    Pads to a multiple of :data:`LANE_MULTIPLE` with zeros, accumulates
+    the 128-lane groups **sequentially in ascending order** into one
+    128-wide partial, then reduces that partial with one fused
+    ``jnp.sum``.
+
+    Invariance: if ``x[l, α] == 0`` for all ``α ≥ A_l``, lane ``i`` of
+    the partial is ``(...(x[l,i] + x[l,i+128]) + x[l,i+256]) + ...`` —
+    appending all-zero groups (any wider padding) only appends
+    ``v + 0.0`` steps, which are exact in IEEE (all operands ``≥ +0.0``),
+    so the partial is elementwise identical for every batch width
+    ``≥ A_l``.  The closing reduce then always runs on the same static
+    ``(·, 128)`` shape, so XLA emits one fixed reduction whose result is
+    a function of the partial alone (batch-width, row-count and
+    pallas-vs-host invariant — pinned by the parity tests).  Plain
+    ``jnp.sum`` over the raw row does NOT have this property (XLA
+    regroups partials per width, measured), which is why every
+    kernel-family row sum goes through this fold.
+    """
+    bl, w = x.shape
+    wp = -(-w // LANE_MULTIPLE) * LANE_MULTIPLE
+    if wp != w:
+        x = jnp.pad(x, ((0, 0), (0, wp - w)))
+    acc = x[:, :LANE_MULTIPLE]
+    for k in range(1, wp // LANE_MULTIPLE):
+        acc = acc + x[:, k * LANE_MULTIPLE : (k + 1) * LANE_MULTIPLE]
+    return jnp.sum(acc, axis=-1, keepdims=True)
+
+
+def _tournament_min(
+    lv: jax.Array, li: jax.Array, rv: jax.Array, ri: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """One tournament round: elementwise lexicographic ``(value, index)``
+    min.  The right operand wins iff ``rv < lv or (rv == lv and ri < li)``
+    — so ties always resolve to the lowest index no matter how a tree
+    pairs elements: at every internal node the survivor is the
+    lexicographic minimum of the leaves below it, hence the root is the
+    global ``(min value, first index of it)`` — exactly ``np.argmin``
+    (proof sketch in docs/architecture.md)."""
+    take_r = jnp.logical_or(rv < lv, jnp.logical_and(rv == lv, ri < li))
+    return jnp.where(take_r, rv, lv), jnp.where(take_r, ri, li)
+
+
+def _tournament_argmin(
+    vals: jax.Array, idx: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Tournament-tree argmin: ``(BL, S) → ((BL, 1) val, (BL, 1) idx)``.
+
+    Log-depth pairwise halving over ``(value, index)`` pairs using
+    :func:`_tournament_min`; the lexicographic compare makes the result
+    independent of the tree shape.  Padding columns are ``+inf`` and can
+    only win when a whole row is ``+inf`` (then the lowest index wins,
+    like argmin over a constant row).
+    """
+    bl, s = vals.shape
+    p = _next_pow2(s)
+    if p != s:
+        vals = jnp.pad(vals, ((0, 0), (0, p - s)), constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, p - s)))
+    while vals.shape[1] > 1:
+        h = vals.shape[1] // 2
+        vals, idx = _tournament_min(
+            vals[:, :h], idx[:, :h], vals[:, h:], idx[:, h:]
+        )
+    return vals, idx
 
 
 def _circle_score_kernel(a: int, base_ref, cc_ref, cap_ref, out_ref):
     """Full-matrix variant: ``out[:, s]`` for every shift ``s < a``.
 
-    ``a`` is the *real* (unpadded) angle count, closed over statically;
-    ``cc_ref`` is the doubled candidate buffer (see ``_prep_inputs``).
+    ``a`` is the shared *real* (unpadded) angle count, closed over
+    statically; ``cc_ref`` is the periodic candidate buffer (see
+    ``_prep_inputs``).  Rows use the same masked fold-sum as the ragged
+    argmin kernel, so full-matrix values and fused values are
+    bit-identical.
     """
     base = base_ref[...]                                # (BL, AP)
     cc = cc_ref[...]                                    # (BL, 2*AP)
     cap = cap_ref[...]                                  # (BL, 1) per-row
     bl, ap = base.shape
+    # mask angles >= a to exactly 0 before the fold: the reduction then
+    # sees the unpadded operands plus exact additive identities, so lane
+    # padding provably cannot change a single output bit
+    mask = jax.lax.broadcasted_iota(jnp.int32, (bl, ap), 1) < a
 
     def body(s, _):
-        # rolled[α] = cand[(α − s) mod A] == concat[A − s : A − s + AP]
-        rolled = jax.lax.dynamic_slice(cc, (0, a - s), (bl, ap))
+        # rolled[α] = cand[(α − s) mod a] == cc[AP − s : 2·AP − s][:AP]
+        rolled = jax.lax.dynamic_slice(cc, (0, ap - s), (bl, ap))
         excess = jnp.maximum(base + rolled - cap, 0.0)
-        # static re-slice to the real width: the reduction sees exactly the
-        # same operands as the unpadded kernel, so lane padding provably
-        # cannot change a single output bit
-        val = jnp.sum(excess[:, :a], axis=-1, keepdims=True)  # (BL, 1)
+        val = _fold_sum(jnp.where(mask, excess, 0.0))   # (BL, 1)
         pl.store(out_ref, (slice(None), pl.dslice(s, 1)), val)
         return 0
 
@@ -83,39 +196,61 @@ def _circle_score_kernel(a: int, base_ref, cc_ref, cap_ref, out_ref):
 
 
 def _circle_score_argmin_kernel(
-    a: int, base_ref, cc_ref, cap_ref, valid_ref, idx_ref, val_ref
+    base_ref, cc_ref, cap_ref, valid_ref, na_ref, idx_ref, val_ref
 ):
-    """Fused variant: running (best_shift, best_excess) carried in-loop.
+    """Ragged fused variant: per-row angle counts, chunked tournament.
 
-    Scans shifts in ascending order with a strict ``<`` acceptance, so the
-    result is the *first* index of the minimum — ``np.argmin`` semantics.
-    Shifts ``s ≥ valid[row]`` are masked to ``+inf`` (Eq. 4 bound), the
-    loop stops at the block's largest admissible shift count, and exits
-    early once every row's running best hit zero (excess sums are
-    non-negative, acceptance strict — nothing can improve on zero).
+    Each loop round evaluates :data:`SHIFT_CHUNK` consecutive shifts —
+    independent slices, unrolled, no carried dependence between them —
+    masks shifts ``s ≥ valid[row]`` to ``+inf`` (Eq. 4 bound) and angles
+    ``α ≥ num_angles[row]`` to exactly ``0.0`` before the fold (ragged
+    masking invariant), reduces the chunk with a log-depth tournament
+    and merges the champion into the ``(BL, 1)`` running ``(best_val,
+    best_idx)`` pair with the same lexicographic compare.  Chunks are
+    visited in ascending shift order, so the running pair always carries
+    the lowest-index minimum — exactly ``np.argmin`` over each row's
+    admissible window.
+
+    The loop stops at the block's largest admissible shift count and
+    exits early once every row's running best hit zero (excess sums are
+    non-negative, ties resolve to the earlier shift — nothing can
+    displace a found zero).  Each row's evaluated prefix therefore
+    provably contains its own first-zero shift (or its whole admissible
+    window), independent of which other rows share the block.
     """
     base = base_ref[...]                                # (BL, AP)
     cc = cc_ref[...]                                    # (BL, 2*AP)
     cap = cap_ref[...]                                  # (BL, 1)
     valid = valid_ref[...]                              # (BL, 1) int32
+    na = na_ref[...]                                    # (BL, 1) int32
     bl, ap = base.shape
+    mask = jax.lax.broadcasted_iota(jnp.int32, (bl, ap), 1) < na
     nvalid = jnp.max(valid)
 
     def cond(carry):
-        s, best_val, _ = carry
-        return jnp.logical_and(s < nvalid, jnp.max(best_val) > 0.0)
+        c, best_val, _ = carry
+        return jnp.logical_and(c < nvalid, jnp.max(best_val) > 0.0)
 
     def body(carry):
-        s, best_val, best_idx = carry
-        rolled = jax.lax.dynamic_slice(cc, (0, a - s), (bl, ap))
-        excess = jnp.maximum(base + rolled - cap, 0.0)
-        # static re-slice to the real width (see _circle_score_kernel)
-        val = jnp.sum(excess[:, :a], axis=-1, keepdims=True)  # (BL, 1)
-        val = jnp.where(s < valid, val, jnp.inf)
-        take = val < best_val
-        best_val = jnp.where(take, val, best_val)
-        best_idx = jnp.where(take, s, best_idx)
-        return s + 1, best_val, best_idx
+        c, best_val, best_idx = carry
+        cols_v, cols_i = [], []
+        for i in range(SHIFT_CHUNK):                    # unrolled: no deps
+            s = c + i
+            # rolled[α] = cand[(α − s) mod A] == cc[AP − s : 2·AP − s][:AP]
+            # (dynamic_slice clamps s ≥ AP starts; those shifts are ≥ valid
+            # and masked to +inf below, so the clamped values never matter)
+            rolled = jax.lax.dynamic_slice(cc, (0, ap - s), (bl, ap))
+            excess = jnp.maximum(base + rolled - cap, 0.0)
+            val = _fold_sum(jnp.where(mask, excess, 0.0))   # (BL, 1)
+            cols_v.append(jnp.where(s < valid, val, jnp.inf))
+            cols_i.append(jnp.broadcast_to(jnp.reshape(s, (1, 1)), (bl, 1)))
+        chunk_v, chunk_i = _tournament_argmin(
+            jnp.concatenate(cols_v, axis=1), jnp.concatenate(cols_i, axis=1)
+        )
+        best_val, best_idx = _tournament_min(
+            best_val, best_idx, chunk_v, chunk_i
+        )
+        return c + SHIFT_CHUNK, best_val, best_idx
 
     # rows with valid == 0 (block padding) start "done" so they can never
     # hold the early-exit condition open
@@ -127,29 +262,54 @@ def _circle_score_argmin_kernel(
 
 
 # ---------------------------------------------------------------------- #
-def _prep_inputs(base, cand, capacity, block_l: int, lane_pad: bool):
+def _prep_inputs(
+    base, cand, capacity, block_l: int, lane_pad: bool,
+    *, num_angles=None, pad_to: int | None = None,
+):
     """Row-pad to the block size and lane-pad the angle axis.
 
-    Returns ``(base, cc, cap, l, a, ap)`` where ``cc`` is the doubled
-    candidate buffer: ``concat([cand, cand])`` built at the *real* width
-    ``2a`` (so the modular roll stays contiguous) and only then zero-padded
-    on the right to ``2·ap``.  The slice ``cc[:, a − s : a − s + ap]``
-    therefore reads real candidate values at angles ``< a`` and padding
-    above — which the kernels discard by statically re-slicing to the real
-    width before every reduction.
+    Returns ``(base, cc, cap, na, l, a, ap)`` where ``cc`` is the
+    *periodic* candidate buffer ``cc[r, u] = cand[r, (u − AP) mod A_r]``
+    of width ``2·AP``: the roll by shift ``s`` is then the single slice
+    ``cc[:, AP − s : 2·AP − s]`` for *every* row at once, whatever mix
+    of real angle counts ``A_r ≤ a`` the batch carries.  For a uniform
+    batch (``num_angles=None`` ⇒ ``A_r = a``) this reads exactly the
+    doubled-candidate values the pre-ragged kernels used.
+
+    ``pad_to`` forces a wider lane-padded width (still masked in-kernel,
+    still bit-exact by the fold invariance) — used to bucket ragged
+    launch widths and to exercise the all-rows-padded case in tests.
     """
     l, a = base.shape
-    ap = (a + LANE_MULTIPLE - 1) // LANE_MULTIPLE * LANE_MULTIPLE if lane_pad else a
+    ap = -(-a // LANE_MULTIPLE) * LANE_MULTIPLE if lane_pad else a
+    if pad_to is not None:
+        want = -(-pad_to // LANE_MULTIPLE) * LANE_MULTIPLE if lane_pad else pad_to
+        ap = max(ap, want)
     pad_rows = (-l) % block_l
     cap = jnp.asarray(capacity, jnp.float32)
     cap = jnp.broadcast_to(cap.reshape(-1, 1) if cap.ndim else cap, (l, 1))
     base = base.astype(jnp.float32)
     cand = cand.astype(jnp.float32)
-    cc = jnp.concatenate([cand, cand], axis=-1)         # (L, 2A), contiguous
+    if num_angles is None:
+        na = jnp.full((l, 1), a, jnp.int32)
+        # uniform fast path: the periodic buffer has one shared period, so
+        # tile + static slice builds it without the per-row gather below
+        # (bit-identical — same elements, exact copies; gathers lower far
+        # worse than concat/tile on the TPU target)
+        reps = -(-ap // a)                              # ceil(AP / A)
+        off = reps * a - ap                             # phase: (−AP) mod A
+        cc = jnp.tile(cand, (1, 2 * reps))[:, off : off + 2 * ap]
+    else:
+        na = jnp.asarray(num_angles, jnp.int32).reshape(-1, 1)
+        u = jnp.arange(2 * ap, dtype=jnp.int32)[None, :]    # (1, 2*AP)
+        cc = jnp.take_along_axis(cand, (u - ap) % na, axis=1)
     base = jnp.pad(base, ((0, pad_rows), (0, ap - a)))
-    cc = jnp.pad(cc, ((0, pad_rows), (0, 2 * ap - 2 * a)))
+    cc = jnp.pad(cc, ((0, pad_rows), (0, 0)))
     cap = jnp.pad(cap, ((0, pad_rows), (0, 0)))
-    return base, cc, cap, l, a, ap
+    # padding rows get A = 1 (their demand is all-zero anyway) so the
+    # periodic index arithmetic stays well-defined
+    na = jnp.pad(na, ((0, pad_rows), (0, 0)), constant_values=1)
+    return base, cc, cap, na, l, a, ap
 
 
 @functools.partial(
@@ -166,11 +326,13 @@ def circle_score_pallas(
 ) -> jax.Array:
     """Batched scoring; returns (L, A) excess sums (lower = better).
 
-    Per-row capacities let one launch cover links with different capacities
-    (the k-job grid batching groups rows by angle count only); a scalar
-    capacity is broadcast to every row.
+    Per-row capacities let one launch cover links with different
+    capacities; a scalar capacity is broadcast to every row.  Values are
+    bit-identical to the fused ragged kernel (same masked fold-sum).
     """
-    base, cc, cap, l, a, ap = _prep_inputs(base, cand, capacity, block_l, lane_pad)
+    base, cc, cap, _na, l, a, ap = _prep_inputs(
+        base, cand, capacity, block_l, lane_pad
+    )
     lp = base.shape[0]
 
     out = pl.pallas_call(
@@ -189,37 +351,47 @@ def circle_score_pallas(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_l", "interpret", "lane_pad")
+    jax.jit, static_argnames=("block_l", "interpret", "lane_pad", "pad_to")
 )
 def circle_score_argmin_pallas(
-    base: jax.Array,      # (L, A) float32
-    cand: jax.Array,      # (L, A) float32
+    base: jax.Array,      # (L, A) float32 — zero-padded beyond num_angles[l]
+    cand: jax.Array,      # (L, A) float32 — row l real in [:num_angles[l]]
     capacity: jax.Array,  # scalar, or (L,)/(L, 1) per-row
-    valid: jax.Array,     # (L,) int32 admissible shifts per row (≤ A)
+    valid: jax.Array,     # (L,) int32 admissible shifts per row (≤ num_angles)
+    num_angles: jax.Array | None = None,  # (L,) int32 per-row angle counts
     *,
     block_l: int = DEFAULT_BLOCK_L,
     interpret: bool = True,
     lane_pad: bool = True,
+    pad_to: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused reduction; returns ``(best_shift (L,) int32, best_excess (L,))``.
+    """Fused ragged reduction; one launch for any mix of angle counts.
 
-    Bit-identical to ``np.argmin(full_matrix[l, :valid[l]])`` per row —
-    same excess sums (identical in-kernel arithmetic), first-index
-    tie-breaking — while returning O(L) scalars instead of the O(L·A)
-    matrix, and scanning only the admissible shifts of each block.
+    Returns ``(best_shift (L,) int32, best_excess (L,) float32)`` —
+    bit-identical to ``np.argmin(full_matrix[l, :valid[l]])`` per row
+    (same fold-sum excess values, first-index tie-breaking via the
+    tournament tree) while returning O(L) scalars instead of the O(L·A)
+    matrix.  ``num_angles=None`` treats the batch as uniform (every row
+    spans all ``A`` angles); per-group launches are exactly this kernel
+    invoked once per distinct angle count, so ragged-vs-grouped
+    equivalence reduces to the fold's padding invariance.
     """
     l, a = base.shape
     valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32).reshape(-1, 1), (l, 1))
-    base, cc, cap, l, a, ap = _prep_inputs(base, cand, capacity, block_l, lane_pad)
+    base, cc, cap, na, l, a, ap = _prep_inputs(
+        base, cand, capacity, block_l, lane_pad,
+        num_angles=num_angles, pad_to=pad_to,
+    )
     lp = base.shape[0]
     valid = jnp.pad(valid, ((0, lp - l), (0, 0)))
 
     idx, val = pl.pallas_call(
-        functools.partial(_circle_score_argmin_kernel, a),
+        _circle_score_argmin_kernel,
         grid=(lp // block_l,),
         in_specs=[
             pl.BlockSpec((block_l, ap), lambda i: (i, 0)),
             pl.BlockSpec((block_l, 2 * ap), lambda i: (i, 0)),
+            pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_l, 1), lambda i: (i, 0)),
         ],
@@ -232,5 +404,5 @@ def circle_score_argmin_pallas(
             jax.ShapeDtypeStruct((lp, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(base, cc, cap, valid)
+    )(base, cc, cap, valid, na)
     return idx[:l, 0], val[:l, 0]

@@ -6,17 +6,25 @@ kernel with ``interpret=False``) and is what :mod:`repro.core.compat`
 calls for its numpy-free fallback paths and what the tests oracle against.
 
 ``circle_score_argmin`` is the fused reduction: per-row
-``(best_shift, best_excess)`` computed inside the kernel's shift loop, so
-only O(L) scalars cross the device→host boundary instead of the O(L·A)
-excess matrix.
+``(best_shift, best_excess)`` computed inside the kernel (chunked
+tournament-tree argmin), so only O(L) scalars cross the device→host
+boundary instead of the O(L·A) excess matrix.
 
-``circle_score_segmin`` layers the segmented accept-scan on top: rows
-belong to contiguous *segments* (one segment = one link problem's product
-grid rows within a chunk) and the scan replays the host coordinate-search
-acceptance rule — visit rows in order, accept a row's best shift iff it
-beats the segment's incumbent by more than the 1e-12 slack — entirely on
-device, returning four O(num_segments) vectors.  The scan runs in float64
-(via :func:`jax.experimental.enable_x64`) so the ``excess < best − 1e-12``
+``circle_score_ragged_argmin`` is the same kernel with per-row angle
+counts: rows built on *different* unified circles (mixed ``A_l``) ship
+as ONE launch, each row masked to its own ``num_angles[l]`` angles and
+``valid[l]`` admissible shifts.  The fold-sum row reduction is
+padding-invariant, so ragged results are bit-identical to per-group
+launches of the uniform entry point (tests assert it).
+
+``circle_score_segmin`` / ``circle_score_ragged_segmin`` layer the
+segmented accept-scan on top: rows belong to contiguous *segments* (one
+segment = one link problem's product-grid rows within a chunk) and the
+scan replays the host coordinate-search acceptance rule — visit rows in
+order, accept a row's best shift iff it beats the segment's incumbent by
+more than the 1e-12 slack — entirely on device, returning four
+O(num_segments) vectors.  The scan runs in float64 (via
+:func:`jax.experimental.enable_x64`) so the ``excess < best − 1e-12``
 predicate is evaluated in exactly the arithmetic the host search uses
 (python floats), keeping accepted-shift sequences bit-identical even for
 sub-ulp float32 excess differences.
@@ -35,7 +43,9 @@ from .ref import circle_score_argmin_ref, circle_score_ref
 __all__ = [
     "circle_score",
     "circle_score_argmin",
+    "circle_score_ragged_argmin",
     "circle_score_segmin",
+    "circle_score_ragged_segmin",
     "circle_score_ref",
     "circle_score_argmin_ref",
     "ACCEPT_SLACK",
@@ -80,6 +90,45 @@ def circle_score_argmin(base, cand, capacity, valid=None):
     )
 
 
+def circle_score_ragged_argmin(
+    base, cand, capacity, valid, num_angles, *, pad_to=None
+):
+    """Ragged fused rotation search: ONE launch over mixed angle counts.
+
+    Args:
+      base, cand: (L, W) float32, row ``l`` real in ``[:num_angles[l]]``
+        and zero-padded above (W = the packed batch width ≥ max A_l).
+      capacity: scalar or (L,) per-row link capacities.
+      valid: (L,) int32 admissible shifts per row (1 ≤ valid ≤ A_l).
+      num_angles: (L,) int32 per-row real angle counts (1 ≤ A_l ≤ W).
+      pad_to: optionally force a wider launch width (bucketing / tests);
+        bit-exact by the fold-sum padding invariance.
+
+    Returns ``(best_shift, best_excess)`` per row, bit-identical to
+    invoking :func:`circle_score_argmin` once per angle-count group on
+    the tightly-sliced rows.
+    """
+    base = np.atleast_2d(np.asarray(base, np.float32))
+    cand = np.atleast_2d(np.asarray(cand, np.float32))
+    l, w = base.shape
+    na = np.broadcast_to(np.asarray(num_angles, np.int32), (l,))
+    valid = np.broadcast_to(np.asarray(valid, np.int32), (l,))
+    if np.any(na < 1) or np.any(na > w):
+        raise ValueError(f"num_angles must lie in [1, {w}], got {na}")
+    if np.any(valid < 1) or np.any(valid > na):
+        # valid == 0 is the *internal* block-padding convention of the
+        # kernel (rows the wrapper slices off); a caller-supplied row with
+        # no admissible shift would come back as a fabricated perfect
+        # (shift 0, excess 0) — reject it instead
+        raise ValueError("valid shift counts must lie in [1, num_angles]")
+    cap = jnp.asarray(capacity, jnp.float32)
+    return circle_score_argmin_pallas(
+        jnp.asarray(base), jnp.asarray(cand), cap,
+        jnp.asarray(valid), jnp.asarray(na),
+        interpret=not _ON_TPU, pad_to=pad_to,
+    )
+
+
 @jax.jit
 def _accept_scan(val, idx, seg_ids, init_best):
     """Sequential accept fold over rows, segmented by ``seg_ids``.
@@ -113,6 +162,16 @@ def _accept_scan(val, idx, seg_ids, init_best):
     return acc, row, shift, best
 
 
+def _segmin_from(idx, val, seg_ids, init_best):
+    """Shared accept-scan tail of the (ragged) segmin entry points."""
+    seg = jnp.asarray(np.asarray(seg_ids), jnp.int32)
+    with enable_x64():
+        acc, row, shift, best = _accept_scan(
+            val, idx, seg, jnp.asarray(np.asarray(init_best, np.float64))
+        )
+    return acc, row, shift, best
+
+
 def circle_score_segmin(base, cand, capacity, valid, seg_ids, init_best):
     """Fused rotation search + segmented acceptance, fully device-side.
 
@@ -129,9 +188,16 @@ def circle_score_segmin(base, cand, capacity, valid, seg_ids, init_best):
     state.  Only these four O(S) vectors leave the device.
     """
     idx, val = circle_score_argmin(base, cand, capacity, valid)
-    seg = jnp.asarray(np.asarray(seg_ids), jnp.int32)
-    with enable_x64():
-        acc, row, shift, best = _accept_scan(
-            val, idx, seg, jnp.asarray(np.asarray(init_best, np.float64))
-        )
-    return acc, row, shift, best
+    return _segmin_from(idx, val, seg_ids, init_best)
+
+
+def circle_score_ragged_segmin(
+    base, cand, capacity, valid, num_angles, seg_ids, init_best, *, pad_to=None
+):
+    """Ragged :func:`circle_score_segmin`: one launch over mixed angle
+    counts (see :func:`circle_score_ragged_argmin`), then the same
+    segmented device-side acceptance scan."""
+    idx, val = circle_score_ragged_argmin(
+        base, cand, capacity, valid, num_angles, pad_to=pad_to
+    )
+    return _segmin_from(idx, val, seg_ids, init_best)

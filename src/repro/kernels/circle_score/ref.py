@@ -1,4 +1,11 @@
-"""Pure oracles for the circle_score kernel family."""
+"""Pure oracles for the circle_score kernel family.
+
+The kernels' row sums are power-of-two halving-folds (padding-invariant —
+see ``kernel._fold_sum``), which is part of their arithmetic contract:
+the oracles reproduce the same fold in plain numpy so exact-parity tests
+can compare the fused reductions against an independent implementation
+bit for bit.
+"""
 
 from __future__ import annotations
 
@@ -7,34 +14,76 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _fold_sum_np(x: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``kernel._fold_sum``: (L, W) → (L,) float32 row sums
+    via the same ascending sequential accumulation of 128-lane groups
+    (same order, same IEEE adds).  The closing 128-lane reduce goes
+    through the same jitted ``jnp.sum`` the kernels use — numpy's
+    pairwise summation groups differently (measured), and the oracle
+    must reproduce the kernel arithmetic exactly for the bit-parity
+    tests."""
+    from .kernel import LANE_MULTIPLE
+
+    x = np.asarray(x, np.float32)
+    wp = -(-x.shape[1] // LANE_MULTIPLE) * LANE_MULTIPLE
+    if wp != x.shape[1]:
+        x = np.pad(x, ((0, 0), (0, wp - x.shape[1])))
+    acc = x[:, :LANE_MULTIPLE]
+    for k in range(1, wp // LANE_MULTIPLE):
+        acc = acc + x[:, k * LANE_MULTIPLE : (k + 1) * LANE_MULTIPLE]
+    return np.asarray(_final_reduce(jnp.asarray(acc)))
+
+
+@jax.jit
+def _final_reduce(x):
+    return jnp.sum(x, axis=-1)
+
+
 def circle_score_ref(base: jax.Array, cand: jax.Array, capacity) -> jax.Array:
-    """out[l, s] = Σ_α max(0, base[l,α] + cand[l,(α−s) mod A] − C_l).
+    """out[l, s] = fold_Σ_α max(0, base[l,α] + cand[l,(α−s) mod A] − C_l).
 
     ``capacity`` is a scalar or an ``(L,)`` / ``(L, 1)`` per-row array,
     mirroring the kernel's per-row capacity support.
     """
+    base = np.asarray(base, np.float32)
+    cand = np.asarray(cand, np.float32)
     l, a = base.shape
-    idx = (jnp.arange(a)[None, :] - jnp.arange(a)[:, None]) % a  # (S, A)
+    idx = (np.arange(a)[None, :] - np.arange(a)[:, None]) % a    # (S, A)
     rolled = cand[:, idx]                                        # (L, S, A)
-    cap = jnp.asarray(capacity, base.dtype)
+    cap = np.asarray(capacity, np.float32)
     cap = cap.reshape(-1, 1, 1) if cap.ndim else cap
-    total = base[:, None, :] + rolled - cap
-    return jnp.maximum(total, 0.0).sum(axis=-1)
+    excess = np.maximum(base[:, None, :] + rolled - cap, 0.0)
+    out = _fold_sum_np(excess.reshape(l * a, a)).reshape(l, a)
+    return jnp.asarray(out)
 
 
-def circle_score_argmin_ref(base, cand, capacity, valid=None):
+def circle_score_argmin_ref(base, cand, capacity, valid=None, num_angles=None):
     """Host oracle for the fused reduction: full matrix, then per-row
     ``np.argmin`` over the first ``valid[l]`` admissible shifts (first-index
-    tie-breaking — exactly what the scalar rotation search does)."""
-    mat = np.asarray(circle_score_ref(
-        jnp.asarray(base, jnp.float32), jnp.asarray(cand, jnp.float32), capacity
-    ))
-    l, a = mat.shape
+    tie-breaking — exactly what the scalar rotation search does).
+
+    ``num_angles`` makes the oracle ragged: row ``l`` is scored on its own
+    ``A_l``-angle circle (``base[l, :A_l]`` / ``cand[l, :A_l]``), matching
+    the ragged kernel's per-row masking.
+    """
+    base = np.asarray(base, np.float32)
+    cand = np.asarray(cand, np.float32)
+    l, a = base.shape
     valid = np.full(l, a) if valid is None else np.broadcast_to(valid, (l,))
+    na = (
+        np.full(l, a)
+        if num_angles is None
+        else np.broadcast_to(num_angles, (l,))
+    )
+    cap = np.broadcast_to(np.asarray(capacity, np.float32).reshape(-1), (l,))
     idx = np.empty(l, np.int32)
     val = np.empty(l, np.float32)
     for i in range(l):
-        s = int(np.argmin(mat[i, : valid[i]]))
+        w = int(na[i])
+        mat = np.asarray(
+            circle_score_ref(base[i : i + 1, :w], cand[i : i + 1, :w], cap[i])
+        )[0]
+        s = int(np.argmin(mat[: valid[i]]))
         idx[i] = s
-        val[i] = mat[i, s]
+        val[i] = mat[s]
     return idx, val

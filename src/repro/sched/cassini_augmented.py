@@ -31,6 +31,7 @@ class CassiniAugmented(Scheduler):
         batched: bool = True,
         seed: int = 0,
         device_reduce: bool = True,
+        ragged: bool = True,
     ) -> None:
         # pacing (isochronous grid) is only armed for jobs whose every
         # contended link scored >= pace_threshold: holding the grid on a
@@ -47,7 +48,7 @@ class CassiniAugmented(Scheduler):
 
         self.module = CassiniModule(
             precision_deg=precision_deg, quantum_ms=quantum_ms, seed=seed,
-            device_reduce=device_reduce,
+            device_reduce=device_reduce, ragged=ragged,
         )
         self.pipeline = SchedulingPipeline.cassini(
             host,

@@ -30,6 +30,8 @@ from repro.kernels.circle_score.ops import (
     circle_score,
     circle_score_argmin,
     circle_score_argmin_ref,
+    circle_score_ragged_argmin,
+    circle_score_ragged_segmin,
     circle_score_segmin,
 )
 
@@ -206,6 +208,270 @@ def test_lane_padding_changes_no_output_bit(l, a):
 
 
 # ---------------------------------------------------------------------- #
+# ragged single-launch batches (mixed angle counts in ONE kernel launch)
+# ---------------------------------------------------------------------- #
+RAGGED_ANGLE_COUNTS = (512, 640, 1024)
+
+
+def _ragged_rows(rng, nas, *, zero_cap_frac=0.25, infeasible_frac=0.25):
+    """Pack rows with per-row angle counts ``nas`` into one (L, max) batch
+    (row l real in [:nas[l]], zero-padded above), with the same zero-cap /
+    infeasible row mix as the uniform harness."""
+    nas = np.asarray(nas, np.int32)
+    l, w = len(nas), int(nas.max())
+    base = np.zeros((l, w), np.float32)
+    cand = np.zeros((l, w), np.float32)
+    for i, a in enumerate(nas):
+        base[i, :a] = rng.random(a) * 60
+        cand[i, :a] = rng.random(a) * 60
+    caps = rng.choice([25.0, 50.0, 100.0], l).astype(np.float32)
+    k = int(l * zero_cap_frac)
+    caps[:k] = 0.0
+    m = int(l * infeasible_frac)
+    base[k:k + m] += np.where(
+        np.arange(w)[None, :] < nas[k:k + m, None], 200.0, 0.0
+    ).astype(np.float32)
+    valid = np.array([rng.integers(1, a + 1) for a in nas], np.int32)
+    return base, cand, caps, valid, nas
+
+
+def _assert_ragged_parity(base, cand, caps, valid, nas, **kw):
+    """Ragged single launch == per-group uniform launches == scalar oracle,
+    bit for bit (shifts AND excess values)."""
+    idx, val = map(
+        np.asarray,
+        circle_score_ragged_argmin(base, cand, caps, valid, nas, **kw),
+    )
+    # per-group launches: one uniform kernel call per distinct angle count,
+    # rows tightly sliced to their own width
+    for a in np.unique(nas):
+        sel = nas == a
+        g_idx, g_val = map(
+            np.asarray,
+            circle_score_argmin(
+                base[sel][:, :a], cand[sel][:, :a], caps[sel], valid[sel]
+            ),
+        )
+        np.testing.assert_array_equal(idx[sel], g_idx)
+        np.testing.assert_array_equal(val[sel], g_val)
+    # scalar oracle: per-row full matrix + np.argmin over admissible shifts
+    r_idx, r_val = circle_score_argmin_ref(base, cand, caps, valid, nas)
+    np.testing.assert_array_equal(idx, r_idx)
+    np.testing.assert_array_equal(val, r_val)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ragged_mixed_angle_parity_seeded(seed):
+    rng = np.random.default_rng(500 + seed)
+    nas = rng.choice(RAGGED_ANGLE_COUNTS, 9)
+    _assert_ragged_parity(*_ragged_rows(rng, nas))
+
+
+def test_ragged_single_row_batch():
+    """L = 1 (one link problem in the whole launch) for each angle count."""
+    for a in RAGGED_ANGLE_COUNTS:
+        rng = np.random.default_rng(a)
+        _assert_ragged_parity(
+            *_ragged_rows(rng, [a], zero_cap_frac=0.0, infeasible_frac=0.0)
+        )
+
+
+def test_ragged_all_rows_padded():
+    """Every row narrower than the launch width (``pad_to`` forces the
+    width no row reaches): the masking invariants alone must keep the
+    results bit-identical to the tightly-padded launches."""
+    rng = np.random.default_rng(7)
+    nas = np.array([512, 512, 640, 640, 512], np.int32)
+    base, cand, caps, valid, nas = _ragged_rows(rng, nas)
+    _assert_ragged_parity(base, cand, caps, valid, nas, pad_to=1024)
+    # and wider than any lane requirement, mid-block
+    _assert_ragged_parity(base, cand, caps, valid, nas, pad_to=1920)
+
+
+def test_ragged_ties_and_zero_capacity():
+    """Zero capacity + integer demands: the float32 sums are exact, so all
+    admissible shifts of a row tie *exactly* — the tournament must resolve
+    every row of the mixed batch to shift 0 (np.argmin first-index)."""
+    rng = np.random.default_rng(11)
+    nas = np.array([512, 640, 1024, 640], np.int32)
+    l, w = len(nas), int(nas.max())
+    base = np.zeros((l, w), np.float32)
+    cand = np.zeros((l, w), np.float32)
+    for i, a in enumerate(nas):
+        base[i, :a] = rng.integers(0, 40, a)
+        cand[i, :a] = rng.integers(0, 40, a)
+    caps = np.zeros(l, np.float32)
+    valid = nas.copy()  # all shifts admissible
+    idx, val = map(
+        np.asarray, circle_score_ragged_argmin(base, cand, caps, valid, nas)
+    )
+    assert np.all(idx == 0)
+    np.testing.assert_array_equal(
+        val,
+        np.array([
+            (base[i, :a] + cand[i, :a]).sum(dtype=np.float64)
+            for i, a in enumerate(nas)
+        ]).astype(np.float32),
+    )
+    _assert_ragged_parity(base, cand, caps, valid, nas)
+
+
+def test_ragged_segmin_matches_host_scan():
+    """Segments spanning rows of different angle counts: the device accept
+    scan must replay the host fold over each row's own-width matrix."""
+    rng = np.random.default_rng(21)
+    nas = np.array([512, 640, 1024, 512, 640, 1024, 512, 640], np.int32)
+    base, cand, caps, valid, nas = _ragged_rows(rng, nas)
+    seg_sizes = [3, 1, 4]
+    seg_ids = np.repeat(np.arange(3), seg_sizes).astype(np.int32)
+    init = np.array([np.inf, 0.0, 90000.0], np.float64)
+    acc, row, shift, best = map(
+        np.asarray,
+        circle_score_ragged_segmin(base, cand, caps, valid, nas, seg_ids, init),
+    )
+    # host fold over per-row own-width matrices
+    h_best = [float(b) for b in init]
+    h_row, h_shift, h_acc = [0] * 3, [0] * 3, [False] * 3
+    for r in range(len(nas)):
+        a = int(nas[r])
+        mat = np.asarray(
+            circle_score(base[r : r + 1, :a], cand[r : r + 1, :a], caps[r])
+        )[0]
+        s = int(np.argmin(mat[: valid[r]]))
+        sid = int(seg_ids[r])
+        if float(mat[s]) < h_best[sid] - ACCEPT_SLACK:
+            h_best[sid] = float(mat[s])
+            h_row[sid], h_shift[sid], h_acc[sid] = r, s, True
+    np.testing.assert_array_equal(acc, h_acc)
+    np.testing.assert_array_equal(best, h_best)
+    for s in range(3):
+        if acc[s]:
+            assert row[s] == h_row[s] and shift[s] == h_shift[s]
+    assert not acc[1]  # zero incumbent is unbeatable
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end ragged: one launch per step through find_rotations_batched
+# ---------------------------------------------------------------------- #
+def _mixed_angle_link_problems(rng, wraps=(7, 11, 13), per=2, k=2):
+    """Link problems whose unified circles land on different angle counts:
+    a slow job of period 100·w forces ``num_angles`` to the next multiple
+    of w above the base grid, so each w yields its own angle count."""
+    out = []
+    for wi, w in enumerate(wraps):
+        for i in range(per):
+            pats = [
+                CommPattern(
+                    100.0 * w,
+                    (Phase(float(rng.uniform(0, 50.0 * w)), 30.0 * w, 40.0),),
+                    name=f"w{w}s{i}",
+                )
+            ]
+            for j in range(k - 1):
+                pats.append(
+                    CommPattern(
+                        100.0,
+                        (Phase(float(rng.uniform(0, 60.0)), 35.0, 30.0),),
+                        name=f"w{w}f{i}{j}",
+                    )
+                )
+            out.append((pats, float(rng.choice((25.0, 50.0)))))
+    return out
+
+
+def test_grid_ragged_one_launch_bit_identical():
+    """Mixed-angle grid problems: ragged=True must solve the whole epoch in
+    ONE launch (launches == batched_calls == 1) with results bit-identical
+    to the per-group launches (ragged=False) and the scalar search."""
+    rng = np.random.default_rng(60)
+    problems = _mixed_angle_link_problems(rng)
+    deg = 0.5
+    scalar = [find_rotations(p, c, precision_deg=deg) for p, c in problems]
+    angle_counts = {s.circle.num_angles for s in scalar}
+    assert len(angle_counts) >= 2  # the mix actually happened
+
+    st_r, st_g = BatchStats(), BatchStats()
+    ragged = find_rotations_batched(
+        problems, precision_deg=deg, stats=st_r, ragged=True
+    )
+    grouped = find_rotations_batched(
+        problems, precision_deg=deg, stats=st_g, ragged=False
+    )
+    for s, r, g in zip(scalar, ragged, grouped):
+        assert r.shifts_steps == s.shifts_steps == g.shifts_steps
+        assert r.score == s.score == g.score
+        assert r.shifts_ms == s.shifts_ms == g.shifts_ms
+    assert st_r.launches == st_r.batched_calls == 1
+    assert st_r.ragged_rows == st_r.grid_rows > 0
+    assert 0.0 <= st_r.pad_fraction < 1.0
+    assert st_g.launches == len(angle_counts) > st_r.launches
+    assert st_g.ragged_rows == 0
+    # bytes_matrix accounts real row widths on both paths
+    assert st_r.bytes_matrix == st_g.bytes_matrix
+
+
+def test_descent_ragged_accepted_sequences_match_grouped():
+    """Mixed-angle k=4 descents: the ragged per-step launch must walk the
+    exact accepted-shift sequence of the per-group launches, with one
+    launch per (trial, sweep, job) step."""
+    from repro.core.compat import _DescentState
+
+    rng = np.random.default_rng(61)
+    problems = _mixed_angle_link_problems(rng, wraps=(7, 11), per=1, k=4)
+
+    def record(ragged):
+        accepted = []
+        orig = _DescentState.apply_shift
+
+        def recording(self, j, base, s_new):
+            accepted.append((self.index, j, int(s_new)))
+            return orig(self, j, base, s_new)
+
+        stats = BatchStats()
+        try:
+            _DescentState.apply_shift = recording
+            res = find_rotations_batched(
+                problems, precision_deg=0.5, stats=stats, ragged=ragged
+            )
+        finally:
+            _DescentState.apply_shift = orig
+        return accepted, res, stats
+
+    acc_r, res_r, st_r = record(True)
+    acc_g, res_g, st_g = record(False)
+    assert acc_r == acc_g and len(acc_r) > 0
+    for r, g in zip(res_r, res_g):
+        assert r.shifts_steps == g.shifts_steps and r.score == g.score
+    assert st_r.descent_problems == 2
+    assert st_r.launches == st_r.batched_calls  # one launch per step
+    assert st_r.ragged_rows == st_r.descent_rows
+    assert st_g.launches > st_r.launches  # grouped pays per angle count
+
+
+def test_ragged_chunk_boundaries(monkeypatch):
+    """A tiny GRID_CHUNK_ROWS splits the mixed-angle batch mid-problem: one
+    launch per chunk, incumbents carried across, results unchanged."""
+    from repro.core import compat
+
+    rng = np.random.default_rng(62)
+    problems = _mixed_angle_link_problems(rng, wraps=(7, 13), per=2, k=3)
+    deg = 5.0  # k=3 grids at 5°: multi-row product grids, still mixed A
+    scalar = [
+        find_rotations(p, c, precision_deg=deg, backend="pallas")
+        for p, c in problems
+    ]
+    monkeypatch.setattr(compat, "GRID_CHUNK_ROWS", 3)
+    stats = BatchStats()
+    batched = find_rotations_batched(
+        problems, precision_deg=deg, backend="pallas", stats=stats, ragged=True
+    )
+    for s, b in zip(scalar, batched):
+        assert b.shifts_steps == s.shifts_steps and b.score == s.score
+    assert stats.launches == stats.batched_calls > 1
+    assert stats.ragged_rows == stats.grid_rows
+
+
+# ---------------------------------------------------------------------- #
 # end-to-end: device-reduced search == scalar search
 # ---------------------------------------------------------------------- #
 def _link_problems(rng, n, k):
@@ -288,6 +554,29 @@ if HAVE_HYPOTHESIS:
         _assert_parity(*_random_rows(
             rng, l, a, zero_cap_frac=zero_frac, infeasible_frac=inf_frac
         ))
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.data())
+    def test_ragged_mixed_angle_parity_property(data):
+        """One ragged launch over rows mixing angle counts {512, 640, 1024}
+        — any mix, any admissible-shift bounds, zero-capacity and
+        infeasible rows included — must match the per-group launches and
+        the scalar oracle bit for bit (all-same-width and single-row
+        batches are drawn too)."""
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        l = data.draw(st.sampled_from((1, 3, 6, 9)))
+        nas = np.array(
+            [data.draw(st.sampled_from(RAGGED_ANGLE_COUNTS)) for _ in range(l)],
+            np.int32,
+        )
+        zero_frac = data.draw(st.sampled_from((0.0, 0.5)))
+        inf_frac = data.draw(st.sampled_from((0.0, 0.5)))
+        pad_to = data.draw(st.sampled_from((None, 1024, 1664)))
+        base, cand, caps, valid, nas = _ragged_rows(
+            rng, nas, zero_cap_frac=zero_frac, infeasible_frac=inf_frac
+        )
+        _assert_ragged_parity(base, cand, caps, valid, nas, pad_to=pad_to)
 
     @settings(max_examples=20, deadline=None)
     @given(st.data())
