@@ -6,18 +6,16 @@ import statistics
 import time
 from typing import Callable
 
-from repro.cluster import ClusterSimulator
+from repro.cluster import ClusterSimulator, nearest_rank
 from repro.engine.scenarios import default_scheduler_factories
 
 # the paper's scheduler line-up, shared with the scenario registry
 SCHEDULERS: dict[str, Callable] = default_scheduler_factories()
 
-
-def pct(xs, q):
-    if not xs:
-        return float("nan")
-    ys = sorted(xs)
-    return ys[min(len(ys) - 1, int(q / 100.0 * len(ys)))]
+# ONE percentile definition repo-wide: the benchmarks report the same
+# nearest-rank statistic Metrics does (the seed had a subtly different
+# floor-indexed copy here)
+pct = nearest_rank
 
 
 def run_trace(topo, jobs, sched, *, epoch_ms=300_000.0, jitter=0.005,
@@ -127,6 +125,34 @@ def mixed_angle_problems(wraps=(7, 11, 13, 17, 19, 23), links_per=4,
             )
             out.append(([slow, fast], capacity))
     return out
+
+
+def fluid_advance_case(racks, tenants=2):
+    """A contended fluid-sim state from the ``rack-scaling-{racks}``
+    scenario: ``tenants`` copies of its trace population, all present at
+    t=0 with effectively infinite durations (the bench window never drains
+    the cluster), placed on wrap-around consecutive GPU ranges so ring
+    edges pile onto shared host links and rack uplinks — the
+    allocator-bound multi-tenant regime the vectorized engine targets."""
+    from repro.cluster.job import JobState
+    from repro.engine.scenarios import get_scenario
+
+    spec = get_scenario(f"rack-scaling-{racks}")
+    topo = spec.topology()
+    jobs = []
+    for t in range(tenants):
+        pop = spec.trace(topo)
+        for j in pop:
+            j.job_id = f"t{t}-{j.job_id}"
+        jobs.extend(pop)
+    cursor, total = 0, topo.num_gpus
+    for j in jobs:
+        j.arrival_ms = 0.0
+        j.duration_iters = 10**9
+        j.placement = tuple((cursor + k) % total for k in range(j.num_workers))
+        cursor = (cursor + j.num_workers) % total
+        j.state = JobState.RUNNING
+    return topo, jobs
 
 
 def sched_epoch_state(scenario_name="hetero-16rack", max_jobs=10):

@@ -24,6 +24,13 @@ appended as markdown (CI passes ``$GITHUB_STEP_SUMMARY`` so the table
 lands in the job summary).  New rows (present only in the current run)
 are reported but never fail the gate.
 
+``--history [PATH]`` additionally appends the run's rows to a JSONL
+trend file (default ``benchmarks/baselines/bench_history.jsonl``, an
+artifact the CI bench job uploads next to ``BENCH.json``) and renders a
+per-row trend column — the last 5 runs' wall times, oldest→newest — so
+the perf *trajectory* across PRs is visible, not just the one-baseline
+diff.
+
 When a regression is intentional (e.g. a bench was redesigned or a
 slower-but-correct fix landed), the builder refreshes the baseline with
 ``--update-baseline`` and commits the result.
@@ -48,7 +55,11 @@ DEFAULT_CURRENT = "BENCH.json"
 DEFAULT_BASELINE = os.path.join(
     os.path.dirname(__file__), "baselines", "bench_baseline.json"
 )
+DEFAULT_HISTORY = os.path.join(
+    os.path.dirname(__file__), "baselines", "bench_history.jsonl"
+)
 DEFAULT_THRESHOLD = 0.20
+TREND_RUNS = 5
 
 
 def load_rows(path: str) -> tuple[dict[str, dict], dict]:
@@ -63,6 +74,73 @@ def fmt_us(v) -> str:
 
 def fmt_speedup(v) -> str:
     return f"{v:.2f}x" if isinstance(v, (int, float)) else "—"
+
+
+def fmt_compact(v) -> str:
+    """Compact microseconds for the trend column (123 / 12.3k / 3.5M)."""
+    if not isinstance(v, (int, float)):
+        return "?"
+    if v >= 1e6:
+        return f"{v / 1e6:.1f}M"
+    if v >= 1e3:
+        return f"{v / 1e3:.1f}k"
+    return f"{v:.0f}"
+
+
+# ---------------------------------------------------------------------- #
+# trend history (JSONL, one line per bench run)
+# ---------------------------------------------------------------------- #
+def append_history(path: str, current: dict[str, dict], cur_doc: dict) -> None:
+    """Append the current run's rows as one JSONL line."""
+    entry = {
+        "wall_s": cur_doc.get("wall_s"),
+        "rows": {
+            name: {"us": r.get("us_per_call"), "speedup": r.get("speedup")}
+            for name, r in current.items()
+        },
+    }
+    if "failed" in cur_doc:
+        entry["failed"] = cur_doc["failed"]
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as f:
+        json.dump(entry, f)
+        f.write("\n")
+
+
+def load_history(path: str, limit: int = TREND_RUNS) -> list[dict]:
+    """Last ``limit`` well-formed runs from the JSONL trend file."""
+    if not os.path.exists(path):
+        return []
+    runs: list[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                doc = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # a torn write must not break the gate
+            if isinstance(doc, dict) and isinstance(doc.get("rows"), dict):
+                runs.append(doc)
+    return runs[-limit:]
+
+
+def render_trends(history: list[dict]) -> dict[str, str]:
+    """Per-row ``a→b→c`` wall-time trail over the last runs (oldest first)."""
+    names: list[str] = []
+    for run in history:
+        for name in run["rows"]:
+            if name not in names:
+                names.append(name)
+    return {
+        name: "→".join(
+            fmt_compact(run["rows"][name].get("us"))
+            for run in history
+            if name in run["rows"]
+        )
+        for name in names
+    }
 
 
 def compare(
@@ -108,7 +186,8 @@ def compare(
     return table, failures
 
 
-def render_markdown(table, failures, threshold, wall_note) -> str:
+def render_markdown(table, failures, threshold, wall_note, trends=None) -> str:
+    trend_col = trends is not None
     lines = [
         "## Bench regression gate",
         "",
@@ -116,14 +195,17 @@ def render_markdown(table, failures, threshold, wall_note) -> str:
         f"speedup assertions must not drop below 1.0x. {wall_note}",
         "",
         "| bench row | baseline us | current us | Δ wall | baseline speedup "
-        "| current speedup | status |",
-        "|---|---:|---:|---:|---:|---:|---|",
+        "| current speedup |"
+        + (f" trend (last {TREND_RUNS}) |" if trend_col else "")
+        + " status |",
+        "|---|---:|---:|---:|---:|---:|" + ("---|" if trend_col else "") + "---|",
     ]
     for name, b_us, c_us, delta, b_sp, c_sp, status in table:
         mark = {"ok": "✅", "new": "🆕"}.get(status, "❌")
+        trend = f" {trends.get(name, '—')} |" if trend_col else ""
         lines.append(
             f"| `{name}` | {fmt_us(b_us)} | {fmt_us(c_us)} | {delta} "
-            f"| {fmt_speedup(b_sp)} | {fmt_speedup(c_sp)} | {mark} {status} |"
+            f"| {fmt_speedup(b_sp)} | {fmt_speedup(c_sp)} |{trend} {mark} {status} |"
         )
     lines.append("")
     if failures:
@@ -153,6 +235,12 @@ def main() -> None:
     ap.add_argument("--summary", default=None, metavar="PATH",
                     help="append the markdown delta table to PATH "
                          "(CI: $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--history", nargs="?", const=DEFAULT_HISTORY,
+                    default=None, metavar="PATH",
+                    help="append this run's rows to a JSONL trend file and "
+                         "render a per-row trend column (last "
+                         f"{TREND_RUNS} runs). Bare --history uses "
+                         "benchmarks/baselines/bench_history.jsonl")
     ap.add_argument("--update-baseline", action="store_true",
                     help="replace the baseline with the current run "
                          "(intentional perf change) and exit")
@@ -181,11 +269,15 @@ def main() -> None:
     if "failed" in cur_doc:
         failures.insert(0, f"current bench run failed its own gate: "
                            f"{cur_doc['failed']}")
+    trends = None
+    if args.history:
+        append_history(args.history, current, cur_doc)
+        trends = render_trends(load_history(args.history))
     wall_note = (
         f"Total wall: baseline {base_doc.get('wall_s', '?')}s, "
         f"current {cur_doc.get('wall_s', '?')}s."
     )
-    md = render_markdown(table, failures, args.threshold, wall_note)
+    md = render_markdown(table, failures, args.threshold, wall_note, trends)
     print(md)
     if args.summary:
         with open(args.summary, "a") as f:

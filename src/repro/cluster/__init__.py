@@ -3,9 +3,15 @@
 from .ideal import ideal_metrics
 from .job import Job, JobState
 from .network import FluidNetworkSim, Segment, segments_from_pattern
-from .simulator import ClusterSimulator, Metrics
-from .topology import Link, Topology
-from .traces import dynamic_trace, poisson_trace, snapshot_trace
+from .simulator import ClusterSimulator, Metrics, nearest_rank
+from .topology import Link, LinkIncidence, Topology
+from .traces import (
+    ARRIVAL_PATTERNS,
+    arrival_trace,
+    dynamic_trace,
+    poisson_trace,
+    snapshot_trace,
+)
 
 __all__ = [
     "Job",
@@ -15,10 +21,14 @@ __all__ = [
     "segments_from_pattern",
     "ClusterSimulator",
     "Metrics",
+    "nearest_rank",
     "Link",
+    "LinkIncidence",
     "Topology",
     "poisson_trace",
     "dynamic_trace",
     "snapshot_trace",
+    "arrival_trace",
+    "ARRIVAL_PATTERNS",
     "ideal_metrics",
 ]

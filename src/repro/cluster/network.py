@@ -20,6 +20,22 @@ ECN marking model: whenever aggregate *demand* on a link exceeds capacity,
 marks accrue at ``ecn_marks_per_gbit`` × excess-bits, attributed to the
 jobs on the link in proportion to their demand — the macroscopic behaviour
 of DCQCN/WRED marking in the paper's testbed (§5.1).
+
+Two engines share these semantics bit for bit:
+
+  - the **scalar oracle** (``vectorized=False``): the original pure-Python
+    dict-of-dicts progressive-filling loop, re-run at every event — kept
+    as the reference the vectorized engine is equivalence-tested against;
+  - the **vectorized engine** (``vectorized=True``, the default): job and
+    link state lives in numpy arrays keyed by the job×link incidence the
+    topology precomputes at ``configure`` (never per event); the max-min
+    allocation + ECN marking are solved with vectorized water-filling once
+    per *distinct comm-competing set* and cached (segment transitions of
+    compute-only jobs hit the cache), and ``advance`` steps every job's
+    delay/remaining/marks with batched array updates.  Every float is
+    produced by the same IEEE operation in the same order as the scalar
+    loop, so rates, event sequences and ``Metrics.summary()`` are
+    *identical* — not merely close (tests/test_fluid_vectorized.py).
 """
 
 from __future__ import annotations
@@ -28,11 +44,18 @@ import math
 import random
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.cluster.job import Job, JobState
-from repro.cluster.topology import Link, Topology
+from repro.cluster.topology import Link, LinkIncidence, Topology
 from repro.core.circle import CommPattern
 
 __all__ = ["Segment", "segments_from_pattern", "FluidNetworkSim"]
+
+# Distinct comm-competing sets cached between two ``configure`` calls are
+# bounded in practice (jobs cycle through few segments); this cap only
+# guards pathological drift from unbounded memory growth.
+_ALLOC_CACHE_MAX = 4096
 
 _EPS = 1e-9
 
@@ -124,6 +147,7 @@ class FluidNetworkSim:
         migration_pause_ms: float = 1000.0,
         drift_tolerance: float = 0.05,
         congested_efficiency: float = 0.88,
+        vectorized: bool = True,
         seed: int = 0,
     ) -> None:
         # DCQCN under congestion does not achieve the full link rate: the
@@ -139,6 +163,22 @@ class FluidNetworkSim:
         self._rng = random.Random(seed)
         self.now_ms: float = 0.0
         self._execs: dict[str, _JobExec] = {}
+        self.vectorized = vectorized
+        # telemetry: how many allocations were actually *solved* (cache
+        # misses) on the vectorized path — the invalidation tests pin that
+        # compute-only segment churn does not grow this
+        self.alloc_solves: int = 0
+        # array-resident engine state, rebuilt by _build_arrays on configure
+        self._slots: list[_JobExec] = []
+        self._inc: LinkIncidence | None = None
+        self._alloc_cache: dict[bytes, tuple[np.ndarray, np.ndarray]] = {}
+        self._rem = np.zeros(0)
+        self._dly = np.zeros(0)
+        self._mk = np.zeros(0)
+        self._cap_now = np.zeros(0)
+        self._segi = np.zeros(0, dtype=np.int32)
+        self._is_comm = np.zeros(0, dtype=bool)
+        self._alive = np.zeros(0, dtype=bool)
 
     # -------------------------------------------------------------- #
     def configure(self, jobs: list[Job]) -> None:
@@ -210,6 +250,8 @@ class FluidNetworkSim:
                 job.start_ms = self.now_ms
             new[job.job_id] = ex
         self._execs = new
+        if self.vectorized:
+            self._build_arrays()
 
     # -------------------------------------------------------------- #
     def _comm_jobs(self) -> dict[str, _JobExec]:
@@ -225,7 +267,34 @@ class FluidNetworkSim:
 
     def _allocate(self) -> dict[str, float]:
         """Max-min-fair rates (Gbps) for jobs currently in a comm segment,
-        respecting per-segment demand caps (progressive filling)."""
+        respecting per-segment demand caps (progressive filling).
+
+        Dispatches to the cached vectorized solve or the scalar oracle;
+        both return the same dict, bit for bit."""
+        if self.vectorized:
+            comm_mask = self._comm_mask(self._cutoff_mask())
+            rates, _, _ = self._cached_solve(comm_mask)
+            return {
+                self._slots[i].job.job_id: float(rates[i])
+                for i in np.nonzero(comm_mask)[0]
+            }
+        return self._allocate_scalar()
+
+    def _mark_rates(self) -> dict[str, float]:
+        """ECN marks per ms for each job (demand-over-capacity model)."""
+        if self.vectorized:
+            comm_mask = self._comm_mask(self._cutoff_mask())
+            _, marks, _ = self._cached_solve(comm_mask)
+            return {
+                self._slots[i].job.job_id: float(marks[i])
+                for i in np.nonzero(comm_mask)[0]
+            }
+        return self._mark_rates_scalar()
+
+    # ---------------------- scalar oracle ------------------------- #
+    def _allocate_scalar(self) -> dict[str, float]:
+        """The original per-event progressive-filling loop (the oracle the
+        vectorized water-filling is equivalence-tested against)."""
         comm = self._comm_jobs()
         rates = {jid: 0.0 for jid in comm}
         if not comm:
@@ -270,7 +339,7 @@ class FluidNetworkSim:
             unfrozen -= newly_frozen
         return rates
 
-    def _mark_rates(self) -> dict[str, float]:
+    def _mark_rates_scalar(self) -> dict[str, float]:
         """ECN marks per ms for each job (demand-over-capacity model)."""
         comm = self._comm_jobs()
         demand: dict[str, float] = {}
@@ -292,6 +361,210 @@ class FluidNetworkSim:
                 marks[jid] += excess * share * 1e-3 * self.ecn_marks_per_gbit
         return marks
 
+    # ---------------------- vectorized engine --------------------- #
+    def _build_arrays(self) -> None:
+        """Rebuild the array-resident execution state after ``configure``.
+
+        The job×link incidence comes precomputed from the topology (global
+        link ids, cached ring walks); everything else is a dense per-slot
+        vector.  Slots follow ``_execs`` insertion order — the same order
+        every scalar dict iterates — which is what lets the vectorized
+        reductions reproduce the oracle's float accumulation exactly.
+        """
+        self._slots = list(self._execs.values())
+        n = len(self._slots)
+        self._inc = self.topo.incidence(
+            [ex.job.placement for ex in self._slots]
+        )
+        self._rem = np.array([ex.remaining for ex in self._slots], dtype=np.float64)
+        self._dly = np.array([ex.delay_ms for ex in self._slots], dtype=np.float64)
+        self._mk = np.array([ex.marks for ex in self._slots], dtype=np.float64)
+        self._cap_now = np.zeros(n, dtype=np.float64)
+        self._segi = np.zeros(n, dtype=np.int32)
+        self._is_comm = np.zeros(n, dtype=bool)
+        self._alive = np.ones(n, dtype=bool)
+        # flat job-major incidence: slot i's link columns occupy
+        # cols_flat[offsets[i]:offsets[i+1]] — selecting a comm subset and
+        # accumulating per-link demand are then pure array ops
+        self._col_counts = np.array(
+            [r.shape[0] for r in self._inc.rows], dtype=np.int64
+        )
+        self._col_offsets = np.concatenate(
+            ([0], np.cumsum(self._col_counts))
+        )
+        self._cols_flat = (
+            np.concatenate([r.astype(np.int64) for r in self._inc.rows])
+            if n and self._col_counts.sum()
+            else np.zeros(0, dtype=np.int64)
+        )
+        for i, ex in enumerate(self._slots):
+            self._sync_seg(i, ex)
+        self._alloc_cache.clear()
+
+    def _sync_seg(self, i: int, ex: _JobExec) -> None:
+        """Refresh slot ``i``'s segment-derived columns (on transition)."""
+        seg = ex.segments[ex.seg_idx]
+        self._segi[i] = ex.seg_idx
+        self._is_comm[i] = seg.kind == "comm" and bool(ex.links)
+        self._cap_now[i] = seg.gbps
+
+    def _sync_execs(self) -> None:
+        """Write the array state back into the exec objects so callers
+        between ``advance`` calls (configure, tests, probes) see current
+        values."""
+        for i in np.nonzero(self._alive)[0]:
+            ex = self._slots[i]
+            ex.remaining = float(self._rem[i])
+            ex.delay_ms = float(self._dly[i])
+            ex.marks = float(self._mk[i])
+
+    def _cutoff_mask(self) -> np.ndarray:
+        return np.fromiter(
+            (ex.job.state is JobState.CUTOFF for ex in self._slots),
+            dtype=bool, count=len(self._slots),
+        )
+
+    def _comm_mask(self, cutoff: np.ndarray) -> np.ndarray:
+        """Array form of :meth:`_comm_jobs`'s membership rule."""
+        return self._alive & self._is_comm & (self._dly <= _EPS) & ~cutoff
+
+    def _cached_solve(
+        self, comm_mask: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(rates, mark rates, rate>0 mask) for the comm-competing set.
+
+        Keyed on (membership, per-member segment): the allocation is a
+        pure function of *which jobs communicate with which demand cap*,
+        so anything else — compute-only jobs advancing through their own
+        segments, delays draining, time passing — hits the cache and the
+        per-event cost collapses to one dict lookup.
+        """
+        key = comm_mask.tobytes() + self._segi[comm_mask].tobytes()
+        hit = self._alloc_cache.get(key)
+        if hit is None:
+            if len(self._alloc_cache) >= _ALLOC_CACHE_MAX:
+                self._alloc_cache.clear()
+            rates, marks = self._solve_alloc(comm_mask)
+            hit = (rates, marks, rates > _EPS)
+            self._alloc_cache[key] = hit
+            self.alloc_solves += 1
+        return hit
+
+    def _solve_alloc(self, comm_mask: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized water-filling + ECN marking over (jobs, links) arrays.
+
+        Produces exactly the scalar oracle's floats: per-link demand
+        accumulates through ``np.bincount`` over the job-major flat
+        incidence (sequential in input order == the scalar dicts'
+        insertion order), every filling round performs the same
+        divisions/additions the scalar loop does as whole-array
+        operations, and per-membership mark contributions on congested
+        links are summed per job in the oracle's demand-dict order (a
+        (job, first-seen-rank) lexsort when any job has ≥ 3 congested
+        links; ≤ 2-term sums are commutative) — so even multi-link float
+        accumulations agree bit for bit.
+        """
+        n = len(self._slots)
+        rates = np.zeros(n, dtype=np.float64)
+        marks = np.zeros(n, dtype=np.float64)
+        idx = np.nonzero(comm_mask)[0]
+        k = idx.size
+        if k == 0:
+            return rates, marks
+        caps_j = self._cap_now[idx]
+        # flat (job-major) view of the comm subset's incidence
+        counts = self._col_counts[idx]
+        cols_sub = self._cols_flat[np.repeat(comm_mask, self._col_counts)]
+        job_rep = np.repeat(np.arange(k), counts)
+        caps_rep = np.repeat(caps_j, counts)
+        nl = self._inc.num_links
+        cap_l = self._inc.capacities
+        # np.bincount accumulates its weights sequentially in input (job-
+        # major) order — the scalar dicts' per-link insertion order — so
+        # demand is the oracle's float sum bit for bit
+        demand = np.bincount(cols_sub, weights=caps_rep, minlength=nl)
+        # progressive filling: one vector op per filling round (links with
+        # no comm users keep demand 0 < capacity, so they never bound inc,
+        # never saturate and never mark — the global link axis is free).
+        # Every unfrozen job has received every increment so far, so all
+        # unfrozen rates equal ONE scalar accumulator ``r_cur`` (the same
+        # float-add sequence the oracle applies per job), the cap-slack min
+        # is (smallest unfrozen cap) − r_cur via a sorted-cap pointer, and
+        # jobs freeze at caps_j − r_cur ≤ ε exactly like the oracle's
+        # per-job test — the per-job array work drops out of the loop.
+        eff = np.where(demand > cap_l + _EPS, self.congested_efficiency, 1.0)
+        remaining = cap_l * eff
+        r = np.zeros(k, dtype=np.float64)
+        unfrozen = np.ones(k, dtype=bool)
+        n_unfrozen = k
+        r_cur = 0.0
+        cap_order = np.argsort(caps_j, kind="stable").tolist()
+        caps_list = caps_j.tolist()
+        ptr = 0
+        # live user counts per link, maintained incrementally as jobs freeze
+        # (exact integers — identical to recounting every round)
+        live = np.bincount(cols_sub, minlength=nl)
+        has = live > 0
+        linkbuf = np.empty(nl, dtype=np.float64)
+        inf = math.inf
+        while n_unfrozen:
+            linkbuf.fill(inf)
+            np.divide(remaining, live, out=linkbuf, where=has)
+            inc = float(linkbuf.min()) if nl else inf
+            while ptr < k and not unfrozen[cap_order[ptr]]:
+                ptr += 1
+            if ptr < k:
+                inc = min(inc, caps_list[cap_order[ptr]] - r_cur)
+            if inc == inf or inc < 0:
+                break
+            r_cur += inc
+            remaining -= inc * live
+            newly = np.zeros(k, dtype=bool)
+            any_newly = False
+            while ptr < k and caps_list[cap_order[ptr]] - r_cur <= _EPS:
+                j = cap_order[ptr]
+                if unfrozen[j]:
+                    newly[j] = True
+                    any_newly = True
+                ptr += 1
+            sat = remaining <= _EPS
+            if sat.any():
+                sat_jobs = np.zeros(k, dtype=bool)
+                sat_jobs[job_rep[sat[cols_sub]]] = True
+                newly |= unfrozen & sat_jobs
+                any_newly = any_newly or bool(newly.any())
+            if not any_newly:
+                break
+            r[newly] = r_cur
+            unfrozen &= ~newly
+            n_unfrozen = int(np.count_nonzero(unfrozen))
+            live -= np.bincount(cols_sub[newly[job_rep]], minlength=nl)
+            has = live > 0
+        r[unfrozen] = r_cur
+        rates[idx] = r
+        # ECN marking: per-membership contributions on congested links,
+        # accumulated per job in the oracle's order — jobs with ≤ 2
+        # congested links sum commutatively (any order is exact), ≥ 3
+        # require the subset's first-seen link order (the oracle iterates
+        # its demand dict), restored by a (job, first-seen-rank) lexsort
+        exc = demand - cap_l
+        cong_flat = exc[cols_sub] > 0
+        if cong_flat.any():
+            jm = job_rep[cong_flat]
+            lm = cols_sub[cong_flat]
+            cm = caps_rep[cong_flat]
+            if np.bincount(jm, minlength=k).max() > 2:
+                uniq, first_idx = np.unique(cols_sub, return_index=True)
+                rank = np.zeros(nl, dtype=np.int64)
+                rank[uniq[np.argsort(first_idx, kind="stable")]] = np.arange(
+                    uniq.size
+                )
+                order = np.lexsort((rank[lm], jm))
+                jm, lm, cm = jm[order], lm[order], cm[order]
+            contrib = exc[lm] * (cm / demand[lm]) * 1e-3 * self.ecn_marks_per_gbit
+            marks[idx] = np.bincount(jm, weights=contrib, minlength=k)
+        return rates, marks
+
     # -------------------------------------------------------------- #
     def advance(self, until_ms: float, *, max_events: int = 2_000_000) -> list[Job]:
         """Advance the fluid simulation to ``until_ms`` (exact events).
@@ -300,6 +573,92 @@ class FluidNetworkSim:
         the cluster simulator can react to the departure immediately); the
         finished jobs are returned with ``finish_ms`` / ``state`` set.
         """
+        if self.vectorized:
+            return self._advance_vectorized(until_ms, max_events=max_events)
+        return self._advance_scalar(until_ms, max_events=max_events)
+
+    def _advance_vectorized(
+        self, until_ms: float, *, max_events: int
+    ) -> list[Job]:
+        """Batched event stepping over the cached rates.
+
+        Per event: one cache lookup for (rates, mark rates), one batched
+        min for the next event time, and whole-array updates for
+        delay/remaining/marks — no per-job Python in the hot loop.  Segment
+        completions (the rare part) drop back to the shared scalar
+        ``_complete_segment`` in slot order, so jitter draws and the
+        alignment agent behave exactly like the oracle.
+        """
+        finished: list[Job] = []
+        events = 0
+        # job states only change outside advance (scheduler epochs, tests),
+        # and a finish breaks the loop — the active view is loop-invariant
+        act = self._alive & ~self._cutoff_mask()
+        divbuf = np.empty(len(self._slots), dtype=np.float64)
+        divbuf.fill(np.inf)
+        try:
+            while self.now_ms < until_ms - _EPS and self._execs:
+                events += 1
+                if events > max_events:
+                    raise RuntimeError("fluid sim exceeded max_events")
+                not_delayed = self._dly <= _EPS
+                comm = act & self._is_comm & not_delayed
+                rates, markr, pos = self._cached_solve(comm)
+                delayed = act & ~not_delayed
+                compute_like = act & not_delayed & ~self._is_comm
+                dt = until_ms - self.now_ms
+                dt = min(dt, float(np.where(delayed, self._dly, np.inf).min()))
+                dt = min(
+                    dt, float(np.where(compute_like, self._rem, np.inf).min())
+                )
+                # pos ⊆ comm: the cached solve's comm set IS this event's
+                # (same key), so rate>_EPS slots are exactly the comm slots
+                # that bound dt
+                divbuf.fill(np.inf)
+                np.divide(self._rem, rates, out=divbuf, where=pos)
+                tmin = float(divbuf.min())
+                if tmin < np.inf:
+                    dt = min(dt, tmin * 1e3)
+                dt = max(dt, 1e-6)
+                self.now_ms += dt
+                # progress everyone by dt (rates constant over the interval)
+                np.subtract(self._dly, dt, out=self._dly, where=delayed)
+                np.maximum(self._dly, 0.0, out=self._dly, where=delayed)
+                np.subtract(self._rem, dt, out=self._rem, where=compute_like)
+                drained = rates * dt
+                drained *= 1e-3
+                np.subtract(self._rem, drained, out=self._rem, where=comm)
+                np.add(self._mk, markr * dt, out=self._mk, where=comm)
+                prog = act & not_delayed
+                done = prog & (self._rem <= _EPS)
+                if done.any():
+                    for i in np.nonzero(done)[0]:
+                        ex = self._slots[i]
+                        ex.remaining = float(self._rem[i])
+                        ex.delay_ms = float(self._dly[i])
+                        ex.marks = float(self._mk[i])
+                        self._complete_segment(ex)
+                        self._rem[i] = ex.remaining
+                        self._dly[i] = ex.delay_ms
+                        self._mk[i] = ex.marks
+                        self._sync_seg(i, ex)
+                        if ex.job.remaining_iters() == 0:
+                            ex.job.finish_ms = self.now_ms
+                            ex.job.state = JobState.DONE
+                            del self._execs[ex.job.job_id]
+                            self._alive[i] = False
+                            finished.append(ex.job)
+                if finished:
+                    break
+        finally:
+            self._sync_execs()
+        return finished
+
+    def _advance_scalar(
+        self, until_ms: float, *, max_events: int
+    ) -> list[Job]:
+        """The original per-event Python loop (oracle for the vectorized
+        engine's event stepping)."""
         finished: list[Job] = []
         events = 0
         while self.now_ms < until_ms - _EPS and self._execs:
@@ -400,7 +759,3 @@ class FluidNetworkSim:
             ex.remaining = seg.duration_ms * max(0.1, jitter)
         else:
             ex.remaining = seg.gbits
-
-    # -------------------------------------------------------------- #
-    def finished_jobs(self) -> list[Job]:
-        return [ex.job for ex in self._execs.values() if ex.job.remaining_iters() == 0]

@@ -17,7 +17,22 @@ from repro.cluster.network import FluidNetworkSim
 from repro.cluster.topology import Topology
 from repro.sched.base import ClusterState, Decision, Scheduler
 
-__all__ = ["Metrics", "ClusterSimulator"]
+__all__ = ["nearest_rank", "Metrics", "ClusterSimulator"]
+
+
+def nearest_rank(xs, q: float) -> float:
+    """Nearest-rank percentile: smallest value with ≥ q% of samples ≤ it.
+
+    The ONE percentile definition shared by every metric in the repo
+    (``Metrics`` and the benchmark drivers) — ``ceil(q/100·n)``-th order
+    statistic, clamped to the sample range; NaN on an empty sample.
+    """
+    xs = list(xs)
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(math.ceil(q / 100.0 * len(ys))) - 1))
+    return ys[i]
 
 
 @dataclass
@@ -33,13 +48,7 @@ class Metrics:
             out.extend(j.iter_times_ms)
         return out
 
-    @staticmethod
-    def _pct(xs: list[float], q: float) -> float:
-        if not xs:
-            return float("nan")
-        ys = sorted(xs)
-        i = min(len(ys) - 1, max(0, int(math.ceil(q / 100.0 * len(ys))) - 1))
-        return ys[i]
+    _pct = staticmethod(nearest_rank)  # back-compat alias
 
     @property
     def avg_iter_ms(self) -> float:
@@ -120,6 +129,7 @@ class ClusterSimulator:
         compute_jitter: float = 0.0,
         migration_pause_ms: float = 1000.0,
         congested_efficiency: float = 0.88,
+        vectorized: bool = True,
         seed: int = 0,
     ) -> None:
         self.topo = topology
@@ -130,6 +140,7 @@ class ClusterSimulator:
             compute_jitter=compute_jitter,
             migration_pause_ms=migration_pause_ms,
             congested_efficiency=congested_efficiency,
+            vectorized=vectorized,
             seed=seed,
         )
         self.decisions: list[tuple[float, Decision]] = []

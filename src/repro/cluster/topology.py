@@ -27,7 +27,9 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
-__all__ = ["Link", "Topology"]
+import numpy as np
+
+__all__ = ["Link", "LinkIncidence", "Topology"]
 
 
 @dataclass(frozen=True)
@@ -39,6 +41,31 @@ class Link:
 
     def __repr__(self) -> str:  # keep affinity-graph vertex labels short
         return self.name
+
+
+@dataclass(frozen=True)
+class LinkIncidence:
+    """Array-resident job×link incidence of one running set.
+
+    Built once per :meth:`Topology.incidence` call (i.e. once per
+    ``FluidNetworkSim.configure``, never per event): ``rows[j]`` holds job
+    ``j``'s traversed links as global link-id columns (in ``job_links``
+    order), ``capacities`` is the topology's global per-link capacity
+    vector, and ``matrix`` materializes the dense boolean incidence for
+    whole-matrix consumers (tests, invariant probes).
+    """
+
+    rows: tuple[np.ndarray, ...]   # per job: int32 global link-id columns
+    capacities: np.ndarray         # (num_links,) float64, topology-global
+    num_links: int
+
+    @property
+    def matrix(self) -> np.ndarray:
+        """(jobs, num_links) boolean incidence matrix."""
+        m = np.zeros((len(self.rows), self.num_links), dtype=bool)
+        for j, cols in enumerate(self.rows):
+            m[j, cols] = True
+        return m
 
 
 def _stable_hash(*parts: object) -> int:
@@ -62,6 +89,18 @@ class Topology:
     rack_nic_gbps: tuple[float, ...] | None = None
 
     links: dict[str, Link] = field(default_factory=dict, repr=False)
+    # precomputed array-side link indexing (built in __post_init__):
+    # stable link-name → id table + the global capacity vector, so the
+    # fluid engine's incidence representation is pure id arithmetic.
+    link_ids: dict[str, int] = field(
+        default_factory=dict, repr=False, compare=False
+    )
+    link_capacities: np.ndarray = field(
+        default=None, repr=False, compare=False
+    )
+    _job_links_cache: dict = field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     def __post_init__(self) -> None:
         # discrete NIC-rate uplinks (as in the paper's fabric): a rack's
@@ -86,6 +125,10 @@ class Topology:
             for sp in range(self.num_spines):
                 name = f"up:r{r}-sp{sp}"
                 self.links[name] = Link(name, nic)
+        self.link_ids = {name: i for i, name in enumerate(self.links)}
+        self.link_capacities = np.array(
+            [l.capacity_gbps for l in self.links.values()], dtype=np.float64
+        )
 
     def rack_nic(self, rack: int) -> float:
         """NIC rate of one rack (uniform unless ``rack_nic_gbps`` is set)."""
@@ -145,16 +188,41 @@ class Topology:
 
         Data/hybrid-parallel jobs synchronize with ring collectives over
         their workers ordered by GPU id (NCCL ring order); the job's
-        traffic covers every link on every ring edge's path.
+        traffic covers every link on every ring edge's path.  Results are
+        cached per worker set — placements repeat across scheduling epochs
+        and the ring walk re-hashes every ECMP uplink choice.
         """
-        ws = sorted(set(gpus))
-        if len(ws) < 2:
-            return []
-        out: dict[str, Link] = {}
-        for a, b in zip(ws, ws[1:] + ws[:1]):
-            for l in self.path(a, b):
-                out[l.name] = l
-        return list(out.values())
+        ws = tuple(sorted(set(gpus)))
+        cached = self._job_links_cache.get(ws)
+        if cached is None:
+            out: dict[str, Link] = {}
+            if len(ws) >= 2:
+                for a, b in zip(ws, ws[1:] + ws[:1]):
+                    for l in self.path(a, b):
+                        out[l.name] = l
+            cached = self._job_links_cache[ws] = list(out.values())
+        return list(cached)
+
+    def job_link_ids(self, gpus: Sequence[int]) -> np.ndarray:
+        """Global link-id columns of :meth:`job_links` (same order)."""
+        return np.array(
+            [self.link_ids[l.name] for l in self.job_links(gpus)],
+            dtype=np.int32,
+        )
+
+    def incidence(self, placements: Sequence[Sequence[int]]) -> LinkIncidence:
+        """Job×link incidence of a running set, as id arrays.
+
+        The fluid engine rebuilds this once per ``configure`` (placement
+        change), never per event: between scheduling decisions the
+        incidence — and therefore everything the allocator derives from it
+        — is a pure function of which jobs currently communicate.
+        """
+        return LinkIncidence(
+            rows=tuple(self.job_link_ids(p) for p in placements),
+            capacities=self.link_capacities,
+            num_links=len(self.links),
+        )
 
     def shared_links(
         self, placements: dict[object, Sequence[int]]

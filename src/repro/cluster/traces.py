@@ -1,10 +1,15 @@
-"""Workload traces (paper §5.1): Poisson, dynamic, snapshot.
+"""Workload traces (paper §5.1): Poisson, dynamic, snapshot, arrival sweeps.
 
 - *Poisson trace*: job arrivals with exponential inter-arrival times, rate
   calibrated so the average fraction of busy GPUs equals ``load``.
 - *Dynamic trace*: a base set of jobs present in the cluster plus a burst
   of new arrivals (the paper triggers DLRM + ResNet50 arrivals).
 - *Snapshot trace*: all jobs present at t = 0 (Table 2 experiments).
+- *Arrival trace family*: the same job population under parameterized
+  arrival processes — homogeneous Poisson, clustered bursts, and a
+  diurnally-modulated (non-homogeneous) Poisson — the "varied online
+  arrival patterns" axis the online-scheduling literature evaluates
+  against (Bao et al.).
 
 All models have equal occurrence probability, training duration is sampled
 uniformly in [200, 1000] iterations and the initial worker request in
@@ -13,6 +18,7 @@ uniformly in [200, 1000] iterations and the initial worker request in
 
 from __future__ import annotations
 
+import math
 import random
 from typing import Sequence
 
@@ -20,7 +26,13 @@ from repro.cluster.job import Job
 from repro.cluster.topology import Topology
 from repro.profiles.models import PROFILES, get_profile
 
-__all__ = ["poisson_trace", "dynamic_trace", "snapshot_trace"]
+__all__ = [
+    "poisson_trace",
+    "dynamic_trace",
+    "snapshot_trace",
+    "arrival_trace",
+    "ARRIVAL_PATTERNS",
+]
 
 
 def _mk_job(
@@ -106,6 +118,77 @@ def dynamic_trace(
                 arrival_ms=burst_at_ms,
             )
         )
+    return jobs
+
+
+ARRIVAL_PATTERNS = ("poisson", "burst", "diurnal")
+
+
+def arrival_trace(
+    topo: Topology,
+    *,
+    pattern: str = "poisson",
+    load: float = 0.9,
+    num_jobs: int = 20,
+    models: Sequence[str] | None = None,
+    seed: int = 0,
+    min_iters: int = 200,
+    max_iters: int = 1000,
+    burst_size: int = 4,
+    diurnal_period_ms: float = 1_800_000.0,
+    diurnal_depth: float = 0.8,
+) -> list[Job]:
+    """One job population, three arrival processes (same mean load).
+
+    The job *population* (models, worker counts, durations) is drawn
+    exactly like :func:`poisson_trace`; only the arrival-time process
+    differs by ``pattern``:
+
+      - ``"poisson"``: homogeneous Poisson — exponential inter-arrival
+        gaps sized so E[busy GPUs] = ``load`` × cluster GPUs;
+      - ``"burst"``: clustered arrivals — jobs land in bursts of
+        ``burst_size`` (everyone in a burst arrives together, the gap
+        *between* bursts carries the whole burst's expected inter-arrival
+        mass), the worst case for placement fragmentation;
+      - ``"diurnal"``: non-homogeneous Poisson with intensity
+        ``λ(t) ∝ 1 + depth·sin(2πt/period)`` — each exponential gap is
+        stretched by the inverse instantaneous intensity, producing the
+        day/night load swing of production clusters.
+
+    All three draw the same RNG stream for the population, so a sweep
+    isolates the arrival process itself.
+    """
+    if pattern not in ARRIVAL_PATTERNS:
+        raise ValueError(
+            f"unknown arrival pattern {pattern!r}; one of {ARRIVAL_PATTERNS}"
+        )
+    rng = random.Random(seed)
+    models = models or list(PROFILES)
+    jobs: list[Job] = []
+    t = 0.0
+    pending_gap = 0.0
+    for i in range(num_jobs):
+        jobs.append(
+            _mk_job(rng, i, t, models, min_iters=min_iters, max_iters=max_iters)
+        )
+        j = jobs[-1]
+        service_ms = j.duration_iters * j.profile.iter_time_ms(j.num_workers)
+        inter = j.num_workers * service_ms / (load * topo.num_gpus)
+        gap = rng.expovariate(1.0) * inter
+        if pattern == "poisson":
+            t += gap
+        elif pattern == "burst":
+            # accumulate each member's gap; release it between bursts so
+            # the long-run arrival rate (and thus load) is unchanged
+            pending_gap += gap
+            if (i + 1) % burst_size == 0:
+                t += pending_gap
+                pending_gap = 0.0
+        else:  # diurnal
+            intensity = 1.0 + diurnal_depth * math.sin(
+                2.0 * math.pi * t / diurnal_period_ms
+            )
+            t += gap / max(intensity, 1e-3)
     return jobs
 
 

@@ -619,13 +619,16 @@ def _account_ragged(
 
     ``bytes_matrix`` grows by each row's *real* width (Σ A_l · 4), exactly
     what the grouped full-matrix path would account for the same rows, so
-    ragged-on/off byte comparisons stay apples-to-apples.
+    ragged-on/off byte comparisons stay apples-to-apples.  The padded
+    footprint uses the launch's *bucketed* width (the wrapper rounds the
+    packed width up to a power-of-two multiple of the lane size), so
+    ``pad_fraction`` reports what actually shipped.
     """
     l, w = shape
     try:
-        from repro.kernels.circle_score.kernel import LANE_MULTIPLE
+        from repro.kernels.circle_score.ops import bucket_width
 
-        wl = -(-w // LANE_MULTIPLE) * LANE_MULTIPLE
+        wl = bucket_width(w)
     except Exception:  # pragma: no cover - pallas unavailable
         wl = w
     stats.device_reduced += 1

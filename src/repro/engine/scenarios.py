@@ -22,9 +22,11 @@ from dataclasses import dataclass, field
 from typing import Callable, Mapping, Sequence
 
 from repro.cluster import (
+    ARRIVAL_PATTERNS,
     ClusterSimulator,
     Metrics,
     Topology,
+    arrival_trace,
     dynamic_trace,
     ideal_metrics,
     poisson_trace,
@@ -49,6 +51,8 @@ __all__ = [
     "get_scenario",
     "list_scenarios",
     "MULTITENANT_SWEEP",
+    "RACK_SCALING_SWEEP",
+    "ARRIVAL_SWEEP",
 ]
 
 SchedulerFactory = Callable[[], Scheduler]
@@ -109,6 +113,9 @@ class ScenarioSpec:
     compute_jitter: float = 0.005
     horizon_ms: float = 7_200_000.0
     sim_seed: int = 0
+    # array-resident fluid engine (False = the scalar oracle; results are
+    # identical — the equivalence harness pins it on every registered spec)
+    vectorized: bool = True
 
     # ------------------------------------------------------------- #
     def scheduler_names(self) -> tuple[str, ...]:
@@ -123,8 +130,13 @@ class ScenarioSpec:
                 f"available: {sorted(self.schedulers)}"
             ) from None
 
-    def build(self, scheduler: str | Scheduler) -> BuiltScenario:
-        """Instantiate topology, trace, scheduler and simulator."""
+    def build(
+        self, scheduler: str | Scheduler, *, vectorized: bool | None = None
+    ) -> BuiltScenario:
+        """Instantiate topology, trace, scheduler and simulator.
+
+        ``vectorized`` overrides the spec's fluid-engine choice (the
+        equivalence harness runs every spec both ways)."""
         topo = self.topology()
         sched = (
             scheduler
@@ -136,6 +148,7 @@ class ScenarioSpec:
             sched,
             epoch_ms=self.epoch_ms,
             compute_jitter=self.compute_jitter,
+            vectorized=self.vectorized if vectorized is None else vectorized,
             seed=self.sim_seed,
         )
         return BuiltScenario(
@@ -144,10 +157,14 @@ class ScenarioSpec:
         )
 
     def run(
-        self, scheduler: str | Scheduler, *, horizon_ms: float | None = None
+        self,
+        scheduler: str | Scheduler,
+        *,
+        horizon_ms: float | None = None,
+        vectorized: bool | None = None,
     ) -> ScenarioRun:
         """Build and simulate to the horizon; returns metrics + wall time."""
-        built = self.build(scheduler)
+        built = self.build(scheduler, vectorized=vectorized)
         t0 = time.time()
         metrics = built.simulator.run(
             built.jobs,
@@ -387,6 +404,91 @@ for _n in MULTITENANT_SWEEP:
         epoch_ms=240_000.0,
         horizon_ms=1_800_000.0,
         compute_jitter=0.0,
+    ))
+
+
+# Rack-count scaling sweep (ROADMAP "scaling curves" item): the same
+# heterogeneous-NIC recipe as hetero-16rack, instantiated at 16/32/64
+# racks with a Poisson multi-tenant load that grows with the fabric, so
+# network-placement effects can be measured as a function of scale
+# (Dally: schedulers only separate convincingly at larger fabrics).
+# These are what the vectorized fluid engine makes affordable — the
+# 64-rack entry is the benchmark/CI anchor for the ≥5x advance gate.
+RACK_SCALING_SWEEP: tuple[int, ...] = (16, 32, 64)
+
+
+def _rack_scaling_topology(racks: int, oversubscription: float = 2.0) -> Topology:
+    """``racks`` × 4 servers with alternating 50/100 Gbps NIC generations."""
+    return Topology(
+        num_racks=racks,
+        servers_per_rack=4,
+        nic_gbps=50.0,
+        rack_nic_gbps=tuple(100.0 if r % 2 else 50.0 for r in range(racks)),
+        oversubscription=oversubscription,
+    )
+
+
+def _rack_scaling_trace(topo: Topology, *, racks: int) -> list[Job]:
+    return poisson_trace(
+        topo,
+        load=1.4,
+        num_jobs=max(8, (7 * racks) // 8),   # ~0.9 jobs/rack, 14 at 16 racks
+        seed=11,
+        min_iters=120,
+        max_iters=280,
+        models=["vgg19", "wideresnet101", "dlrm", "gpt2", "resnet50", "bert"],
+    )
+
+
+for _racks in RACK_SCALING_SWEEP:
+    register_scenario(ScenarioSpec(
+        name=f"rack-scaling-{_racks}",
+        description=f"Rack-count scaling sweep: {_racks} racks x 4 servers, "
+                    "alternating 50/100 Gbps NIC generations, Poisson "
+                    "multi-tenant load growing with the fabric "
+                    "(~0.9 jobs/rack at 1.4x offered load)",
+        topology=functools.partial(_rack_scaling_topology, _racks),
+        trace=functools.partial(_rack_scaling_trace, racks=_racks),
+        epoch_ms=240_000.0,
+        horizon_ms=3_600_000.0,
+    ))
+
+
+# Arrival-pattern sweep (ROADMAP "arrival-pattern sweeps" item): the
+# paper's Poisson trace population under three arrival processes — the
+# online-scheduling axis of Bao et al.  Same RNG stream for the job
+# population, so the sweep isolates the arrival process itself.
+ARRIVAL_SWEEP: tuple[str, ...] = ARRIVAL_PATTERNS
+_ARRIVAL_DESCRIPTIONS = {
+    "poisson": "homogeneous Poisson arrivals (the paper's §5.1 process)",
+    "burst": "clustered arrivals: 4-job bursts with the inter-arrival mass "
+             "released between bursts (fragmentation stress)",
+    "diurnal": "non-homogeneous Poisson, 1 + 0.8·sin day/night intensity "
+               "swing over a 30-min period",
+}
+
+
+def _arrival_pattern_trace(topo: Topology, *, pattern: str) -> list[Job]:
+    return arrival_trace(
+        topo,
+        pattern=pattern,
+        load=0.95,
+        num_jobs=16,
+        seed=7,
+        min_iters=150,
+        max_iters=400,
+        models=["vgg16", "vgg19", "wideresnet101", "resnet50", "bert",
+                "roberta", "xlm", "gpt1", "gpt2", "gpt3", "dlrm"],
+    )
+
+
+for _pat in ARRIVAL_SWEEP:
+    register_scenario(ScenarioSpec(
+        name=f"arrival-{_pat}",
+        description=f"Arrival-pattern sweep on the paper trace: "
+                    f"{_ARRIVAL_DESCRIPTIONS[_pat]}",
+        topology=Topology.paper_testbed,
+        trace=functools.partial(_arrival_pattern_trace, pattern=_pat),
     ))
 
 

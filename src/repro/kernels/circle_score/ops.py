@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from .kernel import circle_score_argmin_pallas, circle_score_pallas
+from .kernel import LANE_MULTIPLE, circle_score_argmin_pallas, circle_score_pallas
 from .ref import circle_score_argmin_ref, circle_score_ref
 
 __all__ = [
@@ -48,8 +48,29 @@ __all__ = [
     "circle_score_ragged_segmin",
     "circle_score_ref",
     "circle_score_argmin_ref",
+    "bucket_width",
     "ACCEPT_SLACK",
 ]
+
+
+def bucket_width(w: int) -> int:
+    """Bucketed ragged launch width: the smallest power-of-two multiple of
+    :data:`LANE_MULTIPLE` ≥ ``w`` (128, 256, 512, 1024, …).
+
+    Ragged batches ship at their chunk's max angle count, and a long-tailed
+    mix of unified-circle sizes would otherwise present the jit cache with
+    one distinct lane width — hence one Mosaic recompile — per chunk.
+    Rounding the packed width up to a small fixed set of buckets caps the
+    compile count at O(log max_width) for any angle-count distribution;
+    the fold-sum padding invariance makes the wider launch bit-exact
+    (tests assert both the cache bound and the parity).
+    """
+    if w < 1:
+        raise ValueError(f"width must be positive, got {w}")
+    b = LANE_MULTIPLE
+    while b < w:
+        b *= 2
+    return b
 
 _ON_TPU = jax.default_backend() == "tpu"
 
@@ -101,8 +122,11 @@ def circle_score_ragged_argmin(
       capacity: scalar or (L,) per-row link capacities.
       valid: (L,) int32 admissible shifts per row (1 ≤ valid ≤ A_l).
       num_angles: (L,) int32 per-row real angle counts (1 ≤ A_l ≤ W).
-      pad_to: optionally force a wider launch width (bucketing / tests);
-        bit-exact by the fold-sum padding invariance.
+      pad_to: optionally force a wider launch width (tests); the actual
+        launch width is always rounded up to a :func:`bucket_width`
+        bucket — bit-exact by the fold-sum padding invariance — so
+        long-tailed angle-count mixes stop paying one jit recompile per
+        distinct packed width.
 
     Returns ``(best_shift, best_excess)`` per row, bit-identical to
     invoking :func:`circle_score_argmin` once per angle-count group on
@@ -121,11 +145,18 @@ def circle_score_ragged_argmin(
         # no admissible shift would come back as a fabricated perfect
         # (shift 0, excess 0) — reject it instead
         raise ValueError("valid shift counts must lie in [1, num_angles]")
+    # bucket the packed width host-side (zero-pad the angle axis) so the
+    # jit cache key only ever sees O(log max_width) distinct widths; rows
+    # are masked to num_angles in-kernel, so padding is provably inert
+    wb = bucket_width(max(w, pad_to or 0))
+    if wb != w:
+        base = np.pad(base, ((0, 0), (0, wb - w)))
+        cand = np.pad(cand, ((0, 0), (0, wb - w)))
     cap = jnp.asarray(capacity, jnp.float32)
     return circle_score_argmin_pallas(
         jnp.asarray(base), jnp.asarray(cand), cap,
         jnp.asarray(valid), jnp.asarray(na),
-        interpret=not _ON_TPU, pad_to=pad_to,
+        interpret=not _ON_TPU,
     )
 
 

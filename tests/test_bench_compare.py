@@ -1,0 +1,97 @@
+"""Unit tests for the cross-PR bench regression gate + trend history
+(`benchmarks/compare.py`): gate negative paths and the `--history` JSONL
+round-trip with its per-row trend rendering."""
+
+import json
+
+from benchmarks.compare import (
+    append_history,
+    compare,
+    fmt_compact,
+    load_history,
+    render_markdown,
+    render_trends,
+)
+
+
+def _row(us, speedup=None):
+    r = {"us_per_call": us}
+    if speedup is not None:
+        r["speedup"] = speedup
+    return r
+
+
+def test_compare_gate_negative_paths():
+    baseline = {
+        "a": _row(100.0, 2.0),
+        "b": _row(100.0),
+        "c": _row(100.0, 1.5),
+    }
+    current = {
+        "a": _row(100.0, 2.1),     # ok
+        "b": _row(200.0),          # +100% wall: SLOWER
+        # "c" missing entirely
+        "d": _row(50.0),           # new row: reported, never fails
+    }
+    table, failures = compare(current, baseline, threshold=0.20)
+    statuses = {name: status for name, *_, status in table}
+    assert statuses == {"a": "ok", "b": "SLOWER", "c": "MISSING", "d": "new"}
+    assert len(failures) == 2
+
+
+def test_compare_lost_speedup():
+    baseline = {"a": _row(100.0, 1.5)}
+    _, failures = compare({"a": _row(100.0, 0.9)}, baseline, 0.20)
+    assert any("lost its speedup" in f for f in failures)
+    _, failures = compare({"a": _row(100.0)}, baseline, 0.20)
+    assert any("lost its speedup" in f for f in failures)
+
+
+def test_history_roundtrip_and_trends(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    for i, us in enumerate((100.0, 110.0, 90.0)):
+        append_history(
+            path,
+            {"a": _row(us, 2.0), "b": _row(10.0 * (i + 1))},
+            {"wall_s": 1.0 + i},
+        )
+    runs = load_history(path)
+    assert len(runs) == 3
+    trends = render_trends(runs)
+    assert trends["a"] == "100→110→90"
+    assert trends["b"] == "10→20→30"
+    # only the last TREND_RUNS entries survive
+    for us in (1.0, 2.0, 3.0, 4.0):
+        append_history(path, {"a": _row(us)}, {"wall_s": 0.0})
+    assert len(load_history(path)) == 5
+
+
+def test_history_skips_torn_lines(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    append_history(path, {"a": _row(1.0)}, {"wall_s": 0.0})
+    with open(path, "a") as f:
+        f.write('{"rows": {"a"\n')           # torn write
+        f.write("not json at all\n")
+        f.write(json.dumps({"no_rows": 1}) + "\n")
+    append_history(path, {"a": _row(2.0)}, {"wall_s": 0.0})
+    runs = load_history(path)
+    assert [r["rows"]["a"]["us"] for r in runs] == [1.0, 2.0]
+
+
+def test_render_markdown_trend_column_is_optional():
+    table = [("a", 100.0, 100.0, "+0.0%", 2.0, 2.0, "ok")]
+    md_plain = render_markdown(table, [], 0.2, "wall.")
+    assert "trend" not in md_plain
+    md_trend = render_markdown(table, [], 0.2, "wall.", {"a": "100→100"})
+    assert "trend (last 5)" in md_trend
+    assert "100→100" in md_trend
+    # a row the history has never seen renders a placeholder, not a crash
+    md_missing = render_markdown(table, [], 0.2, "wall.", {})
+    assert "—" in md_missing
+
+
+def test_fmt_compact():
+    assert fmt_compact(950) == "950"
+    assert fmt_compact(12_340) == "12.3k"
+    assert fmt_compact(3_500_000) == "3.5M"
+    assert fmt_compact(None) == "?"

@@ -7,7 +7,9 @@ from repro.cluster import (
     ClusterSimulator,
     FluidNetworkSim,
     Topology,
+    arrival_trace,
     ideal_metrics,
+    nearest_rank,
     snapshot_trace,
 )
 from repro.cluster.network import segments_from_pattern
@@ -92,6 +94,38 @@ def test_cassini_timeshift_removes_contention():
 
 
 # ------------------------------------------------------------------ #
+# metrics helpers
+# ------------------------------------------------------------------ #
+def test_nearest_rank_percentile():
+    """The ONE shared percentile helper: nearest-rank (ceil) semantics."""
+    import math
+
+    assert math.isnan(nearest_rank([], 99))
+    assert nearest_rank([7.0], 50) == 7.0
+    assert nearest_rank([7.0], 99) == 7.0
+    xs = [10.0, 20.0, 30.0, 40.0]
+    assert nearest_rank(xs, 25) == 10.0    # ceil(0.25·4) = 1st
+    assert nearest_rank(xs, 26) == 20.0    # ceil(1.04) = 2nd
+    assert nearest_rank(xs, 50) == 20.0
+    assert nearest_rank(xs, 75) == 30.0
+    assert nearest_rank(xs, 100) == 40.0
+    assert nearest_rank(xs, 0) == 10.0     # clamped to the sample range
+    # order-free: input need not be sorted
+    assert nearest_rank([40.0, 10.0, 30.0, 20.0], 50) == 20.0
+    # Metrics and the benchmark drivers share this exact function
+    from benchmarks.common import pct
+    from repro.cluster.simulator import Metrics
+
+    assert pct is nearest_rank
+    assert Metrics._pct is nearest_rank
+
+
+def test_arrival_trace_rejects_unknown_pattern():
+    with pytest.raises(ValueError, match="unknown arrival pattern"):
+        arrival_trace(Topology.paper_testbed(), pattern="tidal")
+
+
+# ------------------------------------------------------------------ #
 # fluid-model invariants
 # ------------------------------------------------------------------ #
 def _contending_jobs(n, iters=30):
@@ -104,11 +138,12 @@ def _contending_jobs(n, iters=30):
     return t, jobs
 
 
-def test_fluid_allocation_never_exceeds_capacity():
+@pytest.mark.parametrize("vectorized", [False, True])
+def test_fluid_allocation_never_exceeds_capacity(vectorized):
     """Invariant: summed allocated rates on any link stay within capacity
     (the congested-efficiency factor only ever lowers the budget)."""
     t, jobs = _contending_jobs(3, iters=200)
-    sim = FluidNetworkSim(t)
+    sim = FluidNetworkSim(t, vectorized=vectorized)
     sim.configure(jobs)
     probes = 0
     while sim.now_ms < 30_000 and sim._execs:
@@ -124,12 +159,13 @@ def test_fluid_allocation_never_exceeds_capacity():
     assert probes > 0  # the probe actually saw contended comm segments
 
 
-def test_ecn_marks_monotone_in_added_contention():
+@pytest.mark.parametrize("vectorized", [False, True])
+def test_ecn_marks_monotone_in_added_contention(vectorized):
     """Invariant: adding a job to a contended link never reduces the marks
     the existing jobs accumulate."""
     def total_marks_job0(n):
         t, jobs = _contending_jobs(n)
-        sim = FluidNetworkSim(t)
+        sim = FluidNetworkSim(t, vectorized=vectorized)
         sim.configure(jobs)
         sim.advance(150_000)
         assert jobs[0].iters_done == 30
@@ -140,14 +176,15 @@ def test_ecn_marks_monotone_in_added_contention():
     assert three >= two
 
 
-def test_cutoff_job_stops_consuming_link_share():
+@pytest.mark.parametrize("vectorized", [False, True])
+def test_cutoff_job_stops_consuming_link_share(vectorized):
     """Invariant: a horizon-expired (CUTOFF) job releases its link share —
     the surviving job returns to solo-speed iterations and the cutoff job
     no longer appears in the allocation."""
     from repro.cluster.job import JobState
 
     t, jobs = _contending_jobs(2, iters=400)
-    sim = FluidNetworkSim(t)
+    sim = FluidNetworkSim(t, vectorized=vectorized)
     sim.configure(jobs)
     sim.advance(60_000)
     assert sum(jobs[1].iter_times_ms) / len(jobs[1].iter_times_ms) > (

@@ -231,7 +231,73 @@ def test_plan_flows_into_job_alignment():
 def test_builtin_scenarios_registered():
     names = set(list_scenarios())
     assert {"fig2-interleave", "poisson-paper", "dynamic-burst",
-            "modelpar-burst", "multigpu", "hetero-16rack"} <= names
+            "modelpar-burst", "multigpu", "hetero-16rack",
+            "rack-scaling-16", "rack-scaling-32", "rack-scaling-64",
+            "arrival-poisson", "arrival-burst", "arrival-diurnal"} <= names
+
+
+def test_rack_scaling_sweep_registered():
+    """Registry smoke test for the scaling sweep: 16/32/64-rack fabrics
+    with alternating NIC generations and a load that grows with the
+    fabric; the smallest entry actually simulates."""
+    from repro.engine.scenarios import RACK_SCALING_SWEEP
+
+    assert RACK_SCALING_SWEEP == (16, 32, 64)
+    jobs_by_racks = {}
+    for racks in RACK_SCALING_SWEEP:
+        spec = get_scenario(f"rack-scaling-{racks}")
+        topo = spec.topology()
+        assert topo.num_racks == racks and topo.servers_per_rack == 4
+        assert {l.capacity_gbps for l in topo.links.values()} == {50.0, 100.0}
+        assert topo.rack_nic(0) == 50.0 and topo.rack_nic(1) == 100.0
+        jobs_by_racks[racks] = spec.trace(topo)
+    # multi-tenant load grows with the fabric
+    assert (len(jobs_by_racks[16]) < len(jobs_by_racks[32])
+            < len(jobs_by_racks[64]))
+
+    run = get_scenario("rack-scaling-16").run("themis", horizon_ms=600_000.0)
+    assert run.metrics.iter_times(), "scaling scenario must actually simulate"
+
+
+@pytest.mark.slow
+def test_rack_scaling_64_smoke():
+    """The 64-rack entry builds and simulates end to end (capped horizon);
+    jobs make progress across the large fabric."""
+    run = get_scenario("rack-scaling-64").run("themis", horizon_ms=600_000.0)
+    assert len(run.metrics.jobs) == 56
+    assert sum(j.iters_done for j in run.metrics.jobs) > 1000
+
+
+def test_arrival_sweep_registered():
+    """The arrival-pattern variants share one job population and differ
+    only in arrival times; burst arrivals are clustered."""
+    from repro.engine.scenarios import ARRIVAL_SWEEP
+
+    assert ARRIVAL_SWEEP == ("poisson", "burst", "diurnal")
+    topo = Topology.paper_testbed()
+    traces = {
+        pat: get_scenario(f"arrival-{pat}").trace(topo) for pat in ARRIVAL_SWEEP
+    }
+    pops = {
+        pat: [(j.model, j.num_workers, j.duration_iters) for j in js]
+        for pat, js in traces.items()
+    }
+    assert pops["poisson"] == pops["burst"] == pops["diurnal"]
+    arrivals = {
+        pat: [j.arrival_ms for j in js] for pat, js in traces.items()
+    }
+    assert arrivals["poisson"] != arrivals["burst"]
+    assert arrivals["poisson"] != arrivals["diurnal"]
+    # bursts arrive in 4-job clusters (same instant within a burst)
+    burst = arrivals["burst"]
+    for i in range(0, len(burst) - 3, 4):
+        assert burst[i] == burst[i + 1] == burst[i + 2] == burst[i + 3]
+    # arrival times are sorted in every variant (the simulator requires it)
+    for t in arrivals.values():
+        assert t == sorted(t)
+
+    run = get_scenario("arrival-burst").run("themis", horizon_ms=420_000.0)
+    assert run.metrics.iter_times()
 
 
 def test_hetero_16rack_topology_and_cassini_beats_host():

@@ -1,0 +1,306 @@
+"""Vectorized fluid-engine equivalence harness.
+
+The array-resident engine (``vectorized=True``, the default) must be an
+*exact replay* of the scalar dict-of-dicts oracle — same rates, same event
+sequence, same ``Metrics.summary()`` — not an approximation.  These tests
+pin that contract:
+
+  - allocator parity on random job/link incidences (seeded always;
+    hypothesis-driven when available), compared exactly;
+  - end-to-end scenario equivalence: identical per-job iteration-time /
+    ECN traces and identical summaries, on cheap scenarios always and on
+    every registered scenario under the ``slow`` marker;
+  - the allocation-cache invalidation rule: segment transitions of
+    compute-only jobs must NOT trigger re-allocation;
+  - the fluid invariants (capacity, ECN monotonicity, CUTOFF release) on
+    a 64-rack fabric through the vectorized path.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.cluster import FluidNetworkSim, Topology, snapshot_trace
+from repro.cluster.job import Job, JobState
+from repro.engine.scenarios import _REGISTRY, get_scenario
+
+MODELS = ["vgg19", "wideresnet101", "dlrm", "gpt2", "resnet50", "bert"]
+
+
+# ------------------------------------------------------------------ #
+# topology incidence layer
+# ------------------------------------------------------------------ #
+def test_topology_incidence_arrays():
+    t = Topology.paper_testbed()
+    placements = [(0, 1, 6), (2, 8), (3,)]
+    inc = t.incidence(placements)
+    assert inc.num_links == len(t.links)
+    assert inc.capacities.shape == (len(t.links),)
+    # rows mirror job_links exactly (same links, same order)
+    for p, cols in zip(placements, inc.rows):
+        names = [l.name for l in t.job_links(p)]
+        assert [list(t.links)[c] for c in cols.tolist()] == names
+    # single-GPU job: no network links
+    assert inc.rows[2].size == 0
+    m = inc.matrix
+    assert m.shape == (3, len(t.links))
+    assert m.sum() == sum(r.size for r in inc.rows)
+
+
+def test_job_links_cache_returns_consistent_results():
+    t = Topology.paper_testbed()
+    a = t.job_links((0, 6, 1))
+    b = t.job_links((1, 0, 6))  # same worker set, different order
+    assert [l.name for l in a] == [l.name for l in b]
+    # cached lists are defensive copies
+    a.append(None)
+    assert None not in t.job_links((0, 1, 6))
+
+
+# ------------------------------------------------------------------ #
+# allocator parity on random incidences
+# ------------------------------------------------------------------ #
+def _random_state(seed: int):
+    """Random topology + contended running set, both engine flavours."""
+    rng = random.Random(seed)
+    topo_args = dict(
+        num_racks=rng.choice((2, 3, 4, 8)),
+        servers_per_rack=rng.choice((2, 4)),
+        nic_gbps=rng.choice((25.0, 50.0)),
+        oversubscription=rng.choice((1.0, 2.0, 4.0)),
+    )
+    n_jobs = rng.randint(2, 8)
+    specs = [
+        (rng.choice(MODELS), rng.randint(1, 4), None) for _ in range(n_jobs)
+    ]
+    jobs_pair = []
+    for _ in range(2):
+        topo = Topology(**topo_args)
+        jobs = snapshot_trace(
+            [(m, w, 1400 if m.startswith("vgg") else 8) for m, w, _ in specs],
+            iters=10_000,
+        )
+        r = random.Random(seed + 1)
+        for j in jobs:
+            j.placement = tuple(
+                r.sample(range(topo.num_gpus), j.num_workers)
+            )
+            j.state = JobState.RUNNING
+        jobs_pair.append((topo, jobs))
+    return jobs_pair
+
+
+def _assert_engine_parity(seed: int, windows=(50.0, 400.0, 1500.0)):
+    (topo_v, jobs_v), (topo_s, jobs_s) = _random_state(seed)
+    sim_v = FluidNetworkSim(topo_v, vectorized=True, seed=seed)
+    sim_s = FluidNetworkSim(topo_s, vectorized=False, seed=seed)
+    sim_v.configure(jobs_v)
+    sim_s.configure(jobs_s)
+    t = 0.0
+    for w in windows:
+        t += w
+        # exact dict parity at every probe point: same members, same floats
+        assert sim_v._allocate() == sim_s._allocate()
+        assert sim_v._mark_rates() == sim_s._mark_rates()
+        sim_v.advance(t)
+        sim_s.advance(t)
+        assert sim_v.now_ms == sim_s.now_ms
+    for jv, js in zip(jobs_v, jobs_s):
+        assert jv.iter_times_ms == js.iter_times_ms
+        assert jv.ecn_marks == js.ecn_marks
+        assert jv.iters_done == js.iters_done
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_allocator_parity_seeded(seed):
+    _assert_engine_parity(seed)
+
+
+def test_allocator_parity_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=100, max_value=100_000))
+    def run(seed):
+        _assert_engine_parity(seed, windows=(120.0, 900.0))
+
+    run()
+
+
+# ------------------------------------------------------------------ #
+# end-to-end scenario equivalence
+# ------------------------------------------------------------------ #
+def _assert_scenario_equivalent(name: str, scheduler: str, horizon_cap: float):
+    spec = get_scenario(name)
+    horizon = min(spec.horizon_ms, horizon_cap)
+    rv = spec.run(scheduler, horizon_ms=horizon, vectorized=True)
+    rs = spec.run(scheduler, horizon_ms=horizon, vectorized=False)
+    # identical event sequences: every job's recorded iteration history,
+    # marks, state and completion time match exactly
+    by_v = {j.job_id: j for j in rv.metrics.jobs}
+    by_s = {j.job_id: j for j in rs.metrics.jobs}
+    assert by_v.keys() == by_s.keys()
+    for jid, jv in by_v.items():
+        js = by_s[jid]
+        assert jv.iter_times_ms == js.iter_times_ms, jid
+        assert jv.ecn_marks == js.ecn_marks, jid
+        assert (jv.state, jv.finish_ms) == (js.state, js.finish_ms), jid
+    # identical Metrics.summary() — bit for bit, NaNs matching by position
+    sv, ss = rv.metrics.summary(), rs.metrics.summary()
+    assert sv.keys() == ss.keys()
+    for key in sv:
+        assert sv[key] == ss[key] or (
+            np.isnan(sv[key]) and np.isnan(ss[key])
+        ), key
+
+
+@pytest.mark.parametrize(
+    "name,scheduler",
+    [
+        ("fig2-interleave", "cassini"),
+        ("multitenant-2", "fair-share"),
+        ("arrival-burst", "themis"),
+    ],
+)
+def test_scenario_equivalence_fast(name, scheduler):
+    _assert_scenario_equivalent(name, scheduler, horizon_cap=600_000.0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(_REGISTRY))
+def test_scenario_equivalence_all_registered(name):
+    """Every registered scenario (first scheduler in its line-up) produces
+    identical metrics with the vectorized engine and the scalar oracle."""
+    spec = get_scenario(name)
+    _assert_scenario_equivalent(
+        name, spec.scheduler_names()[0], horizon_cap=600_000.0
+    )
+
+
+# ------------------------------------------------------------------ #
+# allocation cache invalidation
+# ------------------------------------------------------------------ #
+def test_compute_only_segment_churn_hits_alloc_cache():
+    """The comm-competing set keys the allocation cache: a linkless job
+    cycling through its compute segments must never force a re-solve."""
+    t = Topology.paper_testbed()
+    jobs = snapshot_trace(
+        [("vgg19", 2, 1400), ("vgg19", 2, 1400), ("bert", 1, 8)], iters=250
+    )
+    jobs[0].placement = (0, 6)
+    jobs[1].placement = (1, 7)   # same rack pair: contended uplink
+    jobs[2].placement = (2,)     # single worker: no network links
+    for j in jobs:
+        j.state = JobState.RUNNING
+    sim = FluidNetworkSim(t)
+    sim.configure(jobs)
+    sim.advance(120_000.0)
+    # the linkless job iterated plenty (many compute-segment events) …
+    assert jobs[2].iters_done > 100
+    # … yet the distinct comm sets are just the on/off combinations of the
+    # two comm jobs' segments: a handful of solves, not one per event
+    assert sim.alloc_solves <= 8
+
+
+def test_cutoff_flip_changes_comm_set_and_rates():
+    """CUTOFF membership is part of the cache key: flipping a job's state
+    must produce a fresh allocation where the survivor gets the link."""
+    t = Topology.paper_testbed()
+    jobs = snapshot_trace([("vgg19", 2, 1400)] * 2, iters=4000)
+    jobs[0].placement = (0, 6)
+    jobs[1].placement = (1, 7)
+    for j in jobs:
+        j.state = JobState.RUNNING
+    sim = FluidNetworkSim(t)
+    sim.configure(jobs)
+    sim.advance(30_000.0)
+    jobs[0].state = JobState.CUTOFF
+    sim.advance(60_000.0)
+    alloc = sim._allocate()
+    assert jobs[0].job_id not in alloc
+    post = jobs[1].iter_times_ms[-5:]
+    assert sum(post) / len(post) == pytest.approx(jobs[1].solo_iter_ms, rel=0.02)
+
+
+# ------------------------------------------------------------------ #
+# fluid invariants at rack scale (vectorized path)
+# ------------------------------------------------------------------ #
+def _contending_jobs_64rack(n_per_uplink=3, iters=40):
+    """Jobs chained across racks of a 64-rack hetero fabric so every other
+    uplink carries ``n_per_uplink`` tenants."""
+    topo = Topology(
+        num_racks=64,
+        servers_per_rack=4,
+        nic_gbps=50.0,
+        rack_nic_gbps=tuple(100.0 if r % 2 else 50.0 for r in range(64)),
+        oversubscription=4.0,  # one uplink per rack: guaranteed sharing
+    )
+    jobs = snapshot_trace(
+        [("vgg19", 4, 1400)] * (16 * n_per_uplink), iters=iters
+    )
+    for i, j in enumerate(jobs):
+        rack = (i // n_per_uplink) * 4   # every 4th rack pair
+        k = i % n_per_uplink
+        j.placement = (
+            4 * rack + k, 4 * rack + 3 - k if k < 2 else 4 * rack + 2,
+            4 * (rack + 1) + k, 4 * (rack + 1) + 3 - k if k < 2 else 4 * (rack + 1) + 2,
+        )
+        j.placement = tuple(dict.fromkeys(j.placement))  # de-dup, keep order
+        j.state = JobState.RUNNING
+    return topo, jobs
+
+
+def test_capacity_never_exceeded_vectorized_64rack():
+    topo, jobs = _contending_jobs_64rack()
+    sim = FluidNetworkSim(topo)
+    assert sim.vectorized
+    sim.configure(jobs)
+    probes = 0
+    while sim.now_ms < 8_000.0 and sim._execs:
+        rates = sim._allocate()
+        per_link: dict[str, float] = {}
+        for jid, ex in sim._execs.items():
+            for l in ex.links:
+                per_link[l.name] = per_link.get(l.name, 0.0) + rates.get(jid, 0.0)
+        for lname, total in per_link.items():
+            assert total <= topo.links[lname].capacity_gbps + 1e-6, lname
+        probes += sum(1 for r in rates.values() if r > 0)
+        sim.advance(sim.now_ms + 40.0)
+    assert probes > 0
+
+
+def test_ecn_monotone_vectorized_64rack():
+    def marks_job0(n):
+        topo, jobs = _contending_jobs_64rack(n_per_uplink=n, iters=25)
+        sim = FluidNetworkSim(topo)
+        sim.configure(jobs)
+        sim.advance(200_000.0)
+        assert jobs[0].iters_done == 25
+        return sum(jobs[0].ecn_marks)
+
+    two, three = marks_job0(2), marks_job0(3)
+    assert two > 0
+    assert three >= two
+
+
+def test_cutoff_releases_share_vectorized_64rack():
+    topo, jobs = _contending_jobs_64rack(n_per_uplink=2, iters=600)
+    sim = FluidNetworkSim(topo)
+    sim.configure(jobs)
+    sim.advance(30_000.0)
+    survivor = jobs[1]
+    assert sum(survivor.iter_times_ms) / len(survivor.iter_times_ms) > (
+        survivor.solo_iter_ms * 1.10
+    )
+    jobs[0].state = JobState.CUTOFF
+    recorded = len(survivor.iter_times_ms)
+    frozen_iters = jobs[0].iters_done
+    sim.advance(90_000.0)
+    assert jobs[0].job_id not in sim._allocate()
+    assert jobs[0].iters_done == frozen_iters
+    assert jobs[0].state is JobState.CUTOFF and jobs[0].finish_ms is None
+    post = survivor.iter_times_ms[recorded + 2:]
+    assert post, "survivor must keep iterating after the cutoff"
+    assert sum(post) / len(post) == pytest.approx(survivor.solo_iter_ms, rel=0.02)

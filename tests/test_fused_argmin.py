@@ -604,3 +604,71 @@ if HAVE_HYPOTHESIS:
         for s in range(num_segs):
             if acc[s]:
                 assert row[s] == h_row[s] and shift[s] == h_shift[s]
+
+
+# ---------------------------------------------------------------------- #
+# ragged launch-width bucketing (jit recompile bound)
+# ---------------------------------------------------------------------- #
+def test_bucket_width_values():
+    from repro.kernels.circle_score.ops import bucket_width
+
+    assert bucket_width(1) == LANE_MULTIPLE
+    assert bucket_width(128) == 128
+    assert bucket_width(129) == 256
+    assert bucket_width(512) == 512
+    assert bucket_width(513) == 1024
+    assert bucket_width(721) == 1024
+    assert bucket_width(1024) == 1024
+    assert bucket_width(1025) == 2048
+    with pytest.raises(ValueError, match="positive"):
+        bucket_width(0)
+
+
+def test_ragged_width_bucketing_bounds_recompiles():
+    """A long-tailed mix of packed widths inside one bucket must compile
+    the fused kernel at most once: the ragged wrapper rounds the launch
+    width up to a power-of-two multiple of 128 before the jit boundary,
+    so the cache key sees the bucket, not the raw chunk width."""
+    rng = np.random.default_rng(23)
+    widths = (513, 600, 648, 700, 777, 900, 1000, 1024)  # all bucket to 1024
+    l = 4
+    baseline = circle_score_argmin_pallas._cache_size()
+    results = []
+    for w in widths:
+        nas = np.full(l, w, np.int32)
+        base, cand, caps, valid, nas = _ragged_rows(
+            rng, nas, zero_cap_frac=0.0, infeasible_frac=0.0
+        )
+        results.append(
+            tuple(
+                map(np.ndarray.tolist, map(np.asarray, circle_score_ragged_argmin(
+                    base, cand, caps, valid, nas
+                )))
+            )
+        )
+    grown = circle_score_argmin_pallas._cache_size() - baseline
+    assert grown <= 1, (
+        f"8 distinct packed widths in one bucket grew the jit cache by "
+        f"{grown} entries (expected at most 1 — one compile per bucket)"
+    )
+    # and the bucketed launches stay correct: parity for the last width
+    nas = np.full(l, widths[-1], np.int32)
+    _assert_ragged_parity(
+        *_ragged_rows(rng, nas, zero_cap_frac=0.0, infeasible_frac=0.0)
+    )
+
+
+def test_ragged_width_bucketing_distinct_buckets_compile_separately():
+    """Widths in different buckets still get their own (correct) compile —
+    bucketing caps recompiles, it does not merge genuinely different
+    shapes."""
+    from repro.kernels.circle_score.ops import bucket_width
+
+    rng = np.random.default_rng(29)
+    for w in (200, 520, 1100):
+        nas = np.full(3, w, np.int32)
+        base, cand, caps, valid, nas = _ragged_rows(
+            rng, nas, zero_cap_frac=0.0, infeasible_frac=0.0
+        )
+        _assert_ragged_parity(base, cand, caps, valid, nas)
+        assert bucket_width(w) in (256, 1024, 2048)
