@@ -29,7 +29,10 @@ trend file (default ``benchmarks/baselines/bench_history.jsonl``, an
 artifact the CI bench job uploads next to ``BENCH.json``) and renders a
 per-row trend column — the last 5 runs' wall times, oldest→newest — so
 the perf *trajectory* across PRs is visible, not just the one-baseline
-diff.
+diff.  ``--trend-plot [PNG]`` renders the same history as sparkline
+small multiples (one mini-panel per bench row, default
+``benchmarks/artifacts/bench_trend.png``), which CI uploads next to the
+markdown report.
 
 When a regression is intentional (e.g. a bench was redesigned or a
 slower-but-correct fix landed), the builder refreshes the baseline with
@@ -58,8 +61,12 @@ DEFAULT_BASELINE = os.path.join(
 DEFAULT_HISTORY = os.path.join(
     os.path.dirname(__file__), "baselines", "bench_history.jsonl"
 )
+DEFAULT_TREND_PLOT = os.path.join(
+    os.path.dirname(__file__), "artifacts", "bench_trend.png"
+)
 DEFAULT_THRESHOLD = 0.20
 TREND_RUNS = 5
+TREND_PLOT_RUNS = 20
 
 
 def load_rows(path: str) -> tuple[dict[str, dict], dict]:
@@ -141,6 +148,85 @@ def render_trends(history: list[dict]) -> dict[str, str]:
         )
         for name in names
     }
+
+
+def render_trend_plot(history: list[dict], path: str) -> bool:
+    """Sparkline small multiples: one mini-panel per bench row, wall time
+    over the last runs (oldest→newest).
+
+    One single-hue series per panel — the panel title carries identity,
+    so no legend and no multi-line spaghetti; rows of wildly different
+    magnitude never share a y-axis.  Returns False (and leaves no file)
+    when matplotlib is unavailable or there is nothing to plot.
+    """
+    if not history:
+        return False
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("trend plot skipped: matplotlib not installed", file=sys.stderr)
+        return False
+
+    # chart tokens (validated reference palette)
+    surface, ink, ink2, muted = "#fcfcfb", "#0b0b0b", "#52514e", "#898781"
+    gridline, axisline, series = "#e1e0d9", "#c3c2b7", "#2a78d6"
+
+    names: list[str] = []
+    for run in history:
+        for name in run["rows"]:
+            if name not in names:
+                names.append(name)
+    ncols = 3
+    nrows = (len(names) + ncols - 1) // ncols
+    fig, axes = plt.subplots(
+        nrows, ncols, figsize=(3.4 * ncols, 1.7 * nrows), dpi=150,
+        squeeze=False,
+    )
+    fig.patch.set_facecolor(surface)
+    for i, name in enumerate(names):
+        ax = axes[i // ncols][i % ncols]
+        pts = [
+            (ri, run["rows"][name].get("us"))
+            for ri, run in enumerate(history)
+            if name in run["rows"]
+            and isinstance(run["rows"][name].get("us"), (int, float))
+        ]
+        xs, ys = [p[0] for p in pts], [p[1] for p in pts]
+        ax.set_facecolor(surface)
+        for side in ("top", "right", "left"):
+            ax.spines[side].set_visible(False)
+        ax.spines["bottom"].set_color(axisline)
+        ax.grid(axis="y", color=gridline, linewidth=0.6)
+        ax.set_axisbelow(True)
+        ax.set_yticks([])
+        ax.set_xticks([])
+        ax.set_title(name, fontsize=8, color=ink2, loc="left")
+        if xs:
+            ax.plot(xs, ys, color=series, linewidth=2, marker="o",
+                    markersize=4 if len(xs) > 1 else 6,
+                    markeredgecolor=surface, markeredgewidth=0.8)
+            ax.annotate(
+                f"{fmt_compact(ys[-1])}us", (xs[-1], ys[-1]),
+                xytext=(4, 0), textcoords="offset points", va="center",
+                fontsize=8, color=ink2,
+            )
+            pad = 0.15 * (max(ys) - min(ys) or max(ys) or 1.0)
+            ax.set_ylim(min(ys) - pad, max(ys) + pad)
+            ax.set_xlim(-0.5, len(history) - 0.5 + 0.9)  # room for the label
+    for i in range(len(names), nrows * ncols):
+        axes[i // ncols][i % ncols].axis("off")
+    fig.suptitle(
+        f"Bench wall-time trend — last {len(history)} runs, oldest→newest",
+        fontsize=10, color=ink, x=0.01, ha="left",
+    )
+    fig.tight_layout(rect=(0, 0, 1, 0.96))
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fig.savefig(path, facecolor=surface)
+    plt.close(fig)
+    return True
 
 
 def compare(
@@ -241,6 +327,13 @@ def main() -> None:
                          "render a per-row trend column (last "
                          f"{TREND_RUNS} runs). Bare --history uses "
                          "benchmarks/baselines/bench_history.jsonl")
+    ap.add_argument("--trend-plot", nargs="?", const=DEFAULT_TREND_PLOT,
+                    default=None, metavar="PNG",
+                    help="render the trend history as sparkline small "
+                         f"multiples (last {TREND_PLOT_RUNS} runs; needs "
+                         "matplotlib — skipped with a note otherwise). "
+                         "Bare --trend-plot writes "
+                         "benchmarks/artifacts/bench_trend.png")
     ap.add_argument("--update-baseline", action="store_true",
                     help="replace the baseline with the current run "
                          "(intentional perf change) and exit")
@@ -273,6 +366,12 @@ def main() -> None:
     if args.history:
         append_history(args.history, current, cur_doc)
         trends = render_trends(load_history(args.history))
+    if args.trend_plot:
+        history_path = args.history or DEFAULT_HISTORY
+        if render_trend_plot(
+            load_history(history_path, limit=TREND_PLOT_RUNS), args.trend_plot
+        ):
+            print(f"trend plot written to {args.trend_plot}", file=sys.stderr)
     wall_note = (
         f"Total wall: baseline {base_doc.get('wall_s', '?')}s, "
         f"current {cur_doc.get('wall_s', '?')}s."

@@ -33,6 +33,7 @@ ALL = [
     "kernels",
     "fluid_advance",
     "sched_epoch",
+    "serve",
     "roofline",
 ]
 
@@ -469,6 +470,150 @@ def _sched_epoch_bench():
     }
 
 
+def _serve_bench():
+    """Online serving rows: the latency SLO + delta-update gates.
+
+    ``serve_query/multitenant-8`` replays the multitenant-8 arrival trace
+    through :class:`SchedulerService`, stepping the stream watermark with
+    256 placement queries spread across the horizon and draining to the
+    end.  ``us_per_call`` is the full replay wall time; the SLO gate is on
+    the measured p99 *query service latency* against a fixed budget — two
+    orders of magnitude above the worst contended pump (which includes a
+    scheduling decision), so heterogeneous CI runners cannot trip it, but
+    an accidental O(replay) scan or rebuild-per-query regression will.
+    The replay must also reconfigure exclusively through the delta path
+    (zero rebuilds) and hit the prefetch-warmed link cache.
+
+    ``serve_delta_update/rack-scaling-64`` times one arrival + one
+    departure applied to the contended 112-job 64-rack fluid state via
+    the slot-delta primitives (``add_job``/``remove_job``) against the
+    same membership change done as full ``configure`` rebuilds.  Gates:
+    the delta path must be ≥ 3x faster, and it must *retain* the
+    water-filling allocation cache the rebuild path throws away.
+    """
+    from repro.cluster import FluidNetworkSim
+    from repro.engine.scenarios import get_scenario
+    from repro.serve import JobArrival, SchedulerService
+
+    from .common import fluid_advance_case, timed
+
+    # ---- serve_query: multitenant-8 arrival replay ------------------- #
+    SLO_P99_MS = 100.0
+    NUM_QUERIES = 256
+    spec = get_scenario("multitenant-8")
+
+    def replay():
+        topo = spec.topology()
+        svc = SchedulerService(
+            topo, spec.make_scheduler("cassini"), epoch_ms=spec.epoch_ms,
+            compute_jitter=spec.compute_jitter, vectorized=spec.vectorized,
+            seed=spec.sim_seed,
+        )
+        with svc:
+            for job in spec.arrival_stream(topo):
+                svc.submit(JobArrival(job))
+            for k in range(1, NUM_QUERIES + 1):
+                svc.query(at_ms=k * spec.horizon_ms / NUM_QUERIES)
+            svc.drain(spec.horizon_ms)
+            return svc, svc.telemetry()
+
+    (svc, tel), us_replay = timed(replay, repeat=1)
+    pct = svc.metrics.percentiles("QueryPlacement")
+    yield {
+        "name": "serve_query/multitenant-8",
+        "us_per_call": us_replay,
+        "derived": (
+            f"query p50={pct['p50']:.3f}ms p95={pct['p95']:.3f}ms "
+            f"p99={pct['p99']:.3f}ms (SLO p99<={SLO_P99_MS:g}ms, "
+            f"{NUM_QUERIES} queries); {tel['decisions']:.0f} decisions, "
+            f"configure_delta={tel.get('configure_delta', 0):.0f} "
+            f"rebuild={tel.get('configure_rebuild', 0):.0f}, "
+            f"prefetch_launched={tel.get('prefetch_launched', 0):.0f}, "
+            f"link_cache {tel.get('link_cache_hits', 0):.0f} hits / "
+            f"{tel.get('link_cache_misses', 0):.0f} misses"
+        ),
+    }
+    # gates after the yield: the measured row stays in the artifact
+    if pct["p99"] > SLO_P99_MS:
+        raise RuntimeError(
+            f"serve_query p99 latency SLO violated: {pct['p99']:.3f}ms > "
+            f"{SLO_P99_MS:g}ms budget (p50={pct['p50']:.3f}ms "
+            f"p95={pct['p95']:.3f}ms)"
+        )
+    if tel.get("configure_rebuild", 0) or (
+        tel.get("configure_delta", 0) != tel["decisions"]
+    ):
+        raise RuntimeError(
+            f"the multitenant-8 replay must reconfigure exclusively "
+            f"through the delta path: delta="
+            f"{tel.get('configure_delta', 0):.0f} "
+            f"rebuild={tel.get('configure_rebuild', 0):.0f} of "
+            f"{tel['decisions']:.0f} decisions"
+        )
+    if not tel.get("link_cache_hits", 0):
+        raise RuntimeError(
+            f"the served replay must hit the (prefetch-warmed) link "
+            f"cache, got {tel.get('link_cache_hits', 0):.0f} hits"
+        )
+
+    # ---- serve_delta_update: 64-rack add/remove vs rebuild ---------- #
+    GATE = 3.0
+    CYCLES = 8  # add/remove pairs per timed call (stabilizes the median)
+    topo, jobs = fluid_advance_case(64)
+    base, extra = jobs[:-1], jobs[-1]
+
+    delta_sim = FluidNetworkSim(topo, vectorized=True)
+    delta_sim.configure(base)
+    delta_sim.advance(200.0)  # populate the water-filling cache mid-flight
+    cache_before = len(delta_sim._alloc_cache)
+
+    def delta_cycle():
+        for _ in range(CYCLES):
+            delta_sim.add_job(extra)
+            delta_sim.remove_job(extra.job_id)
+
+    rebuild_sim = FluidNetworkSim(topo, vectorized=True)
+    rebuild_sim.configure(base)
+    rebuild_sim.advance(200.0)
+
+    def rebuild_cycle():
+        for _ in range(CYCLES):
+            rebuild_sim.configure(base + [extra])
+            rebuild_sim.configure(base)
+
+    delta_cycle()  # warm both paths
+    rebuild_cycle()
+    _, us_delta = timed(delta_cycle)
+    _, us_rebuild = timed(rebuild_cycle)
+    us_delta /= CYCLES
+    us_rebuild /= CYCLES
+    speedup = us_rebuild / us_delta
+    retained = len(delta_sim._alloc_cache)
+    yield {
+        "name": "serve_delta_update/rack-scaling-64",
+        "us_per_call": us_delta,
+        "speedup": speedup,
+        "derived": (
+            f"full_rebuild={us_rebuild:.0f}us speedup={speedup:.1f}x "
+            f"({len(base)} jobs, 64 racks; arrival+departure as slot "
+            f"deltas vs two configure() rebuilds; water-filling cache "
+            f"retained {retained}/{cache_before} entries vs "
+            f"{len(rebuild_sim._alloc_cache)} after rebuild)"
+        ),
+    }
+    if speedup < GATE:
+        raise RuntimeError(
+            f"delta update must be >={GATE:g}x over rebuild at 64 racks: "
+            f"{speedup:.2f}x (rebuild={us_rebuild:.0f}us "
+            f"delta={us_delta:.0f}us)"
+        )
+    if not cache_before or retained != cache_before:
+        raise RuntimeError(
+            f"delta ops must retain the allocation cache: "
+            f"{retained}/{cache_before} entries survived"
+        )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -514,6 +659,8 @@ def main() -> None:
                 rows = _fluid_advance_bench()
             elif name == "sched_epoch":
                 rows = _sched_epoch_bench()
+            elif name == "serve":
+                rows = _serve_bench()
             elif name == "roofline":
                 from . import roofline
 

@@ -1,0 +1,192 @@
+"""Rack-count scaling curves: the JCT / ECN-vs-fabric-size artifact.
+
+    PYTHONPATH=src python -m benchmarks.scaling_curves \
+        [--schedulers themis,th+cassini] [--horizon-ms 600000] \
+        [--out benchmarks/artifacts/scaling_curves.png]
+
+Sweeps the ``rack-scaling-{16,32,64}`` scenarios with the requested
+schedulers and renders a two-panel figure — average JCT and ECN marks per
+iteration against rack count.  JCT and ECN are different measures on
+different scales, so each gets its own panel over a shared rack-count
+axis (two panels, never a second y-axis on one).  The PNG and a JSON
+sidecar with the measured points land under ``benchmarks/artifacts/``
+(gitignored; the CI bench job uploads the directory as an artifact next
+to ``BENCH.json``).
+
+The default horizon matches the slow-marked rack-scaling smoke tests
+(600 s simulated), which keeps the full 3-point × 2-scheduler sweep
+around half a minute of wall time; raise ``--horizon-ms`` for a
+publication-grade run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(__file__), "artifacts", "scaling_curves.png"
+)
+DEFAULT_SCHEDULERS = "themis,th+cassini"
+DEFAULT_HORIZON_MS = 600_000.0
+
+# chart tokens (validated reference palette: categorical slots in fixed
+# order, hues assigned by position — a shorter scheduler list never
+# repaints the survivors; ink/grid stay in text tokens, never series hues)
+SERIES_HUES = (
+    "#2a78d6",  # blue
+    "#eb6834",  # orange
+    "#1baf7a",  # aqua
+    "#eda100",  # yellow
+    "#e87ba4",  # magenta
+    "#008300",  # green
+    "#4a3aa7",  # violet
+    "#e34948",  # red
+)
+SURFACE = "#fcfcfb"
+INK = "#0b0b0b"
+INK_SECONDARY = "#52514e"
+MUTED = "#898781"
+GRIDLINE = "#e1e0d9"
+AXISLINE = "#c3c2b7"
+
+
+def sweep(schedulers: list[str], horizon_ms: float) -> dict[str, list[dict]]:
+    """Run every rack-scaling scenario × scheduler; returns the curve
+    points (one list of dicts per scheduler, ordered by rack count)."""
+    from repro.engine.scenarios import RACK_SCALING_SWEEP, get_scenario
+
+    results: dict[str, list[dict]] = {name: [] for name in schedulers}
+    print("scenario,scheduler,avg_jct_ms,ecn_per_iter,jobs_finished,wall_s")
+    for racks in RACK_SCALING_SWEEP:
+        spec = get_scenario(f"rack-scaling-{racks}")
+        for name in schedulers:
+            run = spec.run(name, horizon_ms=horizon_ms)
+            s = run.metrics.summary()
+            point = {
+                "racks": racks,
+                "avg_jct_ms": s["avg_jct_ms"],
+                "ecn_per_iter": s["ecn_per_iter"],
+                "jobs_finished": s["jobs_finished"],
+                "wall_s": round(run.wall_s, 2),
+            }
+            results[name].append(point)
+            print(
+                f"rack-scaling-{racks},{name},{point['avg_jct_ms']:.0f},"
+                f"{point['ecn_per_iter']:.2f},{point['jobs_finished']:.0f},"
+                f"{point['wall_s']}",
+                flush=True,
+            )
+    return results
+
+
+def _style_axis(ax) -> None:
+    ax.set_facecolor(SURFACE)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    for side in ("bottom", "left"):
+        ax.spines[side].set_color(AXISLINE)
+        ax.spines[side].set_linewidth(0.8)
+    ax.grid(axis="y", color=GRIDLINE, linewidth=0.8)
+    ax.set_axisbelow(True)
+    ax.tick_params(colors=MUTED, labelcolor=INK_SECONDARY, labelsize=9)
+
+
+def render(results: dict[str, list[dict]], out_png: str,
+           horizon_ms: float) -> None:
+    """Two stacked panels (avg JCT, ECN/iter) over a shared rack axis."""
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, (ax_jct, ax_ecn) = plt.subplots(
+        2, 1, sharex=True, figsize=(7.0, 6.4), dpi=150
+    )
+    fig.patch.set_facecolor(SURFACE)
+    racks_axis = sorted({p["racks"] for ps in results.values() for p in ps})
+    line_ends: list[tuple[float, float, str]] = []  # (y_end, x_end, name)
+    for idx, (name, points) in enumerate(results.items()):
+        hue = SERIES_HUES[idx % len(SERIES_HUES)]
+        xs = [p["racks"] for p in points]
+        jct_min = [p["avg_jct_ms"] / 60_000.0 for p in points]
+        ecn = [p["ecn_per_iter"] for p in points]
+        for ax, ys in ((ax_jct, jct_min), (ax_ecn, ecn)):
+            ax.plot(xs, ys, color=hue, linewidth=2, marker="o",
+                    markersize=6, markeredgecolor=SURFACE,
+                    markeredgewidth=1.0, label=name)
+        line_ends.append((ecn[-1], xs[-1], name))
+    ax_jct.set_ylabel("avg JCT (min)", color=INK_SECONDARY, fontsize=10)
+    ax_ecn.set_ylabel("ECN marks / iteration", color=INK_SECONDARY,
+                      fontsize=10)
+    ax_ecn.set_xlabel("racks (4 servers each)", color=INK_SECONDARY,
+                      fontsize=10)
+    ax_ecn.set_xticks(racks_axis)
+    for ax in (ax_jct, ax_ecn):
+        _style_axis(ax)
+        ax.set_ylim(bottom=0.0)
+        # right headroom so the end-of-line labels stay inside the panel
+        span = racks_axis[-1] - racks_axis[0]
+        ax.set_xlim(racks_axis[0] - 0.04 * span,
+                    racks_axis[-1] + 0.22 * span)
+    # selective direct labels at the ECN line ends (identity never rests
+    # on color alone — the legend covers the JCT panel).  Endpoints can
+    # sit arbitrarily close, so labels are nudged apart in *pixel* space
+    # (limits are final here, making transData usable for collision math).
+    min_gap_px = 16.0
+    placed_px = -float("inf")
+    for y_end, x_end, name in sorted(line_ends):
+        natural_px = ax_ecn.transData.transform((x_end, y_end))[1]
+        label_px = max(natural_px, placed_px + min_gap_px)
+        placed_px = label_px
+        ax_ecn.annotate(
+            name, (x_end, y_end), xytext=(8, label_px - natural_px),
+            textcoords="offset pixels", va="center", fontsize=9,
+            color=INK_SECONDARY,
+        )
+    ax_jct.set_title(
+        "Rack-count scaling: job completion vs network congestion\n"
+        f"rack-scaling-{{{','.join(str(r) for r in racks_axis)}}}, "
+        f"{horizon_ms / 1000:.0f}s simulated horizon",
+        color=INK, fontsize=11, loc="left", pad=12,
+    )
+    ax_jct.legend(
+        frameon=False, fontsize=9, labelcolor=INK_SECONDARY,
+        loc="lower right",
+    )
+    fig.tight_layout()
+    os.makedirs(os.path.dirname(out_png) or ".", exist_ok=True)
+    fig.savefig(out_png, facecolor=SURFACE)
+    plt.close(fig)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--schedulers", default=DEFAULT_SCHEDULERS,
+                    help="comma-separated scheduler names from the "
+                         "rack-scaling scenarios' line-up "
+                         f"(default {DEFAULT_SCHEDULERS})")
+    ap.add_argument("--horizon-ms", type=float, default=DEFAULT_HORIZON_MS,
+                    help="simulated horizon per run (default 600000)")
+    ap.add_argument("--out", default=DEFAULT_OUT, metavar="PNG",
+                    help="output figure path (a .json sidecar with the "
+                         "measured points is written next to it)")
+    args = ap.parse_args()
+
+    schedulers = [s for s in args.schedulers.split(",") if s]
+    results = sweep(schedulers, args.horizon_ms)
+    render(results, args.out, args.horizon_ms)
+    sidecar = os.path.splitext(args.out)[0] + ".json"
+    with open(sidecar, "w") as f:
+        json.dump(
+            {"horizon_ms": args.horizon_ms, "schedulers": schedulers,
+             "results": results},
+            f, indent=2,
+        )
+        f.write("\n")
+    print(f"# wrote {args.out} and {sidecar}")
+
+
+if __name__ == "__main__":
+    main()

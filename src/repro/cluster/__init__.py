@@ -9,6 +9,8 @@ from .traces import (
     ARRIVAL_PATTERNS,
     arrival_trace,
     dynamic_trace,
+    iter_arrival_trace,
+    iter_poisson_trace,
     poisson_trace,
     snapshot_trace,
 )
@@ -26,9 +28,11 @@ __all__ = [
     "LinkIncidence",
     "Topology",
     "poisson_trace",
+    "iter_poisson_trace",
     "dynamic_trace",
     "snapshot_trace",
     "arrival_trace",
+    "iter_arrival_trace",
     "ARRIVAL_PATTERNS",
     "ideal_metrics",
 ]

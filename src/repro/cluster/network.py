@@ -166,10 +166,13 @@ class FluidNetworkSim:
         self.vectorized = vectorized
         # telemetry: how many allocations were actually *solved* (cache
         # misses) on the vectorized path — the invalidation tests pin that
-        # compute-only segment churn does not grow this
+        # compute-only segment churn does not grow this — and how many
+        # were answered from the cache (serve-mode telemetry)
         self.alloc_solves: int = 0
+        self.alloc_hits: int = 0
         # array-resident engine state, rebuilt by _build_arrays on configure
         self._slots: list[_JobExec] = []
+        self._slot_of: dict[str, int] = {}
         self._inc: LinkIncidence | None = None
         self._alloc_cache: dict[bytes, tuple[np.ndarray, np.ndarray]] = {}
         self._rem = np.zeros(0)
@@ -181,6 +184,71 @@ class FluidNetworkSim:
         self._alive = np.zeros(0, dtype=bool)
 
     # -------------------------------------------------------------- #
+    def _exec_for(self, job: Job) -> _JobExec:
+        """Build job's execution state for this epoch (reading the *current*
+        ``_execs`` for its previous state).  Shared verbatim by the
+        rebuild (:meth:`configure`) and delta (:meth:`add_job` /
+        :meth:`update_job`) paths, so both produce identical execs."""
+        pattern = job.pattern()
+        segs = segments_from_pattern(pattern)
+        links = self.topo.job_links(job.placement)
+        prev = self._execs.get(job.job_id)
+        align = job.alignment
+        ex = _JobExec(
+            job=job, segments=segs, links=links,
+            solo_iter_ms=pattern.iter_time_ms,
+            paced_iter_ms=align.paced_period_ms or pattern.iter_time_ms,
+        )
+        migrated = prev is not None and prev.links != links
+        if prev is None or migrated:
+            ex.delay_ms = (self.migration_pause_ms if migrated else 0.0)
+            ex.delay_ms += align.shift_ms
+            ex.applied_shift_ms = align.shift_ms
+            ex.iter_start_ms = self.now_ms
+            ex.seg_idx = 0
+            ex.reset_segment()
+            # the migration pause / initial shift is a one-shot setup
+            # cost, not an iteration time: exclude it from the CDF
+            ex.skip_record = ex.delay_ms > _EPS
+            if align.hold:
+                ex.ideal_next_ms = self.now_ms + ex.delay_ms + ex.paced_iter_ms
+        else:
+            # same placement: keep mid-iteration progress.  A shift from
+            # this epoch's decision is applied as the *delta* against the
+            # shift this worker has already realized (re-sending the same
+            # shift must be a no-op).
+            ex.seg_idx = prev.seg_idx
+            ex.remaining = prev.remaining
+            ex.iter_start_ms = prev.iter_start_ms
+            ex.marks = prev.marks
+            ex.delay_ms = prev.delay_ms
+            ex.applied_shift_ms = prev.applied_shift_ms
+            ex.ideal_next_ms = prev.ideal_next_ms
+            ex.consec_adjust = prev.consec_adjust
+            ex.skip_record = prev.skip_record
+            if job.shift_pending:
+                delta = (align.shift_ms - prev.applied_shift_ms) % ex.solo_iter_ms
+                if delta > _EPS and (ex.solo_iter_ms - delta) > _EPS:
+                    ex.delay_ms += delta
+                    ex.skip_record = True
+                    if ex.ideal_next_ms is not None:
+                        ex.ideal_next_ms += delta
+                ex.applied_shift_ms = align.shift_ms
+            # (re)arm / disarm the alignment agent (§5.7)
+            if align.hold and ex.ideal_next_ms is None:
+                ex.ideal_next_ms = ex.iter_start_ms + ex.delay_ms + ex.paced_iter_ms
+                ex.consec_adjust = 0
+            elif not align.hold:
+                ex.ideal_next_ms = None
+        return ex
+
+    @staticmethod
+    def _admit(job: Job, now_ms: float) -> None:
+        """Per-job bookkeeping every (re)configuration path performs."""
+        job.shift_pending = False
+        if job.start_ms is None:
+            job.start_ms = now_ms
+
     def configure(self, jobs: list[Job]) -> None:
         """(Re)configure the running set after a scheduling decision.
 
@@ -191,67 +259,164 @@ class FluidNetworkSim:
         (:class:`repro.engine.plan.JobAlignment`): the cumulative shift
         target, whether the pacing agent holds the isochronous grid, and
         the grid period.
+
+        This is the *rebuild* path: array state and the water-filling
+        cache are reconstructed from scratch.  Serve mode goes through
+        :meth:`configure_incremental`, which applies the same per-job
+        logic as slot-level deltas whenever the membership diff allows.
         """
         new: dict[str, _JobExec] = {}
         for job in jobs:
-            pattern = job.pattern()
-            segs = segments_from_pattern(pattern)
-            links = self.topo.job_links(job.placement)
-            prev = self._execs.get(job.job_id)
-            align = job.alignment
-            ex = _JobExec(
-                job=job, segments=segs, links=links,
-                solo_iter_ms=pattern.iter_time_ms,
-                paced_iter_ms=align.paced_period_ms or pattern.iter_time_ms,
-            )
-            migrated = prev is not None and prev.links != links
-            if prev is None or migrated:
-                ex.delay_ms = (self.migration_pause_ms if migrated else 0.0)
-                ex.delay_ms += align.shift_ms
-                ex.applied_shift_ms = align.shift_ms
-                ex.iter_start_ms = self.now_ms
-                ex.seg_idx = 0
-                ex.reset_segment()
-                # the migration pause / initial shift is a one-shot setup
-                # cost, not an iteration time: exclude it from the CDF
-                ex.skip_record = ex.delay_ms > _EPS
-                if align.hold:
-                    ex.ideal_next_ms = self.now_ms + ex.delay_ms + ex.paced_iter_ms
-            else:
-                # same placement: keep mid-iteration progress.  A shift from
-                # this epoch's decision is applied as the *delta* against the
-                # shift this worker has already realized (re-sending the same
-                # shift must be a no-op).
-                ex.seg_idx = prev.seg_idx
-                ex.remaining = prev.remaining
-                ex.iter_start_ms = prev.iter_start_ms
-                ex.marks = prev.marks
-                ex.delay_ms = prev.delay_ms
-                ex.applied_shift_ms = prev.applied_shift_ms
-                ex.ideal_next_ms = prev.ideal_next_ms
-                ex.consec_adjust = prev.consec_adjust
-                ex.skip_record = prev.skip_record
-                if job.shift_pending:
-                    delta = (align.shift_ms - prev.applied_shift_ms) % ex.solo_iter_ms
-                    if delta > _EPS and (ex.solo_iter_ms - delta) > _EPS:
-                        ex.delay_ms += delta
-                        ex.skip_record = True
-                        if ex.ideal_next_ms is not None:
-                            ex.ideal_next_ms += delta
-                    ex.applied_shift_ms = align.shift_ms
-                # (re)arm / disarm the alignment agent (§5.7)
-                if align.hold and ex.ideal_next_ms is None:
-                    ex.ideal_next_ms = ex.iter_start_ms + ex.delay_ms + ex.paced_iter_ms
-                    ex.consec_adjust = 0
-                elif not align.hold:
-                    ex.ideal_next_ms = None
-            job.shift_pending = False
-            if job.start_ms is None:
-                job.start_ms = self.now_ms
+            ex = self._exec_for(job)
+            self._admit(job, self.now_ms)
             new[job.job_id] = ex
         self._execs = new
         if self.vectorized:
             self._build_arrays()
+
+    # ---------------------- delta configuration ------------------- #
+    # Serve-mode arrivals/departures touch one job while the other
+    # n-1 keep running; rebuilding every array (and discarding the
+    # water-filling cache) per event is what makes batch reconfiguration
+    # O(cluster) per arrival.  The delta ops below touch only the affected
+    # slot and *keep* the allocation cache, which stays sound because a
+    # cache key is (comm-membership bytes, per-member segment bytes) over
+    # the current slot axis:
+    #
+    #   * ``remove_job`` only clears the slot's alive bit — keys where the
+    #     slot was a comm member can never be produced again, keys where
+    #     it was not remain exactly as valid;
+    #   * ``add_job`` appends a slot, so every new key's membership mask is
+    #     one byte longer — old entries become unreachable (never wrong),
+    #     since a (mask, int32-segments) encoding can never collide with
+    #     one whose mask length differs by 1 (4·k' − 4·k = 1 is unsolvable);
+    #   * ``update_job`` with an unchanged placement alters only
+    #     delay/alignment state, which enters the solve through the
+    #     membership mask itself; a changed placement (in-place migration)
+    #     rewrites the slot's link columns, which ARE invisible to the key —
+    #     that one case clears the cache.
+    #
+    # Dead slots accumulated by departures are compacted (full rebuild)
+    # once they outnumber the live ones, bounding memory.
+    def add_job(self, job: Job) -> None:
+        """Admit one arriving job without rebuilding the running set.
+
+        Bit-exact against ``configure(previous jobs + [job])``
+        (tests/test_serve_incremental.py pins state and trace parity).
+        """
+        if job.job_id in self._execs:
+            raise ValueError(f"job {job.job_id!r} already configured")
+        ex = self._exec_for(job)
+        self._admit(job, self.now_ms)
+        self._execs[job.job_id] = ex
+        if not self.vectorized:
+            return
+        live = int(np.count_nonzero(self._alive))
+        if self._inc is None or len(self._slots) - live >= max(8, live):
+            self._build_arrays()  # first build / compact dead slots
+            return
+        i = len(self._slots)
+        self._slots.append(ex)
+        self._slot_of[job.job_id] = i
+        cols = self.topo.job_link_ids(job.placement)
+        self._inc = self._inc.with_row(cols)
+        self._rem = np.append(self._rem, ex.remaining)
+        self._dly = np.append(self._dly, ex.delay_ms)
+        self._mk = np.append(self._mk, ex.marks)
+        self._cap_now = np.append(self._cap_now, 0.0)
+        self._segi = np.append(self._segi, np.int32(0))
+        self._is_comm = np.append(self._is_comm, False)
+        self._alive = np.append(self._alive, True)
+        self._col_counts = np.append(self._col_counts, cols.shape[0])
+        self._col_offsets = np.append(
+            self._col_offsets, self._col_offsets[-1] + cols.shape[0]
+        )
+        self._cols_flat = np.concatenate(
+            [self._cols_flat, cols.astype(np.int64)]
+        )
+        self._sync_seg(i, ex)
+
+    def remove_job(self, job_id: str) -> Job:
+        """Retire one departing job without rebuilding the running set."""
+        try:
+            ex = self._execs.pop(job_id)
+        except KeyError:
+            raise KeyError(f"job {job_id!r} is not configured") from None
+        if self.vectorized:
+            self._alive[self._slot_of.pop(job_id)] = False
+        return ex.job
+
+    def update_job(self, job: Job) -> None:
+        """Re-apply one running job's epoch decision (directive / placement)
+        in place — the per-job logic of :meth:`configure` on a single slot."""
+        if job.job_id not in self._execs:
+            raise KeyError(f"job {job.job_id!r} is not configured")
+        ex = self._exec_for(job)
+        migrated = ex.links != self._execs[job.job_id].links
+        self._admit(job, self.now_ms)
+        self._execs[job.job_id] = ex  # overwrite keeps dict position
+        if not self.vectorized:
+            return
+        i = self._slot_of[job.job_id]
+        self._slots[i] = ex
+        self._rem[i] = ex.remaining
+        self._dly[i] = ex.delay_ms
+        self._mk[i] = ex.marks
+        self._sync_seg(i, ex)
+        if migrated:
+            # the slot's link columns change under the cache keys' feet:
+            # this is the one delta op that must drop the cache
+            cols = self.topo.job_link_ids(job.placement)
+            rows = self._inc.rows
+            self._inc = LinkIncidence(
+                rows=rows[:i] + (cols,) + rows[i + 1:],
+                capacities=self._inc.capacities,
+                num_links=self._inc.num_links,
+            )
+            self._col_counts[i] = cols.shape[0]
+            self._col_offsets = np.concatenate(
+                ([0], np.cumsum(self._col_counts))
+            )
+            self._cols_flat = (
+                np.concatenate([r.astype(np.int64) for r in self._inc.rows])
+                if self._col_counts.sum()
+                else np.zeros(0, dtype=np.int64)
+            )
+            self._alloc_cache.clear()
+
+    def configure_incremental(self, jobs: list[Job]) -> str:
+        """Apply an epoch decision as slot deltas when the membership diff
+        allows, falling back to the full rebuild otherwise.
+
+        The delta form requires the new running order to be reachable by
+        departures + in-place updates + appended arrivals (surviving jobs
+        in their current relative order, new jobs at the end) — exactly
+        what arrival/departure-triggered decisions produce.  A decision
+        that *reorders* survivors (e.g. re-admitting a previously starved
+        job mid-list) rebuilds, because slot order defines the float
+        accumulation order the scalar oracle is matched against.
+
+        Returns ``"delta"`` or ``"rebuild"`` (serve-mode telemetry).
+        """
+        new_ids = [j.job_id for j in jobs]
+        live = list(self._execs)
+        new_set = set(new_ids)
+        if len(new_set) != len(new_ids):
+            raise ValueError("duplicate job ids in decision")
+        survivors = [jid for jid in live if jid in new_set]
+        expected = survivors + [jid for jid in new_ids if jid not in set(live)]
+        if new_ids != expected:
+            self.configure(jobs)
+            return "rebuild"
+        for jid in live:
+            if jid not in new_set:
+                self.remove_job(jid)
+        for job in jobs:
+            if job.job_id in self._execs:
+                self.update_job(job)
+            else:
+                self.add_job(job)
+        return "delta"
 
     # -------------------------------------------------------------- #
     def _comm_jobs(self) -> dict[str, _JobExec]:
@@ -372,6 +537,9 @@ class FluidNetworkSim:
         reductions reproduce the oracle's float accumulation exactly.
         """
         self._slots = list(self._execs.values())
+        self._slot_of = {
+            ex.job.job_id: i for i, ex in enumerate(self._slots)
+        }
         n = len(self._slots)
         self._inc = self.topo.incidence(
             [ex.job.placement for ex in self._slots]
@@ -441,7 +609,9 @@ class FluidNetworkSim:
         """
         key = comm_mask.tobytes() + self._segi[comm_mask].tobytes()
         hit = self._alloc_cache.get(key)
-        if hit is None:
+        if hit is not None:
+            self.alloc_hits += 1
+        else:
             if len(self._alloc_cache) >= _ALLOC_CACHE_MAX:
                 self._alloc_cache.clear()
             rates, marks = self._solve_alloc(comm_mask)
@@ -646,6 +816,7 @@ class FluidNetworkSim:
                             ex.job.finish_ms = self.now_ms
                             ex.job.state = JobState.DONE
                             del self._execs[ex.job.job_id]
+                            self._slot_of.pop(ex.job.job_id, None)
                             self._alive[i] = False
                             finished.append(ex.job)
                 if finished:

@@ -67,6 +67,32 @@ class LinkIncidence:
             m[j, cols] = True
         return m
 
+    # ------------------------- delta updates ---------------------- #
+    # Serve mode reconfigures the running set one arrival/departure at a
+    # time; rebuilding the whole incidence per event re-walks every
+    # unchanged job.  These return an updated incidence touching only the
+    # affected row — bit-exact against a full :meth:`Topology.incidence`
+    # rebuild of the same running set (tests/test_serve_incremental.py).
+    def with_row(self, row: np.ndarray) -> "LinkIncidence":
+        """Incidence with one job's link columns appended (job arrival)."""
+        return LinkIncidence(
+            rows=self.rows + (np.asarray(row, dtype=np.int32),),
+            capacities=self.capacities,
+            num_links=self.num_links,
+        )
+
+    def without_row(self, index: int) -> "LinkIncidence":
+        """Incidence with job ``index``'s row removed (job departure)."""
+        if not 0 <= index < len(self.rows):
+            raise IndexError(
+                f"incidence has {len(self.rows)} rows, no index {index}"
+            )
+        return LinkIncidence(
+            rows=self.rows[:index] + self.rows[index + 1:],
+            capacities=self.capacities,
+            num_links=self.num_links,
+        )
+
 
 def _stable_hash(*parts: object) -> int:
     h = hashlib.blake2s("/".join(map(str, parts)).encode(), digest_size=8)

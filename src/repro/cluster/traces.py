@@ -18,9 +18,10 @@ uniformly in [200, 1000] iterations and the initial worker request in
 
 from __future__ import annotations
 
+import itertools
 import math
 import random
-from typing import Sequence
+from typing import Iterator, Sequence
 
 from repro.cluster.job import Job
 from repro.cluster.topology import Topology
@@ -28,9 +29,11 @@ from repro.profiles.models import PROFILES, get_profile
 
 __all__ = [
     "poisson_trace",
+    "iter_poisson_trace",
     "dynamic_trace",
     "snapshot_trace",
     "arrival_trace",
+    "iter_arrival_trace",
     "ARRIVAL_PATTERNS",
 ]
 
@@ -56,6 +59,37 @@ def _mk_job(
     )
 
 
+def iter_poisson_trace(
+    topo: Topology,
+    *,
+    load: float = 0.9,
+    num_jobs: int | None = 20,
+    models: Sequence[str] | None = None,
+    seed: int = 0,
+    min_iters: int = 200,
+    max_iters: int = 1000,
+) -> Iterator[Job]:
+    """Generator form of :func:`poisson_trace`: yields jobs one by one in
+    arrival order, ``num_jobs=None`` streaming forever.  The RNG stream is
+    consumed in exactly the list form's order, so the first ``n`` yielded
+    jobs are bit-identical to ``poisson_trace(..., num_jobs=n)`` — serve
+    mode can consume an unbounded arrival stream in O(1) memory.
+    """
+    rng = random.Random(seed)
+    models = models or list(PROFILES)
+    t = 0.0
+    counter = range(num_jobs) if num_jobs is not None else itertools.count()
+    for i in counter:
+        j = _mk_job(rng, i, t, models, min_iters=min_iters, max_iters=max_iters)
+        yield j
+        # expected service time of this job (solo): iters × iter_time
+        service_ms = j.duration_iters * j.profile.iter_time_ms(j.num_workers)
+        # arrival rate so that E[busy gpus] = load × num_gpus:
+        #   λ · E[workers·service] = load · G  →  inter-arrival = w·s/(load·G)
+        inter = j.num_workers * service_ms / (load * topo.num_gpus)
+        t += rng.expovariate(1.0) * inter
+
+
 def poisson_trace(
     topo: Topology,
     *,
@@ -67,22 +101,10 @@ def poisson_trace(
     max_iters: int = 1000,
 ) -> list[Job]:
     """Poisson arrivals targeting ``load`` average GPU occupancy."""
-    rng = random.Random(seed)
-    models = models or list(PROFILES)
-    jobs: list[Job] = []
-    t = 0.0
-    for i in range(num_jobs):
-        jobs.append(
-            _mk_job(rng, i, t, models, min_iters=min_iters, max_iters=max_iters)
-        )
-        j = jobs[-1]
-        # expected service time of this job (solo): iters × iter_time
-        service_ms = j.duration_iters * j.profile.iter_time_ms(j.num_workers)
-        # arrival rate so that E[busy gpus] = load × num_gpus:
-        #   λ · E[workers·service] = load · G  →  inter-arrival = w·s/(load·G)
-        inter = j.num_workers * service_ms / (load * topo.num_gpus)
-        t += rng.expovariate(1.0) * inter
-    return jobs
+    return list(iter_poisson_trace(
+        topo, load=load, num_jobs=num_jobs, models=models, seed=seed,
+        min_iters=min_iters, max_iters=max_iters,
+    ))
 
 
 def dynamic_trace(
@@ -124,12 +146,12 @@ def dynamic_trace(
 ARRIVAL_PATTERNS = ("poisson", "burst", "diurnal")
 
 
-def arrival_trace(
+def iter_arrival_trace(
     topo: Topology,
     *,
     pattern: str = "poisson",
     load: float = 0.9,
-    num_jobs: int = 20,
+    num_jobs: int | None = 20,
     models: Sequence[str] | None = None,
     seed: int = 0,
     min_iters: int = 200,
@@ -137,7 +159,7 @@ def arrival_trace(
     burst_size: int = 4,
     diurnal_period_ms: float = 1_800_000.0,
     diurnal_depth: float = 0.8,
-) -> list[Job]:
+) -> Iterator[Job]:
     """One job population, three arrival processes (same mean load).
 
     The job *population* (models, worker counts, durations) is drawn
@@ -157,6 +179,10 @@ def arrival_trace(
 
     All three draw the same RNG stream for the population, so a sweep
     isolates the arrival process itself.
+
+    This is the generator core (``num_jobs=None`` streams forever, in O(1)
+    memory); :func:`arrival_trace` materializes it.  The first ``n`` yields
+    are bit-identical to the list form with ``num_jobs=n``.
     """
     if pattern not in ARRIVAL_PATTERNS:
         raise ValueError(
@@ -164,14 +190,12 @@ def arrival_trace(
         )
     rng = random.Random(seed)
     models = models or list(PROFILES)
-    jobs: list[Job] = []
     t = 0.0
     pending_gap = 0.0
-    for i in range(num_jobs):
-        jobs.append(
-            _mk_job(rng, i, t, models, min_iters=min_iters, max_iters=max_iters)
-        )
-        j = jobs[-1]
+    counter = range(num_jobs) if num_jobs is not None else itertools.count()
+    for i in counter:
+        j = _mk_job(rng, i, t, models, min_iters=min_iters, max_iters=max_iters)
+        yield j
         service_ms = j.duration_iters * j.profile.iter_time_ms(j.num_workers)
         inter = j.num_workers * service_ms / (load * topo.num_gpus)
         gap = rng.expovariate(1.0) * inter
@@ -189,7 +213,29 @@ def arrival_trace(
                 2.0 * math.pi * t / diurnal_period_ms
             )
             t += gap / max(intensity, 1e-3)
-    return jobs
+
+
+def arrival_trace(
+    topo: Topology,
+    *,
+    pattern: str = "poisson",
+    load: float = 0.9,
+    num_jobs: int = 20,
+    models: Sequence[str] | None = None,
+    seed: int = 0,
+    min_iters: int = 200,
+    max_iters: int = 1000,
+    burst_size: int = 4,
+    diurnal_period_ms: float = 1_800_000.0,
+    diurnal_depth: float = 0.8,
+) -> list[Job]:
+    """Materialized form of :func:`iter_arrival_trace` (same RNG stream)."""
+    return list(iter_arrival_trace(
+        topo, pattern=pattern, load=load, num_jobs=num_jobs, models=models,
+        seed=seed, min_iters=min_iters, max_iters=max_iters,
+        burst_size=burst_size, diurnal_period_ms=diurnal_period_ms,
+        diurnal_depth=diurnal_depth,
+    ))
 
 
 def snapshot_trace(

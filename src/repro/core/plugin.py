@@ -115,6 +115,11 @@ class CassiniModule:
         # cached CompatResults themselves are frozen dataclasses.
         self._link_cache: dict[tuple, CompatResult] = {}
         self._cache_lock = threading.Lock()
+        # serve-mode telemetry: cache_hits counts successful link-cache
+        # lookups (what the speculative epoch-prefetch buys), cache_misses
+        # counts link problems actually *solved* (scalar or batched)
+        self.cache_hits: int = 0
+        self.cache_misses: int = 0
         # Telemetry of the most recent score_candidates_batched call (None
         # until one runs, or when every link problem was already cached):
         # benches and tests use it to prove no silent scalar fallback.
@@ -173,11 +178,46 @@ class CassiniModule:
 
     def _cached(self, key: tuple) -> CompatResult | None:
         with self._cache_lock:
-            return self._link_cache.get(key)
+            res = self._link_cache.get(key)
+            if res is not None:
+                self.cache_hits += 1
+            return res
 
     def _cache_put(self, key: tuple, res: CompatResult) -> None:
         with self._cache_lock:
             self._link_cache[key] = res
+
+    # ------------------------- delta updates ---------------------- #
+    def add_job(self, pattern: CommPattern) -> None:
+        """Job arrival: nothing to precompute — entries fill lazily on the
+        first solve involving the new pattern.  Kept as the explicit
+        counterpart of :meth:`remove_job` so serve-mode churn drives both
+        sides of the cache's lifecycle through one API."""
+
+    def remove_job(self, pattern: CommPattern | str) -> int:
+        """Job departure: evict every cached link solve involving the
+        departed pattern (matched by pattern name — a cache key embeds the
+        ``(name, iter_time, phases)`` triple of each participant).
+
+        A long-running service would otherwise accumulate solves for jobs
+        that can never communicate again.  Evicting by name is safe even
+        when another running job shares the pattern: the next epoch's solve
+        misses and recomputes the identical frozen ``CompatResult``, so
+        delta-evicted and rebuilt-from-scratch caches stay interchangeable
+        (tests/test_serve_incremental.py pins the parity).
+
+        Returns the number of evicted entries.
+        """
+        name = pattern if isinstance(pattern, str) else pattern.name
+        with self._cache_lock:
+            doomed = [
+                key
+                for key in self._link_cache
+                if any(entry[0] == name for entry in key[0])
+            ]
+            for key in doomed:
+                del self._link_cache[key]
+        return len(doomed)
 
     def _prepare_candidate(
         self,
@@ -226,6 +266,7 @@ class CassiniModule:
             key = self._link_key(js, patterns, caps[l])
             res = self._cached(key)
             if res is None:
+                self.cache_misses += 1
                 res = find_rotations(
                     [patterns[j] for j in js],
                     caps[l],
@@ -321,6 +362,7 @@ class CassiniModule:
         self.last_batch_stats = None
         if todo:
             keys = list(todo)
+            self.cache_misses += len(keys)
             stats = BatchStats()
             solved = find_rotations_batched(
                 [todo[k] for k in keys],

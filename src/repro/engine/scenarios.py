@@ -19,7 +19,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Mapping, Sequence
+from typing import Callable, Iterator, Mapping, Sequence
 
 from repro.cluster import (
     ARRIVAL_PATTERNS,
@@ -29,6 +29,8 @@ from repro.cluster import (
     arrival_trace,
     dynamic_trace,
     ideal_metrics,
+    iter_arrival_trace,
+    iter_poisson_trace,
     poisson_trace,
     snapshot_trace,
 )
@@ -106,6 +108,11 @@ class ScenarioSpec:
     description: str
     topology: Callable[[], Topology]
     trace: Callable[[Topology], list[Job]]
+    # Optional generator form of ``trace`` for serve mode: yields jobs in
+    # arrival order without materializing the whole trace (O(1) memory for
+    # unbounded streams).  When unset, :meth:`arrival_stream` falls back to
+    # iterating the materialized list — same jobs either way.
+    trace_stream: Callable[[Topology], Iterator[Job]] | None = None
     schedulers: Mapping[str, SchedulerFactory] = field(
         default_factory=default_scheduler_factories
     )
@@ -179,6 +186,17 @@ class ScenarioSpec:
             simulator=built.simulator,
         )
 
+    def arrival_stream(self, topo: Topology | None = None) -> Iterator[Job]:
+        """Jobs in arrival order as a lazy stream (serve-mode input).
+
+        Uses ``trace_stream`` when the spec provides one (unbounded traces
+        never materialize); otherwise iterates the ``trace`` list.
+        """
+        topo = topo if topo is not None else self.topology()
+        if self.trace_stream is not None:
+            return self.trace_stream(topo)
+        return iter(self.trace(topo))
+
     def ideal(self) -> Metrics:
         """Dedicated-cluster reference metrics for this scenario's trace."""
         topo = self.topology()
@@ -238,12 +256,15 @@ register_scenario(ScenarioSpec(
 ))
 
 
-def _poisson_paper_trace(topo: Topology, *, seed: int = 7) -> list[Job]:
-    return poisson_trace(
-        topo, load=0.95, num_jobs=16, seed=seed, min_iters=150, max_iters=400,
-        models=["vgg16", "vgg19", "wideresnet101", "resnet50", "bert",
-                "roberta", "xlm", "gpt1", "gpt2", "gpt3", "dlrm"],
-    )
+_POISSON_PAPER_KW = dict(
+    load=0.95, num_jobs=16, seed=7, min_iters=150, max_iters=400,
+    models=["vgg16", "vgg19", "wideresnet101", "resnet50", "bert",
+            "roberta", "xlm", "gpt1", "gpt2", "gpt3", "dlrm"],
+)
+
+
+def _poisson_paper_trace(topo: Topology) -> list[Job]:
+    return poisson_trace(topo, **_POISSON_PAPER_KW)
 
 
 register_scenario(ScenarioSpec(
@@ -252,6 +273,7 @@ register_scenario(ScenarioSpec(
                 "all schedulers",
     topology=Topology.paper_testbed,
     trace=_poisson_paper_trace,
+    trace_stream=lambda topo: iter_poisson_trace(topo, **_POISSON_PAPER_KW),
 ))
 
 
@@ -469,17 +491,11 @@ _ARRIVAL_DESCRIPTIONS = {
 
 
 def _arrival_pattern_trace(topo: Topology, *, pattern: str) -> list[Job]:
-    return arrival_trace(
-        topo,
-        pattern=pattern,
-        load=0.95,
-        num_jobs=16,
-        seed=7,
-        min_iters=150,
-        max_iters=400,
-        models=["vgg16", "vgg19", "wideresnet101", "resnet50", "bert",
-                "roberta", "xlm", "gpt1", "gpt2", "gpt3", "dlrm"],
-    )
+    return arrival_trace(topo, pattern=pattern, **_POISSON_PAPER_KW)
+
+
+def _arrival_pattern_stream(topo: Topology, *, pattern: str):
+    return iter_arrival_trace(topo, pattern=pattern, **_POISSON_PAPER_KW)
 
 
 for _pat in ARRIVAL_SWEEP:
@@ -489,6 +505,7 @@ for _pat in ARRIVAL_SWEEP:
                     f"{_ARRIVAL_DESCRIPTIONS[_pat]}",
         topology=Topology.paper_testbed,
         trace=functools.partial(_arrival_pattern_trace, pattern=_pat),
+        trace_stream=functools.partial(_arrival_pattern_stream, pattern=_pat),
     ))
 
 

@@ -1,0 +1,30 @@
+"""Serve mode: the scheduling pipeline as a long-running online service.
+
+Batch experiments drive :class:`~repro.cluster.ClusterSimulator` over a
+fully-materialized trace; serve mode accepts the same workload as a
+*stream* of :class:`JobArrival` / :class:`JobDeparture` /
+:class:`QueryPlacement` events through a bounded request queue, keeps the
+fluid-engine / incidence / link-cache state up to date with delta updates
+(:meth:`FluidNetworkSim.configure_incremental`) instead of per-event
+rebuilds, and answers placement queries with recorded service-latency
+percentiles (docs/architecture.md, "Serve mode").
+"""
+
+from repro.serve.events import (
+    JobArrival,
+    JobDeparture,
+    PlacementView,
+    QueryPlacement,
+)
+from repro.serve.metrics import LatencyRecorder
+from repro.serve.service import QueueFullError, SchedulerService
+
+__all__ = [
+    "JobArrival",
+    "JobDeparture",
+    "QueryPlacement",
+    "PlacementView",
+    "LatencyRecorder",
+    "SchedulerService",
+    "QueueFullError",
+]

@@ -1,0 +1,80 @@
+"""Typed events of the scheduling service's request stream.
+
+Events carry *simulated* time: the service's clock is the fluid engine's,
+and a client replaying a trace submits events in non-decreasing event-time
+order (the stream contract — :class:`~repro.serve.service.SchedulerService`
+rejects time travel).  Wall-clock only enters through the latency recorder,
+which measures how long the service takes to process each event.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Union
+
+from repro.cluster.job import Job, JobState
+
+__all__ = ["JobArrival", "JobDeparture", "QueryPlacement", "PlacementView",
+           "ServeEvent"]
+
+
+@dataclass(frozen=True)
+class JobArrival:
+    """A job entering the cluster at ``job.arrival_ms``.
+
+    Arrivals sharing one timestamp are admitted as ONE batch with one
+    scheduling decision — exactly like the batch simulator — so the
+    service defers admission until the stream's watermark moves past the
+    batch's timestamp (a later event or an explicit drain).
+    """
+
+    job: Job
+
+    @property
+    def at_ms(self) -> float:
+        return self.job.arrival_ms
+
+
+@dataclass(frozen=True)
+class JobDeparture:
+    """Client-initiated cancellation of a job at ``at_ms``.
+
+    Finish-departures need no event — the fluid engine raises them
+    internally; this is the external "stop training now" request.
+    """
+
+    job_id: str
+    at_ms: float
+
+
+@dataclass(frozen=True)
+class QueryPlacement:
+    """Read-only query: where is ``job_id`` (or everyone) placed?
+
+    ``at_ms`` optionally moves the stream watermark first (processing all
+    actions strictly before it); with ``at_ms=None`` the query answers at
+    the current watermark without advancing anything.
+    """
+
+    job_id: str | None = None
+    at_ms: float | None = None
+
+
+@dataclass(frozen=True)
+class PlacementView:
+    """Reply to a :class:`QueryPlacement`.
+
+    ``placements`` maps job → server ids for every queried job;
+    ``shifts_ms`` the realized CASSINI time-shift targets; ``states`` the
+    job lifecycle states.  ``as_of_ms`` is the fluid clock at answer time
+    (the watermark may lag the query's ``at_ms`` when nothing forced an
+    advance — fluid time only moves in exact event steps).
+    """
+
+    placements: dict[str, tuple[int, ...]]
+    shifts_ms: dict[str, float]
+    states: dict[str, JobState]
+    as_of_ms: float
+
+
+ServeEvent = Union[JobArrival, JobDeparture, QueryPlacement]

@@ -1,0 +1,84 @@
+"""Latency telemetry for serve mode.
+
+One :class:`LatencyRecorder` per service instance: sliding-window service
+latencies per event kind (p50/p95/p99 via the repo's shared nearest-rank
+percentile), monotonic counters (configure delta vs rebuild, prefetch
+launches, …) and gauges (queue depth).  ``snapshot()`` exports everything
+as a flat dict — the ``serve_query`` benchmark row and the service's
+``telemetry()`` are both views over it.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+from repro.cluster.simulator import nearest_rank
+
+__all__ = ["LatencyRecorder"]
+
+_PCTS = (50.0, 95.0, 99.0)
+
+
+class LatencyRecorder:
+    """Thread-safe sliding-window latency percentiles + counters/gauges."""
+
+    def __init__(self, *, window: int = 8192) -> None:
+        self.window = window
+        self._lock = threading.Lock()
+        self._samples: dict[str, deque[float]] = {}
+        self._totals: dict[str, int] = {}
+        self._counters: dict[str, int] = {}
+        self._gauges: dict[str, float] = {}
+        self._gauge_peaks: dict[str, float] = {}
+
+    # ------------------------------------------------------------- #
+    def observe(self, kind: str, latency_ms: float) -> None:
+        """Record one service latency sample (ms) for an event kind."""
+        with self._lock:
+            dq = self._samples.get(kind)
+            if dq is None:
+                dq = self._samples[kind] = deque(maxlen=self.window)
+            dq.append(float(latency_ms))
+            self._totals[kind] = self._totals.get(kind, 0) + 1
+
+    def count(self, name: str, inc: int = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + inc
+
+    def gauge(self, name: str, value: float) -> None:
+        """Set a gauge; its running peak is kept alongside."""
+        with self._lock:
+            self._gauges[name] = float(value)
+            self._gauge_peaks[name] = max(
+                self._gauge_peaks.get(name, float("-inf")), float(value)
+            )
+
+    # ------------------------------------------------------------- #
+    def percentiles(self, kind: str) -> dict[str, float]:
+        """{'p50': …, 'p95': …, 'p99': …} ms over the current window
+        (NaN before the first sample)."""
+        with self._lock:
+            xs = list(self._samples.get(kind, ()))
+        return {f"p{q:g}": nearest_rank(xs, q) for q in _PCTS}
+
+    def counter(self, name: str) -> int:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    def snapshot(self) -> dict[str, float]:
+        """Flat export: per-kind latency percentiles/counts, counters and
+        gauges (with ``_peak`` companions)."""
+        with self._lock:
+            out: dict[str, float] = {}
+            for kind, dq in self._samples.items():
+                xs = list(dq)
+                for q in _PCTS:
+                    out[f"{kind}_p{q:g}_ms"] = nearest_rank(xs, q)
+                out[f"{kind}_count"] = float(self._totals[kind])
+            for name, v in self._counters.items():
+                out[name] = float(v)
+            for name, v in self._gauges.items():
+                out[name] = v
+                out[f"{name}_peak"] = self._gauge_peaks[name]
+            return out

@@ -1,0 +1,431 @@
+"""`SchedulerService`: the scheduling pipeline as a long-running service.
+
+One worker thread owns all scheduling state and consumes a bounded request
+queue (FIFO — processing order equals submission order, so results are
+deterministic regardless of thread timing).  The embedded event loop is the
+batch :class:`~repro.cluster.ClusterSimulator` loop, run *incrementally*
+against a stream watermark:
+
+  - events carry simulated time and must arrive in non-decreasing order;
+  - an event at time ``T`` first *pumps* the loop — executing every
+    arrival-admission / epoch-expiry / finish-departure action whose time
+    is strictly before ``T`` — then buffers (arrival) or applies
+    (departure/query) itself;
+  - arrivals sharing one timestamp therefore accumulate in the buffer and
+    are admitted as ONE batch with one scheduling decision when the
+    watermark moves past them, exactly like the batch simulator;
+  - :meth:`drain` runs the remaining buffered work to a horizon with the
+    batch loop verbatim and returns batch-identical :class:`Metrics`.
+
+State updates go through :meth:`FluidNetworkSim.configure_incremental`
+(slot deltas + retained water-filling cache; bit-exact vs rebuild), and an
+optional prefetch thread warms the CASSINI link cache for the predicted
+next epoch while the fluid engine advances — speculation only ever *adds*
+pure cache entries, so the authoritative scoring path stays bit-identical
+with prefetch on or off.
+"""
+
+from __future__ import annotations
+
+import math
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+from repro.cluster.job import Job, JobState
+from repro.cluster.network import FluidNetworkSim
+from repro.cluster.simulator import Metrics
+from repro.cluster.topology import Topology
+from repro.sched.base import ClusterState, Decision, Scheduler
+from repro.serve.events import (
+    JobArrival,
+    JobDeparture,
+    PlacementView,
+    QueryPlacement,
+    ServeEvent,
+)
+from repro.serve.metrics import LatencyRecorder
+
+__all__ = ["SchedulerService", "QueueFullError"]
+
+_EPS = 1e-9
+
+
+class QueueFullError(RuntimeError):
+    """The bounded request queue rejected a submission (backpressure)."""
+
+
+@dataclass
+class _Request:
+    event: ServeEvent
+    future: Future = field(default_factory=Future)
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+_SHUTDOWN = object()
+
+
+class SchedulerService:
+    """Long-running scheduling service over the fluid cluster model.
+
+    Construction mirrors :class:`~repro.cluster.ClusterSimulator` (same
+    topology / scheduler / epoch semantics) so a served arrival replay is
+    decision-for-decision identical to the batch run — the golden
+    equivalence pinned by tests/test_serve.py.
+    """
+
+    def __init__(
+        self,
+        topology: Topology,
+        scheduler: Scheduler,
+        *,
+        epoch_ms: float = 600_000.0,
+        compute_jitter: float = 0.0,
+        migration_pause_ms: float = 1000.0,
+        congested_efficiency: float = 0.88,
+        vectorized: bool = True,
+        seed: int = 0,
+        queue_size: int = 1024,
+        submit_timeout_s: float | None = None,
+        prefetch: bool = True,
+        start: bool = True,
+    ) -> None:
+        self.topo = topology
+        self.scheduler = scheduler
+        self.epoch_ms = epoch_ms
+        self.net = FluidNetworkSim(
+            topology,
+            compute_jitter=compute_jitter,
+            migration_pause_ms=migration_pause_ms,
+            congested_efficiency=congested_efficiency,
+            vectorized=vectorized,
+            seed=seed,
+        )
+        self.decisions: list[tuple[float, Decision]] = []
+        self.metrics = LatencyRecorder()
+        self.submit_timeout_s = submit_timeout_s
+        # scheduling state (owned by the worker thread once started)
+        self._arrivals: list[Job] = []      # buffered, not yet admitted
+        self._running: list[Job] = []
+        self._done: list[Job] = []
+        self._next_epoch = 0.0
+        self._watermark = 0.0               # highest event time seen
+        # epoch-prefetch: warms the CASSINI link cache on a side thread
+        # while the worker advances the fluid engine (pipeline-bearing
+        # schedulers only — plain hosts have nothing device-side to warm)
+        self._pipeline = getattr(scheduler, "pipeline", None)
+        self.prefetch = bool(prefetch and self._pipeline is not None)
+        self._prefetch_pool = (
+            ThreadPoolExecutor(max_workers=1, thread_name_prefix="serve-prefetch")
+            if self.prefetch
+            else None
+        )
+        self._prefetch_future: Future | None = None
+        # bounded request queue + worker
+        self._queue: queue.Queue[_Request | object] = queue.Queue(
+            maxsize=queue_size
+        )
+        self._worker: threading.Thread | None = None
+        self._closed = False
+        if start:
+            self.start()
+
+    # ---------------------- lifecycle ----------------------------- #
+    def start(self) -> None:
+        if self._worker is not None:
+            return
+        self._worker = threading.Thread(
+            target=self._worker_loop, name="serve-worker", daemon=True
+        )
+        self._worker.start()
+
+    def close(self) -> None:
+        """Stop the worker after the queued requests finish."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._worker is not None:
+            self._queue.put(_SHUTDOWN)
+            self._worker.join()
+            self._worker = None
+        self._join_prefetch()
+        if self._prefetch_pool is not None:
+            self._prefetch_pool.shutdown(wait=True)
+
+    def __enter__(self) -> "SchedulerService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------- client API ---------------------------- #
+    def submit(self, event: ServeEvent) -> Future:
+        """Enqueue one event; returns a Future with the handler's result.
+
+        Raises :class:`QueueFullError` when the bounded queue stays full
+        past ``submit_timeout_s`` (no timeout → immediate rejection).
+        """
+        if self._closed:
+            raise RuntimeError("service is closed")
+        req = _Request(event=event)
+        try:
+            if self.submit_timeout_s is None:
+                self._queue.put_nowait(req)
+            else:
+                self._queue.put(req, timeout=self.submit_timeout_s)
+        except queue.Full:
+            self.metrics.count("queue_rejected")
+            raise QueueFullError(
+                f"request queue full ({self._queue.maxsize} pending)"
+            ) from None
+        self.metrics.gauge("queue_depth", self._queue.qsize())
+        return req.future
+
+    def query(
+        self, job_id: str | None = None, at_ms: float | None = None
+    ) -> PlacementView:
+        """Synchronous :class:`QueryPlacement` (submit + wait)."""
+        return self.submit(QueryPlacement(job_id=job_id, at_ms=at_ms)).result()
+
+    def drain(self, horizon_ms: float) -> Metrics:
+        """Process queued events, then run everything to ``horizon_ms``
+        with batch-loop semantics; returns batch-identical Metrics."""
+        fut: Future = Future()
+        req = _Request(event=("__drain__", horizon_ms))  # type: ignore[arg-type]
+        req.future = fut
+        self._queue.put(req)
+        return fut.result()
+
+    def telemetry(self) -> dict[str, float]:
+        """Latency percentiles + counters + cache telemetry, one flat dict."""
+        out = self.metrics.snapshot()
+        out["alloc_cache_solves"] = float(self.net.alloc_solves)
+        out["alloc_cache_hits"] = float(self.net.alloc_hits)
+        module = getattr(self.scheduler, "module", None)
+        if module is not None:
+            out["link_cache_hits"] = float(module.cache_hits)
+            out["link_cache_misses"] = float(module.cache_misses)
+        out["decisions"] = float(len(self.decisions))
+        return out
+
+    # ---------------------- worker -------------------------------- #
+    def _worker_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _SHUTDOWN:
+                break
+            req: _Request = item  # type: ignore[assignment]
+            kind = (
+                req.event[0].strip("_")
+                if isinstance(req.event, tuple)
+                else type(req.event).__name__
+            )
+            try:
+                result = self._handle(req.event)
+            except BaseException as exc:  # propagate to the caller
+                req.future.set_exception(exc)
+                self.metrics.count(f"{kind}_errors")
+            else:
+                req.future.set_result(result)
+                self.metrics.observe(
+                    kind, (time.perf_counter() - req.t_submit) * 1e3
+                )
+
+    def _handle(self, event):
+        if isinstance(event, tuple) and event[0] == "__drain__":
+            return self._drain(event[1])
+        if isinstance(event, JobArrival):
+            return self._handle_arrival(event)
+        if isinstance(event, JobDeparture):
+            return self._handle_departure(event)
+        if isinstance(event, QueryPlacement):
+            return self._handle_query(event)
+        raise TypeError(f"unknown serve event {type(event).__name__}")
+
+    # ---------------------- event handlers ------------------------ #
+    def _check_watermark(self, at_ms: float) -> None:
+        if at_ms < self._watermark - _EPS:
+            raise ValueError(
+                f"event at t={at_ms} ms behind the stream watermark "
+                f"({self._watermark} ms); events must arrive in "
+                "non-decreasing time order"
+            )
+        self._watermark = max(self._watermark, at_ms)
+
+    def _handle_arrival(self, ev: JobArrival) -> None:
+        self._check_watermark(ev.at_ms)
+        # everything strictly before this arrival is now decidable
+        self._pump(ev.at_ms)
+        self._arrivals.append(ev.job)
+
+    def _handle_departure(self, ev: JobDeparture) -> None:
+        self._check_watermark(ev.at_ms)
+        self._pump(ev.at_ms)
+        for i, job in enumerate(self._arrivals):
+            if job.job_id == ev.job_id:  # cancelled before admission
+                self._arrivals.pop(i)
+                self._done.append(job)
+                return
+        for job in self._running:
+            if job.job_id == ev.job_id:
+                self._running.remove(job)
+                # stopped without finishing: same lifecycle terminal the
+                # batch horizon cutoff uses (finish_ms/jct stay None)
+                job.state = JobState.CUTOFF
+                self._done.append(job)
+                # departure-triggered re-placement, like a finish
+                self._reschedule(self.net.now_ms, "departure")
+                return
+        raise KeyError(f"job {ev.job_id!r} is not queued or running")
+
+    def _handle_query(self, ev: QueryPlacement) -> PlacementView:
+        if ev.at_ms is not None:
+            self._check_watermark(ev.at_ms)
+            self._pump(ev.at_ms)
+        jobs = self._running if ev.job_id is None else [
+            j for j in self._running + self._arrivals + self._done
+            if j.job_id == ev.job_id
+        ]
+        if ev.job_id is not None and not jobs:
+            raise KeyError(f"unknown job {ev.job_id!r}")
+        return PlacementView(
+            placements={j.job_id: tuple(j.placement) for j in jobs},
+            shifts_ms={j.job_id: j.alignment.shift_ms for j in jobs},
+            states={j.job_id: j.state for j in jobs},
+            as_of_ms=self.net.now_ms,
+        )
+
+    # ---------------------- embedded event loop ------------------- #
+    # This is ClusterSimulator.run's loop body.  _pump runs it with a
+    # *deferral bound*: an action at or beyond the bound (within the batch
+    # loop's 1e-9 tie window) is left for a later pump, so same-timestamp
+    # arrival batches stay whole and the fluid clock advances in exactly
+    # the steps the batch run takes (two-phase advances would change float
+    # accumulation).  _drain runs it verbatim to a horizon.
+    def _loop(self, bound_ms: float, *, defer: bool) -> None:
+        net = self.net
+        while (self._arrivals or self._running) and net.now_ms < bound_ms:
+            now = net.now_ms
+            t_arrival = (
+                self._arrivals[0].arrival_ms if self._arrivals else math.inf
+            )
+            if defer and min(t_arrival, self._next_epoch) >= bound_ms - _EPS:
+                break
+            t_event = min(t_arrival, self._next_epoch, bound_ms)
+
+            if t_event > now:
+                finished = net.advance(t_event)
+                if finished:
+                    for job in finished:
+                        self._running.remove(job)
+                        self._done.append(job)
+                    self._reschedule(net.now_ms, "departure")
+                    continue
+            now = net.now_ms
+            if self._arrivals and now >= self._arrivals[0].arrival_ms - _EPS:
+                while (
+                    self._arrivals
+                    and self._arrivals[0].arrival_ms <= now + _EPS
+                ):
+                    self._running.append(self._arrivals.pop(0))
+                self._reschedule(now, "arrival")
+            if now >= self._next_epoch - _EPS:
+                self._next_epoch = now + self.epoch_ms
+                if not (
+                    self._arrivals
+                    and self._arrivals[0].arrival_ms <= now + _EPS
+                ):
+                    self._reschedule(now, "epoch")
+
+    def _pump(self, watermark_ms: float) -> None:
+        self._loop(watermark_ms, defer=True)
+
+    def _drain(self, horizon_ms: float) -> Metrics:
+        self._loop(horizon_ms, defer=False)
+        self._join_prefetch()
+        for job in self._running:  # cut off like the batch horizon does
+            if job.state == JobState.RUNNING:
+                job.state = JobState.CUTOFF
+        return Metrics(jobs=self._done + self._running)
+
+    # ---------------------- scheduling ---------------------------- #
+    def _reschedule(self, now: float, trigger: str) -> None:
+        self._join_prefetch()  # the pipeline/module is single-consumer
+        state = ClusterState(
+            topology=self.topo, now_ms=now, running=list(self._running),
+            pending=[],
+        )
+        t0 = time.perf_counter()
+        decision = self.scheduler.schedule(state)
+        self.metrics.observe("schedule", (time.perf_counter() - t0) * 1e3)
+        self.metrics.count(f"reschedule_{trigger}")
+        self.decisions.append((now, decision))
+        placed: list[Job] = []
+        for job in self._running:
+            servers = decision.placements.get(job.job_id, ())
+            if servers:
+                job.placement = tuple(servers)
+                job.state = JobState.RUNNING
+                directive = (
+                    decision.plan.directive_for(job.job_id)
+                    if decision.plan is not None
+                    else None
+                )
+                if directive is not None:
+                    job.apply_directive(directive)
+                else:
+                    job.clear_directive()
+                placed.append(job)
+            else:
+                job.placement = ()
+                job.state = JobState.PENDING  # queued: no GPUs this epoch
+        mode = self.net.configure_incremental(placed)
+        self.metrics.count(f"configure_{mode}")
+        self._maybe_prefetch()
+
+    # ---------------------- epoch prefetch ------------------------ #
+    def _maybe_prefetch(self) -> None:
+        """Speculatively score the predicted next-epoch candidate grids.
+
+        Runs Allocate → Propose → Score for the state the next epoch-expiry
+        reschedule would see (same running set, ``now = next epoch``) on a
+        side thread, so the ragged ``circle_score`` launches execute on
+        device while the worker advances the fluid engine / applies the
+        current alignment.  The value is the *link cache* it fills: the
+        authoritative reschedule always re-runs Score itself and simply
+        hits the warmed entries (CompatResults are pure functions of the
+        link problem), so a wrong prediction — membership changed, an
+        arrival preempted the epoch — costs only wasted device work and
+        can never alter a decision.
+        """
+        if not self.prefetch:
+            return
+        pipeline = self._pipeline
+        pred_now = self._next_epoch
+        pred_running = list(self._running)
+
+        def warm():
+            st = ClusterState(
+                topology=self.topo, now_ms=pred_now, running=pred_running,
+                pending=[],
+            )
+            out = None
+            for stage in pipeline.stages[:-1]:  # Allocate, Propose, Score
+                out = stage.run(st, out)
+            return out
+
+        self._prefetch_future = self._prefetch_pool.submit(warm)
+        self.metrics.count("prefetch_launched")
+
+    def _join_prefetch(self) -> None:
+        fut = self._prefetch_future
+        if fut is None:
+            return
+        self._prefetch_future = None
+        try:
+            fut.result()
+        except Exception:
+            # speculation is best-effort; the real pass recomputes anyway
+            self.metrics.count("prefetch_errors")

@@ -1,0 +1,262 @@
+"""Serve mode: golden equivalence vs the batch simulator, queue bounds,
+prefetch parity, stream semantics (ISSUE 6 tentpole)."""
+
+from __future__ import annotations
+
+import math
+from itertools import islice
+
+import pytest
+
+from repro.cluster import ClusterSimulator, Topology, iter_poisson_trace, poisson_trace
+from repro.engine import get_scenario
+from repro.serve import (
+    JobArrival,
+    JobDeparture,
+    LatencyRecorder,
+    QueryPlacement,
+    QueueFullError,
+    SchedulerService,
+)
+
+
+def _decision_tuples(decisions):
+    return [
+        (t, d.placements, d.time_shifts_ms)
+        for t, d in decisions
+    ]
+
+
+def _run_batch(spec, scheduler_name):
+    built = spec.build(scheduler_name)
+    metrics = built.simulator.run(built.jobs, horizon_ms=spec.horizon_ms)
+    return metrics, built.simulator.decisions
+
+
+def _run_served(spec, scheduler_name, *, prefetch=True):
+    topo = spec.topology()
+    svc = SchedulerService(
+        topo,
+        spec.make_scheduler(scheduler_name),
+        epoch_ms=spec.epoch_ms,
+        compute_jitter=spec.compute_jitter,
+        vectorized=spec.vectorized,
+        seed=spec.sim_seed,
+        prefetch=prefetch,
+    )
+    with svc:
+        for job in spec.arrival_stream(topo):
+            svc.submit(JobArrival(job))
+        metrics = svc.drain(spec.horizon_ms)
+        telemetry = svc.telemetry()
+    return metrics, svc.decisions, telemetry
+
+
+# --------------------------------------------------------------------- #
+# golden equivalence (acceptance criterion)
+# --------------------------------------------------------------------- #
+class TestGoldenEquivalence:
+    def test_multitenant8_replay_matches_batch(self):
+        """The served multitenant-8 arrival replay produces every placement,
+        time-shift and metric identically to the batch pipeline."""
+        spec = get_scenario("multitenant-8")
+        m_batch, d_batch = _run_batch(spec, "cassini")
+        m_serve, d_serve, telemetry = _run_served(spec, "cassini")
+        assert m_batch.summary() == m_serve.summary()
+        assert _decision_tuples(d_batch) == _decision_tuples(d_serve)
+        # every epoch reconfiguration took the delta path (the replay only
+        # appends arrivals / drops departures — no survivor reordering)
+        assert telemetry["configure_delta"] == len(d_serve)
+        assert telemetry.get("configure_rebuild", 0.0) == 0.0
+
+    def test_dynamic_arrivals_match_batch_themis_cassini(self):
+        """Arrival/departure churn with a real host scheduler (Themis):
+        decisions may reorder survivors — the service must fall back to
+        rebuilds where needed and still match the batch run exactly."""
+        spec = get_scenario("dynamic-burst")
+        m_batch, d_batch = _run_batch(spec, "th+cassini")
+        m_serve, d_serve, _ = _run_served(spec, "th+cassini")
+        assert m_batch.summary() == m_serve.summary()
+        assert _decision_tuples(d_batch) == _decision_tuples(d_serve)
+
+    def test_prefetch_off_parity(self):
+        """Speculative cache warming must not change any decision."""
+        spec = get_scenario("multitenant-4")
+        m_on, d_on, tel_on = _run_served(spec, "cassini", prefetch=True)
+        m_off, d_off, tel_off = _run_served(spec, "cassini", prefetch=False)
+        assert m_on.summary() == m_off.summary()
+        assert _decision_tuples(d_on) == _decision_tuples(d_off)
+        assert tel_on["prefetch_launched"] > 0
+        assert "prefetch_launched" not in tel_off
+
+
+# --------------------------------------------------------------------- #
+# service semantics
+# --------------------------------------------------------------------- #
+class TestServiceSemantics:
+    def _spec(self):
+        return get_scenario("multitenant-4")
+
+    def test_query_placement(self):
+        spec = self._spec()
+        topo = spec.topology()
+        with SchedulerService(
+            topo, spec.make_scheduler("cassini"), epoch_ms=spec.epoch_ms,
+            compute_jitter=0.0, seed=spec.sim_seed,
+        ) as svc:
+            jobs = list(spec.arrival_stream(topo))
+            for job in jobs:
+                svc.submit(JobArrival(job))
+            # watermark past the t=0 batch forces its admission + decision
+            view = svc.query(at_ms=1.0)
+            assert set(view.placements) == {j.job_id for j in jobs}
+            _, latest = svc.decisions[-1]
+            assert view.placements == {
+                jid: tuple(srv) for jid, srv in latest.placements.items()
+            }
+            one = svc.query(job_id=jobs[0].job_id)
+            assert one.placements == {
+                jobs[0].job_id: view.placements[jobs[0].job_id]
+            }
+            with pytest.raises(KeyError):
+                svc.query(job_id="no-such-job")
+
+    def test_same_timestamp_arrivals_admitted_as_one_batch(self):
+        """All t=0 tenants must enter with ONE scheduling decision, exactly
+        like the batch simulator — not one decision per submit."""
+        spec = self._spec()
+        topo = spec.topology()
+        with SchedulerService(
+            topo, spec.make_scheduler("cassini"), epoch_ms=spec.epoch_ms,
+            compute_jitter=0.0, seed=spec.sim_seed,
+        ) as svc:
+            for job in spec.arrival_stream(topo):
+                svc.submit(JobArrival(job))
+            assert svc.query().placements == {}  # watermark still at t=0
+            svc.query(at_ms=1.0)
+            tel = svc.telemetry()
+            assert tel["reschedule_arrival"] == 1.0
+
+    def test_departure_cancels_job(self):
+        spec = self._spec()
+        topo = spec.topology()
+        with SchedulerService(
+            topo, spec.make_scheduler("cassini"), epoch_ms=spec.epoch_ms,
+            compute_jitter=0.0, seed=spec.sim_seed,
+        ) as svc:
+            jobs = list(spec.arrival_stream(topo))
+            for job in jobs:
+                svc.submit(JobArrival(job))
+            victim = jobs[0].job_id
+            svc.submit(JobDeparture(job_id=victim, at_ms=5_000.0)).result()
+            view = svc.query()
+            assert victim not in view.placements
+            metrics = svc.drain(spec.horizon_ms)
+            by_id = {j.job_id: j for j in metrics.jobs}
+            assert by_id[victim].finish_ms is None  # cancelled, not finished
+
+    def test_out_of_order_events_rejected(self):
+        spec = self._spec()
+        topo = spec.topology()
+        with SchedulerService(
+            topo, spec.make_scheduler("cassini"), epoch_ms=spec.epoch_ms,
+            compute_jitter=0.0, seed=spec.sim_seed,
+        ) as svc:
+            svc.query(at_ms=10_000.0)
+            with pytest.raises(ValueError, match="watermark"):
+                svc.query(at_ms=5_000.0)
+
+    def test_bounded_queue_backpressure(self):
+        spec = self._spec()
+        topo = spec.topology()
+        svc = SchedulerService(
+            topo, spec.make_scheduler("cassini"), epoch_ms=spec.epoch_ms,
+            queue_size=2, start=False,  # no worker: the queue can only fill
+        )
+        jobs = poisson_trace(topo, num_jobs=3, seed=1)
+        svc.submit(JobArrival(jobs[0]))
+        svc.submit(JobArrival(jobs[1]))
+        with pytest.raises(QueueFullError):
+            svc.submit(JobArrival(jobs[2]))
+        assert svc.metrics.counter("queue_rejected") == 1
+        assert svc.metrics.snapshot()["queue_depth_peak"] == 2.0
+
+    def test_closed_service_rejects_submissions(self):
+        spec = self._spec()
+        topo = spec.topology()
+        svc = SchedulerService(
+            topo, spec.make_scheduler("cassini"), epoch_ms=spec.epoch_ms,
+        )
+        svc.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            svc.submit(QueryPlacement())
+
+
+# --------------------------------------------------------------------- #
+# streaming traces (satellite: O(1)-memory arrival streams)
+# --------------------------------------------------------------------- #
+class TestArrivalStreams:
+    def test_iter_poisson_prefix_matches_list(self):
+        topo = Topology.paper_testbed()
+        lst = poisson_trace(topo, num_jobs=10, seed=5)
+        stream = list(islice(iter_poisson_trace(topo, num_jobs=None, seed=5), 10))
+        assert [
+            (j.job_id, j.model, j.num_workers, j.duration_iters, j.arrival_ms)
+            for j in lst
+        ] == [
+            (j.job_id, j.model, j.num_workers, j.duration_iters, j.arrival_ms)
+            for j in stream
+        ]
+
+    def test_scenario_arrival_stream_matches_trace(self):
+        for name in ("poisson-paper", "arrival-burst", "multitenant-8"):
+            spec = get_scenario(name)
+            topo = spec.topology()
+            lst = spec.trace(topo)
+            stream = list(spec.arrival_stream(topo))
+            assert [(j.job_id, j.arrival_ms) for j in lst] == [
+                (j.job_id, j.arrival_ms) for j in stream
+            ]
+
+    def test_unbounded_stream_is_lazy(self):
+        topo = Topology.paper_testbed()
+        it = iter_poisson_trace(topo, num_jobs=None, seed=0)
+        head = [next(it) for _ in range(100)]
+        assert len({j.job_id for j in head}) == 100
+        assert all(
+            a.arrival_ms <= b.arrival_ms for a, b in zip(head, head[1:])
+        )
+
+
+# --------------------------------------------------------------------- #
+# latency recorder
+# --------------------------------------------------------------------- #
+class TestLatencyRecorder:
+    def test_percentiles_nearest_rank(self):
+        rec = LatencyRecorder()
+        for v in range(1, 101):  # 1..100 ms
+            rec.observe("query", float(v))
+        pct = rec.percentiles("query")
+        assert pct == {"p50": 50.0, "p95": 95.0, "p99": 99.0}
+
+    def test_empty_kind_is_nan(self):
+        rec = LatencyRecorder()
+        assert all(math.isnan(v) for v in rec.percentiles("nope").values())
+
+    def test_snapshot_counters_and_gauges(self):
+        rec = LatencyRecorder()
+        rec.count("hits", 3)
+        rec.gauge("depth", 5.0)
+        rec.gauge("depth", 2.0)
+        snap = rec.snapshot()
+        assert snap["hits"] == 3.0
+        assert snap["depth"] == 2.0
+        assert snap["depth_peak"] == 5.0
+
+    def test_window_bounds_memory(self):
+        rec = LatencyRecorder(window=16)
+        for v in range(1000):
+            rec.observe("q", float(v))
+        snap = rec.snapshot()
+        assert snap["q_count"] == 1000.0
+        assert rec.percentiles("q")["p50"] >= 984.0  # only the tail kept
