@@ -129,29 +129,16 @@ def mixed_angle_problems(wraps=(7, 11, 13, 17, 19, 23), links_per=4,
 
 def fluid_advance_case(racks, tenants=2):
     """A contended fluid-sim state from the ``rack-scaling-{racks}``
-    scenario: ``tenants`` copies of its trace population, all present at
-    t=0 with effectively infinite durations (the bench window never drains
-    the cluster), placed on wrap-around consecutive GPU ranges so ring
-    edges pile onto shared host links and rack uplinks — the
-    allocator-bound multi-tenant regime the vectorized engine targets."""
-    from repro.cluster.job import JobState
+    scenario: ``tenants`` copies of its trace population in the shared
+    :func:`repro.cluster.contended_snapshot` wrap-around pile-up — the
+    allocator-bound multi-tenant regime the vectorized engine and the
+    incremental re-solver target (the bench window never drains it)."""
+    from repro.cluster import contended_snapshot
     from repro.engine.scenarios import get_scenario
 
     spec = get_scenario(f"rack-scaling-{racks}")
     topo = spec.topology()
-    jobs = []
-    for t in range(tenants):
-        pop = spec.trace(topo)
-        for j in pop:
-            j.job_id = f"t{t}-{j.job_id}"
-        jobs.extend(pop)
-    cursor, total = 0, topo.num_gpus
-    for j in jobs:
-        j.arrival_ms = 0.0
-        j.duration_iters = 10**9
-        j.placement = tuple((cursor + k) % total for k in range(j.num_workers))
-        cursor = (cursor + j.num_workers) % total
-        j.state = JobState.RUNNING
+    jobs = contended_snapshot(topo, lambda: spec.trace(topo), tenants=tenants)
     return topo, jobs
 
 

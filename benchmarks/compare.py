@@ -14,7 +14,9 @@ perf trajectory regresses:
   * a baseline row is missing from the current run (a silently dropped
     bench can never "pass" by absence);
   * a row's wall time drifted more than ``--threshold`` (default +20%)
-    above baseline;
+    above baseline — unless both sides sit below the ``--floor-us``
+    absolute floor (default 5ms), where relative drift is timer noise
+    and is reported as ``noise`` without failing the gate;
   * a *lost speedup assertion*: a row whose baseline ``speedup`` was
     ≥ 1.0 (a claimed win over some reference path) now measures < 1.0,
     or no longer reports a speedup at all.
@@ -65,6 +67,11 @@ DEFAULT_TREND_PLOT = os.path.join(
     os.path.dirname(__file__), "artifacts", "bench_trend.png"
 )
 DEFAULT_THRESHOLD = 0.20
+# Sub-floor rows are exempt from the *relative* drift gate: a 200us row
+# drifting +30% is 60us of timer jitter, not a regression.  A row only
+# faces the relative gate once either side of the diff reaches this wall
+# time (the speedup gates still apply below the floor).
+DEFAULT_FLOOR_US = 5_000.0
 TREND_RUNS = 5
 TREND_PLOT_RUNS = 20
 
@@ -233,6 +240,7 @@ def compare(
     current: dict[str, dict],
     baseline: dict[str, dict],
     threshold: float,
+    floor_us: float = DEFAULT_FLOOR_US,
 ) -> tuple[list[tuple], list[str]]:
     """Returns (table_rows, failures).  Each table row is
     ``(name, base_us, cur_us, delta_str, base_speedup, cur_speedup,
@@ -251,11 +259,17 @@ def compare(
         delta = (c_us - b_us) / b_us if b_us else 0.0
         status = "ok"
         if delta > threshold:
-            status = "SLOWER"
-            failures.append(
-                f"row {name!r} wall time drifted +{delta:.0%} "
-                f"({fmt_us(b_us)}us → {fmt_us(c_us)}us, gate +{threshold:.0%})"
-            )
+            # absolute floor: relative drift on sub-floor rows is timer
+            # noise, not signal — report it, but never fail the gate on it
+            if max(b_us or 0.0, c_us or 0.0) < floor_us:
+                status = "noise"
+            else:
+                status = "SLOWER"
+                failures.append(
+                    f"row {name!r} wall time drifted +{delta:.0%} "
+                    f"({fmt_us(b_us)}us → {fmt_us(c_us)}us, "
+                    f"gate +{threshold:.0%})"
+                )
         b_sp, c_sp = b.get("speedup"), c.get("speedup")
         if isinstance(b_sp, (int, float)) and b_sp >= 1.0:
             if not isinstance(c_sp, (int, float)) or c_sp < 1.0:
@@ -287,7 +301,7 @@ def render_markdown(table, failures, threshold, wall_note, trends=None) -> str:
         "|---|---:|---:|---:|---:|---:|" + ("---|" if trend_col else "") + "---|",
     ]
     for name, b_us, c_us, delta, b_sp, c_sp, status in table:
-        mark = {"ok": "✅", "new": "🆕"}.get(status, "❌")
+        mark = {"ok": "✅", "new": "🆕", "noise": "✅"}.get(status, "❌")
         trend = f" {trends.get(name, '—')} |" if trend_col else ""
         lines.append(
             f"| `{name}` | {fmt_us(b_us)} | {fmt_us(c_us)} | {delta} "
@@ -318,6 +332,10 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                     help="max tolerated per-row wall-time drift "
                          "(fraction, default 0.20)")
+    ap.add_argument("--floor-us", type=float, default=DEFAULT_FLOOR_US,
+                    help="absolute wall floor (us) below which relative "
+                         "drift is treated as timer noise and never fails "
+                         f"the gate (default {DEFAULT_FLOOR_US:g})")
     ap.add_argument("--summary", default=None, metavar="PATH",
                     help="append the markdown delta table to PATH "
                          "(CI: $GITHUB_STEP_SUMMARY)")
@@ -358,7 +376,9 @@ def main() -> None:
 
     current, cur_doc = load_rows(args.current)
     baseline, base_doc = load_rows(args.baseline)
-    table, failures = compare(current, baseline, args.threshold)
+    table, failures = compare(
+        current, baseline, args.threshold, floor_us=args.floor_us
+    )
     if "failed" in cur_doc:
         failures.insert(0, f"current bench run failed its own gate: "
                            f"{cur_doc['failed']}")

@@ -327,6 +327,14 @@ def _fluid_advance_bench():
     and at 64 racks the vectorized engine must be ≥ 5x faster — the gate
     that keeps rack-scale scenario sweeps affordable as the fluid model
     grows.
+
+    The 256/1024-rack rows bench the *incremental re-solver*: the
+    delta-maintained water-filling state with dirty-component refills
+    against the per-set from-scratch solve, same vectorized event loop on
+    both sides.  Gates: ≥ 3x at both sizes, and the two engines must
+    complete the same total iteration count over the window (the
+    incremental path is tolerance-band equivalent, so per-iteration float
+    traces may differ in the last bits — the aggregate must not).
     """
     from repro.cluster import FluidNetworkSim
 
@@ -374,6 +382,49 @@ def _fluid_advance_bench():
                 f"vectorized fluid advance must be >={gate:g}x over the "
                 f"scalar allocator at {racks} racks: {speedup:.2f}x "
                 f"(scalar={us_scal:.0f}us vectorized={us_vec:.0f}us)"
+            )
+
+    def run_incr(racks, incremental, window_ms):
+        topo, jobs = fluid_advance_case(racks)
+        sim = FluidNetworkSim(topo, vectorized=True, incremental=incremental)
+        sim.configure(jobs)
+        sim.advance(window_ms)
+        return sim, jobs
+
+    for racks, window_ms in ((256, 1_200.0), (1024, 350.0)):
+        (sim_i, jobs_i), us_inc = timed(
+            lambda: run_incr(racks, True, window_ms), repeat=1
+        )
+        (sim_s, jobs_s), us_scr = timed(
+            lambda: run_incr(racks, False, window_ms), repeat=1
+        )
+        speedup = us_scr / us_inc
+        iters_i = sum(j.iters_done for j in jobs_i)
+        iters_s = sum(j.iters_done for j in jobs_s)
+        yield {
+            "name": f"fluid_advance/rack-scaling-{racks}",
+            "us_per_call": us_inc,
+            "speedup": speedup,
+            "derived": (
+                f"from_scratch={us_scr:.0f}us speedup={speedup:.2f}x "
+                f"({len(jobs_i)} jobs, {racks} racks, {window_ms:g}ms "
+                f"window, {iters_i} iterations; "
+                f"{sim_i.alloc_delta_solves}/{sim_i.alloc_solves} delta "
+                f"solves)"
+            ),
+        }
+        # gates after the yield: the measured row stays in the artifact
+        if iters_i != iters_s:
+            raise RuntimeError(
+                f"incremental fluid engine diverged from the from-scratch "
+                f"solve at {racks} racks: {iters_i} vs {iters_s} total "
+                f"iterations over the {window_ms:g}ms window"
+            )
+        if speedup < 3.0:
+            raise RuntimeError(
+                f"incremental re-solver must be >=3x over the per-set "
+                f"from-scratch solve at {racks} racks: {speedup:.2f}x "
+                f"(from_scratch={us_scr:.0f}us incremental={us_inc:.0f}us)"
             )
 
 

@@ -8,6 +8,7 @@ from .topology import Link, LinkIncidence, Topology
 from .traces import (
     ARRIVAL_PATTERNS,
     arrival_trace,
+    contended_snapshot,
     dynamic_trace,
     iter_arrival_trace,
     iter_poisson_trace,
@@ -31,6 +32,7 @@ __all__ = [
     "iter_poisson_trace",
     "dynamic_trace",
     "snapshot_trace",
+    "contended_snapshot",
     "arrival_trace",
     "iter_arrival_trace",
     "ARRIVAL_PATTERNS",

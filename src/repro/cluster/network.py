@@ -57,6 +57,11 @@ __all__ = ["Segment", "segments_from_pattern", "FluidNetworkSim"]
 # guards pathological drift from unbounded memory growth.
 _ALLOC_CACHE_MAX = 4096
 
+# Delta solves between from-scratch rebuilds of the incremental solver's
+# per-link demand accumulators: bounds float drift from repeated ± deltas
+# (each rebuild resets demand to one exact left-to-right bincount sum).
+_WF_REFRESH = 64
+
 _EPS = 1e-9
 
 
@@ -75,7 +80,18 @@ class Segment:
 
 def segments_from_pattern(pattern: CommPattern) -> list[Segment]:
     """Convert a (possibly overlapping-phase) pattern into alternating
-    compute/comm segments with piecewise-constant demand."""
+    compute/comm segments with piecewise-constant demand.
+
+    The segments **exactly tile** ``[0, iter_time_ms)``: every cut interval
+    contributes its full width to some segment.  Sub-``_EPS`` sliver
+    intervals (nearly-coincident cut points from wrapped/overlapping
+    phases) are folded into the neighbouring segment's duration instead of
+    being dropped — the conservation error of billing a sliver at its
+    neighbour's demand level is at most ``gbps × _EPS`` Gbit, while
+    dropping it used to leave a tiling gap that desynchronized iteration
+    boundaries from ``iter_time_ms`` (tests/test_segments.py pins both the
+    tiling and the Gbit-conservation invariants).
+    """
     t = pattern.iter_time_ms
     points = {0.0, t}
     for ph in pattern.phases:
@@ -85,17 +101,32 @@ def segments_from_pattern(pattern: CommPattern) -> list[Segment]:
             points.add(((ph.start_ms % t) + ph.duration_ms) % t)
     cuts = sorted(points)
     segs: list[Segment] = []
+    carry = 0.0  # sliver width owed to the next emitted segment
     for a, b in zip(cuts, cuts[1:]):
         if b - a < _EPS:
+            # sliver: fold its width into a neighbour, never drop it
+            if segs:
+                segs[-1].duration_ms += b - a
+            else:
+                carry += b - a
             continue
         mid = 0.5 * (a + b)
         level = float(pattern.demand_at(mid))
-        if segs and (segs[-1].gbps - level) == 0.0 and (level > 0) == (segs[-1].kind == "comm"):
-            segs[-1].duration_ms += b - a
-        elif level > _EPS:
-            segs.append(Segment("comm", b - a, level))
+        kind = "comm" if level > _EPS else "compute"
+        gbps = level if kind == "comm" else 0.0
+        width = (b - a) + carry
+        carry = 0.0
+        if segs and segs[-1].kind == kind and (segs[-1].gbps - gbps) == 0.0:
+            segs[-1].duration_ms += width
+        elif kind == "comm":
+            segs.append(Segment("comm", width, gbps))
         else:
-            segs.append(Segment("compute", b - a))
+            segs.append(Segment("compute", width))
+    if carry:
+        if segs:
+            segs[-1].duration_ms += carry
+        else:
+            segs.append(Segment("compute", carry))
     if not segs:
         segs.append(Segment("compute", t))
     return segs
@@ -148,6 +179,7 @@ class FluidNetworkSim:
         drift_tolerance: float = 0.05,
         congested_efficiency: float = 0.88,
         vectorized: bool = True,
+        incremental: bool = False,
         seed: int = 0,
     ) -> None:
         # DCQCN under congestion does not achieve the full link rate: the
@@ -164,12 +196,23 @@ class FluidNetworkSim:
         self.now_ms: float = 0.0
         self._execs: dict[str, _JobExec] = {}
         self.vectorized = vectorized
+        # incremental water-filling re-solve (256+-rack fabrics): cache
+        # misses delta-update per-link demand/live state from the previous
+        # solve and fill only the links that can actually saturate.  Rates
+        # then match the scalar oracle within documented tolerance bands
+        # rather than bit-exactly; the default (False) keeps the bit-exact
+        # from-scratch solve.  Meaningful only on the vectorized engine.
+        self.incremental = bool(incremental and vectorized)
         # telemetry: how many allocations were actually *solved* (cache
         # misses) on the vectorized path — the invalidation tests pin that
         # compute-only segment churn does not grow this — and how many
         # were answered from the cache (serve-mode telemetry)
         self.alloc_solves: int = 0
         self.alloc_hits: int = 0
+        # telemetry: solves answered by the delta path (vs from-scratch
+        # state rebuilds within the incremental solver)
+        self.alloc_delta_solves: int = 0
+        self._wf: dict | None = None  # incremental link-state (see _solve_alloc_incremental)
         # array-resident engine state, rebuilt by _build_arrays on configure
         self._slots: list[_JobExec] = []
         self._slot_of: dict[str, int] = {}
@@ -327,13 +370,9 @@ class FluidNetworkSim:
         self._segi = np.append(self._segi, np.int32(0))
         self._is_comm = np.append(self._is_comm, False)
         self._alive = np.append(self._alive, True)
-        self._col_counts = np.append(self._col_counts, cols.shape[0])
-        self._col_offsets = np.append(
-            self._col_offsets, self._col_offsets[-1] + cols.shape[0]
-        )
-        self._cols_flat = np.concatenate(
-            [self._cols_flat, cols.astype(np.int64)]
-        )
+        # the incremental solver's link-state is per-slot: the new slot
+        # axis invalidates it (rebuilt from scratch at the next solve)
+        self._wf = None
         self._sync_seg(i, ex)
 
     def remove_job(self, job_id: str) -> Job:
@@ -365,24 +404,12 @@ class FluidNetworkSim:
         self._sync_seg(i, ex)
         if migrated:
             # the slot's link columns change under the cache keys' feet:
-            # this is the one delta op that must drop the cache
+            # this is the one delta op that must drop the cache (and the
+            # incremental solver's per-link demand/live state with it)
             cols = self.topo.job_link_ids(job.placement)
-            rows = self._inc.rows
-            self._inc = LinkIncidence(
-                rows=rows[:i] + (cols,) + rows[i + 1:],
-                capacities=self._inc.capacities,
-                num_links=self._inc.num_links,
-            )
-            self._col_counts[i] = cols.shape[0]
-            self._col_offsets = np.concatenate(
-                ([0], np.cumsum(self._col_counts))
-            )
-            self._cols_flat = (
-                np.concatenate([r.astype(np.int64) for r in self._inc.rows])
-                if self._col_counts.sum()
-                else np.zeros(0, dtype=np.int64)
-            )
+            self._inc = self._inc.replace_row(i, cols)
             self._alloc_cache.clear()
+            self._wf = None
 
     def configure_incremental(self, jobs: list[Job]) -> str:
         """Apply an epoch decision as slot deltas when the membership diff
@@ -551,23 +578,10 @@ class FluidNetworkSim:
         self._segi = np.zeros(n, dtype=np.int32)
         self._is_comm = np.zeros(n, dtype=bool)
         self._alive = np.ones(n, dtype=bool)
-        # flat job-major incidence: slot i's link columns occupy
-        # cols_flat[offsets[i]:offsets[i+1]] — selecting a comm subset and
-        # accumulating per-link demand are then pure array ops
-        self._col_counts = np.array(
-            [r.shape[0] for r in self._inc.rows], dtype=np.int64
-        )
-        self._col_offsets = np.concatenate(
-            ([0], np.cumsum(self._col_counts))
-        )
-        self._cols_flat = (
-            np.concatenate([r.astype(np.int64) for r in self._inc.rows])
-            if n and self._col_counts.sum()
-            else np.zeros(0, dtype=np.int64)
-        )
         for i, ex in enumerate(self._slots):
             self._sync_seg(i, ex)
         self._alloc_cache.clear()
+        self._wf = None
 
     def _sync_seg(self, i: int, ex: _JobExec) -> None:
         """Refresh slot ``i``'s segment-derived columns (on transition)."""
@@ -611,10 +625,18 @@ class FluidNetworkSim:
         hit = self._alloc_cache.get(key)
         if hit is not None:
             self.alloc_hits += 1
+            # LRU touch: re-insertion moves the key to the dict's tail, so
+            # eviction below always removes the least-recently-used entry
+            self._alloc_cache[key] = self._alloc_cache.pop(key)
         else:
-            if len(self._alloc_cache) >= _ALLOC_CACHE_MAX:
-                self._alloc_cache.clear()
-            rates, marks = self._solve_alloc(comm_mask)
+            while len(self._alloc_cache) >= _ALLOC_CACHE_MAX:
+                # evict only the LRU entry — a cold scan of fresh comm-sets
+                # (256+-rack churn) must not wipe the hot working set
+                del self._alloc_cache[next(iter(self._alloc_cache))]
+            if self.incremental:
+                rates, marks = self._solve_alloc_incremental(comm_mask)
+            else:
+                rates, marks = self._solve_alloc(comm_mask)
             hit = (rates, marks, rates > _EPS)
             self._alloc_cache[key] = hit
             self.alloc_solves += 1
@@ -642,9 +664,11 @@ class FluidNetworkSim:
         if k == 0:
             return rates, marks
         caps_j = self._cap_now[idx]
-        # flat (job-major) view of the comm subset's incidence
-        counts = self._col_counts[idx]
-        cols_sub = self._cols_flat[np.repeat(comm_mask, self._col_counts)]
+        # flat (job-major) view of the comm subset's incidence — the CSR
+        # gather returns columns in exactly the job-major order the scalar
+        # dicts iterate, so the bincount sums below stay bit-exact
+        counts = self._inc.counts[idx]
+        cols_sub = self._inc.flat_cols(idx)
         job_rep = np.repeat(np.arange(k), counts)
         caps_rep = np.repeat(caps_j, counts)
         nl = self._inc.num_links
@@ -734,6 +758,353 @@ class FluidNetworkSim:
             contrib = exc[lm] * (cm / demand[lm]) * 1e-3 * self.ecn_marks_per_gbit
             marks[idx] = np.bincount(jm, weights=contrib, minlength=k)
         return rates, marks
+
+    # ------------------ incremental water-filling ----------------- #
+    def _solve_alloc_incremental(
+        self, comm_mask: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Water-filling via delta-maintained state and dirty-component
+        refills.
+
+        At 256+ racks adjacent comm-competing sets differ by one or two
+        jobs, yet the from-scratch solve re-accumulates demand and live
+        counts over *every* member and re-runs the filling cascade over
+        *every* contended link.  This path keeps the full solution between
+        solves — per-link demand / live counts / mark ratios, per-slot
+        rates and per-job mark totals — and applies the member diff as
+        batched ``np.bincount`` deltas over only the changed slots' link
+        columns, O(changed nnz) instead of O(comm nnz).
+
+        Rates exploit that water-filling decomposes exactly across
+        connected components of the (member job × binding link) graph —
+        the same loosely-connected affinity-graph structure the paper's
+        scheduler partitions (§4): components share no links and no jobs,
+        so each one's cascade is independent of the rest.  A delta dirties
+        only the components touching a changed slot or a demand-changed
+        binding link; a seed-driven BFS walks exactly those components
+        (output-sensitive — clean components are never visited) and ONE
+        batched fill re-solves their union (independent sub-problems solve
+        jointly without interacting), while every clean component keeps
+        its previous rates verbatim.  Mark totals are maintained the same
+        way: per-link ``max(excess,0)/demand`` ratios are patched on the
+        changed links and scattered into per-job totals through the
+        link-major CSR.
+
+        Equivalence is by tolerance band, not bit-exactness (see
+        docs/architecture.md "Incremental re-solve"): demand/mark sums
+        float-drift under ± deltas (bounded by a from-scratch refresh
+        every ``_WF_REFRESH`` delta solves) and component-local fills
+        reorder float accumulation.  ``incremental=False`` (the default)
+        never enters this path and stays bit-exact against the scalar
+        oracle.
+        """
+        n = len(self._slots)
+        caps_now = np.where(comm_mask, self._cap_now, 0.0)
+        st = self._wf
+        if st is None or st["caps"].shape[0] != n or st["age"] >= _WF_REFRESH:
+            st = self._wf_rebuild(comm_mask, caps_now)
+        else:
+            changed = np.nonzero(
+                (st["mask"] != comm_mask) | (st["caps"] != caps_now)
+            )[0]
+            if changed.size:
+                self._wf_delta(st, comm_mask, caps_now, changed)
+            st["age"] += 1
+            self.alloc_delta_solves += 1
+        # T accumulates ± ratio deltas between refreshes — clamp the tiny
+        # negative float residue so mark rates stay ≥ 0 like the oracle's
+        marks = caps_now * np.maximum(st["T"], 0.0)
+        marks *= 1e-3 * self.ecn_marks_per_gbit
+        return st["rates"].copy(), marks
+
+    def _wf_rebuild(self, comm_mask: np.ndarray, caps_now: np.ndarray) -> dict:
+        """From-scratch build of the incremental solver state."""
+        inc = self._inc
+        n = len(self._slots)
+        nl = inc.num_links
+        cap_l = inc.capacities
+        idx = np.nonzero(comm_mask)[0]
+        cols = inc.flat_cols(idx)
+        w = np.repeat(caps_now[idx], inc.counts[idx])
+        # bincount returns int64 for *empty* weights — pin float64
+        demand = np.bincount(cols, weights=w, minlength=nl).astype(np.float64)
+        live = np.bincount(cols, minlength=nl).astype(np.int64)
+        exc = demand - cap_l
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lratio = np.where(exc > 0, exc / demand, 0.0)
+        rows_all, cols_all = inc.flat_pairs
+        T = np.bincount(
+            rows_all, weights=lratio[cols_all], minlength=n
+        ).astype(np.float64)
+        eff = np.where(demand > cap_l + _EPS, self.congested_efficiency, 1.0)
+        binding = (live > 0) & (demand >= cap_l * eff - _EPS)
+        rates = np.zeros(n, dtype=np.float64)
+        rates[idx] = caps_now[idx]
+        if binding.any():
+            bpair = binding[cols_all] & comm_mask[rows_all]
+            JR = np.unique(rows_all[bpair])
+            if JR.size:
+                rates[JR] = self._wf_fill_core(JR, binding, demand, live)
+        self._wf = st = {
+            "mask": comm_mask.copy(),
+            "caps": caps_now,
+            "demand": demand,
+            "live": live,
+            "lratio": lratio,
+            "T": T,
+            "binding": binding,
+            "rates": rates,
+            "age": 0,
+        }
+        return st
+
+    def _wf_delta(
+        self,
+        st: dict,
+        comm_mask: np.ndarray,
+        caps_now: np.ndarray,
+        changed: np.ndarray,
+    ) -> None:
+        """Apply a member diff to the state and refill dirty components."""
+        inc = self._inc
+        nl = inc.num_links
+        cap_l = inc.capacities
+        ccols = inc.flat_cols(changed)
+        reps = inc.counts[changed]
+        dcap = np.repeat(caps_now[changed] - st["caps"][changed], reps)
+        demand = st["demand"]
+        demand += np.bincount(ccols, weights=dcap, minlength=nl)
+        dmem = (
+            comm_mask[changed].astype(np.int64)
+            - st["mask"][changed].astype(np.int64)
+        )
+        if dmem.any():
+            # sums of ±1 in float64 are exact — astype is lossless
+            st["live"] += np.bincount(
+                ccols, weights=np.repeat(dmem, reps), minlength=nl
+            ).astype(np.int64)
+        live = st["live"]
+        st["mask"] = comm_mask.copy()
+        st["caps"] = caps_now
+        # mark ratios move only where demand moved; scatter the per-link
+        # delta into the per-job totals through the link-major CSR
+        cl = np.unique(ccols)
+        exc = demand[cl] - cap_l[cl]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            new_r = np.where(exc > 0, exc / demand[cl], 0.0)
+        dr = new_r - st["lratio"][cl]
+        if dr.any():
+            st["T"] += np.bincount(
+                inc.link_users(cl),
+                weights=np.repeat(dr, inc.link_csr[1][cl]),
+                minlength=st["T"].size,
+            )
+            st["lratio"][cl] = new_r
+        # binding flips can only happen on the demand-changed links
+        binding = st["binding"]
+        b_old = binding[cl]
+        eff = np.where(demand[cl] > cap_l[cl] + _EPS, self.congested_efficiency, 1.0)
+        b_new = (live[cl] > 0) & (demand[cl] >= cap_l[cl] * eff - _EPS)
+        binding[cl] = b_new
+        # dirty slots: the changed members themselves, plus every user of a
+        # changed link that is (or just stopped being) contended — slots in
+        # clean components are untouched and keep their previous rates
+        dlinks = cl[b_old | b_new]
+        dirty = np.concatenate((changed, inc.link_users(dlinks)))
+        rates = st["rates"]
+        # members default to their demand caps (exact for every slot with
+        # no binding link — sub-binding links can never saturate), then the
+        # component refill overwrites the contended ones
+        rates[dirty] = caps_now[dirty]
+        # seed-driven BFS over the (member × binding-link) graph: visits
+        # exactly the dirty components, never the clean ones
+        rows_l, link_rows = inc.adjacency
+        seenL: set[int] = set()
+        stack: list[int] = []
+        for lnk in dlinks.tolist():
+            if binding[lnk] and lnk not in seenL:
+                seenL.add(lnk)
+                stack.append(lnk)
+        for s in dirty.tolist():
+            if comm_mask[s]:
+                for g in rows_l[s]:
+                    if g not in seenL and binding[g]:
+                        seenL.add(g)
+                        stack.append(g)
+        if not stack:
+            return  # no contended component touched
+        JRs: set[int] = set()
+        while stack:
+            lnk = stack.pop()
+            for u in link_rows[lnk]:
+                if u not in JRs and comm_mask[u]:
+                    JRs.add(u)
+                    for g in rows_l[u]:
+                        if g not in seenL and binding[g]:
+                            seenL.add(g)
+                            stack.append(g)
+        if not JRs:
+            return
+        sub_binding = np.zeros(nl, dtype=bool)
+        sub_binding[sorted(seenL)] = True
+        JR = np.fromiter(sorted(JRs), dtype=np.int64, count=len(JRs))
+        rates[JR] = self._wf_fill_core(JR, sub_binding, demand, live)
+
+    def _wf_fill_core(
+        self,
+        idx: np.ndarray,
+        binding: np.ndarray,
+        demand: np.ndarray,
+        live: np.ndarray,
+    ) -> np.ndarray:
+        """Progressive filling over only the links that can saturate.
+
+        A link with ``demand < capacity·eff − ε`` can never bound a filling
+        increment: its remaining/live ratio strictly exceeds the smallest
+        cap slack among its users at every round (each user's rate is
+        capped by its demand contribution, so the link retains headroom
+        until every user freezes at cap).  Dropping those links — and every
+        job incident to *no* surviving link, which simply freezes at its
+        demand cap — shrinks the filling loop's axes from (comm jobs, all
+        links) to (contended jobs, contended links), typically a small
+        constant at 256+ racks.  Frozen-at-cap rates agree with the oracle
+        to ≤ ε (the oracle freezes at cap-slack ≤ ε); everything else is
+        the same progressive-filling recurrence on fewer axes.
+
+        ``idx`` is the candidate slot set (the comm members on a rebuild, a
+        dirty-component union on a delta); ``binding`` restricts the link
+        axis the same way.  Returns the rates for ``idx`` in order.
+        """
+        n = len(self._slots)
+        k = idx.size
+        caps_j = self._cap_now[idx]
+        r = caps_j.copy()
+        nl = self._inc.num_links
+        cap_l = self._inc.capacities
+        counts = self._inc.counts[idx]
+        cols_sub = self._inc.flat_cols(idx)
+        job_rep = np.repeat(np.arange(k), counts)
+        bsel = binding[cols_sub]
+        jb = job_rep[bsel]
+        B = np.nonzero(binding)[0]
+        bound = np.zeros(k, dtype=bool)
+        bound[jb] = True
+        J = np.nonzero(bound)[0]
+        m = J.size
+        L = B.size
+        if m == 0 or L == 0:
+            return r
+        slotJ = idx[J]
+        # Freeze events are scalar-sparse (each job freezes once, touching
+        # a handful of links), so the loop keeps vector state only for the
+        # per-round ratio min and does freeze bookkeeping through python
+        # adjacency lists.  Dead links never leave the arrays: a saturated
+        # link gets remaining=inf, live=BIG so its ratio pins at inf and
+        # stray decrements stay harmless — no per-round masking at all.
+        rows_l, link_rows = self._inc.adjacency
+        BIG = 1e300
+        lpos = np.full(nl, L, dtype=np.int64)  # sentinel L → dummy tail
+        lpos[B] = np.arange(L)
+        # Per-link *absolute* saturation level: with Rem_l = limit_l minus
+        # the rates of its frozen users, a link saturates when the shared
+        # water level reaches Rem_l / lv_l.  The level is invariant under
+        # rounds that do not freeze one of the link's users, so each round
+        # costs one reduction over the level array plus O(affected) updates
+        # — no full rem/live rewrite.  The dummy tail slot absorbs
+        # decrements for links outside the binding set (lpos sentinel).
+        db = demand[B]
+        clb = cap_l[B]
+        eff_b = np.where(db > clb + _EPS, self.congested_efficiency, 1.0)
+        Rem = np.empty(L + 1, dtype=np.float64)
+        Rem[:L] = clb * eff_b
+        Rem[L] = math.inf
+        lv = np.empty(L + 1, dtype=np.float64)
+        lv[:L] = live[B]
+        lv[L] = BIG
+        level = np.empty(L + 1, dtype=np.float64)
+        np.divide(Rem, lv, out=level)
+        B_list = B.tolist()
+        slotJ_list = slotJ.tolist()
+        unfrozen_slot = bytearray(n)
+        for s in slotJ_list:
+            unfrozen_slot[s] = 1
+        order = np.argsort(caps_j[J], kind="stable")
+        caps_sorted = caps_j[J][order].tolist()
+        slot_order = slotJ[order].tolist()
+        frozen_slots: list[int] = []
+        frozen_vals: list[float] = []
+        dec_gids: list[int] = []
+        dec_vals: list[float] = []  # per frozen job: rate, fan-out
+        dec_lens: list[int] = []
+        n_unfrozen = m
+        r_cur = 0.0
+        ptr = 0
+        inf = math.inf
+        fmin_reduce = np.fmin.reduce
+        with np.errstate(divide="ignore", invalid="ignore"):
+            while n_unfrozen:
+                S = float(fmin_reduce(level))
+                while ptr < m and not unfrozen_slot[slot_order[ptr]]:
+                    ptr += 1
+                if ptr < m and caps_sorted[ptr] <= S + _EPS:
+                    # batched cap freezes: every unfrozen cap ≤ S takes its
+                    # final rate now — freezing a user below a link's level
+                    # only raises that level ((level−c)/(lv−1) ≥ 0), so no
+                    # link can saturate before the water reaches S
+                    while ptr < m and caps_sorted[ptr] <= S + _EPS:
+                        s = slot_order[ptr]
+                        if unfrozen_slot[s]:
+                            unfrozen_slot[s] = 0
+                            n_unfrozen -= 1
+                            c = caps_sorted[ptr]
+                            if c > r_cur:
+                                r_cur = c
+                            frozen_slots.append(s)
+                            frozen_vals.append(c)
+                            row = rows_l[s]
+                            dec_gids.extend(row)
+                            dec_vals.append(c)
+                            dec_lens.append(len(row))
+                        ptr += 1
+                else:
+                    if S == inf:
+                        break
+                    r_cur = S
+                    for p in np.nonzero(level == S)[0].tolist():
+                        for s in link_rows[B_list[p]]:
+                            if unfrozen_slot[s]:
+                                unfrozen_slot[s] = 0
+                                n_unfrozen -= 1
+                                frozen_slots.append(s)
+                                frozen_vals.append(S)
+                                row = rows_l[s]
+                                dec_gids.extend(row)
+                                dec_vals.append(S)
+                                dec_lens.append(len(row))
+                    if not dec_gids:
+                        break  # defensive: argmin link had no live users
+                pos = lpos[np.array(dec_gids, dtype=np.int64)]
+                w = np.repeat(dec_vals, dec_lens)
+                Rem -= np.bincount(pos, weights=w, minlength=L + 1)
+                lv -= np.bincount(pos, minlength=L + 1)
+                # drained links (lv → 0) pin at +inf; the 1e-300 floor keeps
+                # float drift in Rem from producing -inf/NaN levels
+                np.divide(np.maximum(Rem, 1e-300), lv, out=level)
+                dec_gids.clear()
+                dec_vals.clear()
+                dec_lens.clear()
+        if n_unfrozen:
+            for s in slotJ_list:
+                if unfrozen_slot[s]:
+                    frozen_slots.append(s)
+                    frozen_vals.append(r_cur)
+        if frozen_slots:
+            # frozen bookkeeping runs on global slot ids — map back to
+            # positions within idx for the (len idx) result
+            loc = np.zeros(n, dtype=np.int64)
+            loc[idx] = np.arange(k)
+            r[loc[np.array(frozen_slots, dtype=np.int64)]] = frozen_vals
+        return r
 
     # -------------------------------------------------------------- #
     def advance(self, until_ms: float, *, max_events: int = 2_000_000) -> list[Job]:

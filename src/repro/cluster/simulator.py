@@ -130,6 +130,7 @@ class ClusterSimulator:
         migration_pause_ms: float = 1000.0,
         congested_efficiency: float = 0.88,
         vectorized: bool = True,
+        incremental: bool = False,
         seed: int = 0,
     ) -> None:
         self.topo = topology
@@ -141,6 +142,7 @@ class ClusterSimulator:
             migration_pause_ms=migration_pause_ms,
             congested_efficiency=congested_efficiency,
             vectorized=vectorized,
+            incremental=incremental,
             seed=seed,
         )
         self.decisions: list[tuple[float, Decision]] = []

@@ -23,6 +23,7 @@ counts its 48 links.
 
 from __future__ import annotations
 
+import functools
 import hashlib
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
@@ -43,54 +44,234 @@ class Link:
         return self.name
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class LinkIncidence:
-    """Array-resident job×link incidence of one running set.
+    """CSR-style job×link incidence of one running set.
 
-    Built once per :meth:`Topology.incidence` call (i.e. once per
-    ``FluidNetworkSim.configure``, never per event): ``rows[j]`` holds job
-    ``j``'s traversed links as global link-id columns (in ``job_links``
-    order), ``capacities`` is the topology's global per-link capacity
-    vector, and ``matrix`` materializes the dense boolean incidence for
-    whole-matrix consumers (tests, invariant probes).
+    Job ``j``'s traversed links (global link-id columns, in ``job_links``
+    order) occupy ``cols_flat[starts[j] : starts[j] + counts[j]]``.  Rows
+    share one flat backing store but need not be stored contiguously or in
+    job order: the delta helpers append new/replacement rows at the store's
+    high-water mark and leave holes behind removed rows, so ``with_row`` /
+    ``replace_row`` / ``without_row`` touch O(changed-row nnz) column
+    memory (plus an O(jobs) ``starts``/``counts`` copy) instead of
+    re-walking every unchanged job — the dense per-event rebuild the serve
+    path used to pay.  A compacting copy runs only when the garbage
+    outgrows the live columns or the store runs out of append room.
+
+    Instances are immutable *values*: the backing store is shared between
+    delta-derived instances, but appends only ever write at or beyond the
+    shared high-water mark (the ``_used`` ownership token), which every
+    existing instance's rows live strictly below — a row view can never be
+    overwritten under a live reader.
     """
 
-    rows: tuple[np.ndarray, ...]   # per job: int32 global link-id columns
-    capacities: np.ndarray         # (num_links,) float64, topology-global
+    starts: np.ndarray     # (jobs,) int64: row j begins at cols_flat[starts[j]]
+    counts: np.ndarray     # (jobs,) int64: row j's column count
+    cols_flat: np.ndarray  # int32 backing store (capacity ≥ high-water mark)
+    capacities: np.ndarray  # (num_links,) float64, topology-global
     num_links: int
+    _used: list            # shared single-cell [high-water mark] token
+    _my_used: int          # high-water mark when this instance was created
+
+    @classmethod
+    def from_rows(
+        cls,
+        rows: Sequence[np.ndarray],
+        capacities: np.ndarray,
+        num_links: int,
+    ) -> "LinkIncidence":
+        rows = [np.asarray(r, dtype=np.int32) for r in rows]
+        counts = np.array([r.size for r in rows], dtype=np.int64)
+        bounds = np.concatenate(([0], np.cumsum(counts)))
+        nnz = int(bounds[-1])
+        # 25% append slack so the first few serve-mode arrivals extend in
+        # place instead of triggering an immediate copy-grow
+        store = np.empty(max(16, nnz + (nnz >> 2)), dtype=np.int32)
+        if nnz:
+            store[:nnz] = np.concatenate(rows)
+        return cls(
+            starts=bounds[:-1].copy(), counts=counts, cols_flat=store,
+            capacities=capacities, num_links=num_links,
+            _used=[nnz], _my_used=nnz,
+        )
+
+    @property
+    def num_rows(self) -> int:
+        return self.counts.size
+
+    @property
+    def rows(self) -> tuple[np.ndarray, ...]:
+        """Per-job column arrays (views into the shared store)."""
+        return tuple(
+            self.cols_flat[s: s + c]
+            for s, c in zip(self.starts.tolist(), self.counts.tolist())
+        )
 
     @property
     def matrix(self) -> np.ndarray:
         """(jobs, num_links) boolean incidence matrix."""
-        m = np.zeros((len(self.rows), self.num_links), dtype=bool)
+        m = np.zeros((self.counts.size, self.num_links), dtype=bool)
         for j, cols in enumerate(self.rows):
             m[j, cols] = True
         return m
 
+    @functools.cached_property
+    def adjacency(self) -> tuple[list[list[int]], list[list[int]]]:
+        """(row → link ids, link id → row ids) as plain python lists.
+
+        The incremental water-filling fill walks these during freeze
+        events (a handful of scalar hops per event); python lists beat
+        numpy scalar indexing by ~3x there.  Cached per instance — delta-
+        derived incidences rebuild it lazily on their first solve.
+        """
+        rows_l = [
+            self.cols_flat[s: s + c].tolist()
+            for s, c in zip(self.starts.tolist(), self.counts.tolist())
+        ]
+        link_rows: list[list[int]] = [[] for _ in range(self.num_links)]
+        for j, cols in enumerate(rows_l):
+            for g in cols:
+                link_rows[g].append(j)
+        return rows_l, link_rows
+
+    @functools.cached_property
+    def flat_pairs(self) -> tuple[np.ndarray, np.ndarray]:
+        """(row ids, link columns) of every (job, link) pair, job-major.
+
+        The whole-graph companion to :meth:`flat_cols`: compacted out of
+        the (possibly gappy) shared store once per instance, for passes
+        that scan every pair — binding-pair extraction, per-job mark
+        totals.  Both arrays are int64 and nnz-long.
+        """
+        cols = self.flat_cols(np.arange(self.counts.size))
+        rows = np.repeat(
+            np.arange(self.counts.size, dtype=np.int64), self.counts
+        )
+        return rows, cols
+
+    @functools.cached_property
+    def link_csr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Link-major CSR: (starts, counts, row ids) grouped by link.
+
+        The transpose gather of :attr:`flat_pairs` — ``row ids`` holds the
+        users of link 0, then link 1, …  The stable sort keeps each link's
+        users in ascending row order (the job-major input order), matching
+        :attr:`adjacency`'s ``link_rows`` lists.
+        """
+        rows, cols = self.flat_pairs
+        order = np.argsort(cols, kind="stable")
+        lcounts = np.bincount(cols, minlength=self.num_links).astype(np.int64)
+        lstarts = np.zeros(self.num_links, dtype=np.int64)
+        np.cumsum(lcounts[:-1], out=lstarts[1:])
+        return lstarts, lcounts, rows[order]
+
+    def link_users(self, links: np.ndarray) -> np.ndarray:
+        """Rows using links ``links``, concatenated link-major (int64)."""
+        lstarts, lcounts, lrows = self.link_csr
+        links = np.asarray(links, dtype=np.int64)
+        reps = lcounts[links]
+        total = int(reps.sum())
+        if total == 0:
+            return np.zeros(0, dtype=np.int64)
+        shift = np.zeros(links.size, dtype=np.int64)
+        np.cumsum(reps[:-1], out=shift[1:])
+        pos = np.repeat(lstarts[links] - shift, reps) + np.arange(total)
+        return lrows[pos]
+
+    def flat_cols(self, idx: np.ndarray) -> np.ndarray:
+        """Rows ``idx``'s link columns concatenated job-major (int64).
+
+        The allocator's gather: O(len(idx) + selected nnz) whatever the
+        store's total size, and the output order is exactly the job-major
+        order a contiguous CSR walk would produce — which is what keeps
+        the from-scratch water-filling solve bit-exact on top of the
+        non-contiguous delta store.
+        """
+        idx = np.asarray(idx, dtype=np.int64)
+        reps = self.counts[idx]
+        total = int(reps.sum())
+        if total == 0:
+            return np.zeros(0, dtype=np.int64)
+        shift = np.zeros(idx.size, dtype=np.int64)
+        np.cumsum(reps[:-1], out=shift[1:])
+        pos = np.repeat(self.starts[idx] - shift, reps) + np.arange(total)
+        return self.cols_flat[pos].astype(np.int64)
+
     # ------------------------- delta updates ---------------------- #
     # Serve mode reconfigures the running set one arrival/departure at a
-    # time; rebuilding the whole incidence per event re-walks every
-    # unchanged job.  These return an updated incidence touching only the
-    # affected row — bit-exact against a full :meth:`Topology.incidence`
-    # rebuild of the same running set (tests/test_serve_incremental.py).
+    # time.  These return an updated incidence touching only the affected
+    # row — bit-exact against a full :meth:`Topology.incidence` rebuild of
+    # the same running set (tests/test_serve_incremental.py).
     def with_row(self, row: np.ndarray) -> "LinkIncidence":
         """Incidence with one job's link columns appended (job arrival)."""
+        row = np.asarray(row, dtype=np.int32)
+        m = int(row.size)
+        live = int(self.counts.sum())
+        used = self._used[0]
+        if (
+            used == self._my_used                  # we own the store's tail
+            and used + m <= self.cols_flat.size    # room to append
+            and used - live <= max(64, live)       # garbage still bounded
+        ):
+            self.cols_flat[used: used + m] = row
+            self._used[0] = used + m
+            return LinkIncidence(
+                starts=np.append(self.starts, used),
+                counts=np.append(self.counts, m),
+                cols_flat=self.cols_flat,
+                capacities=self.capacities, num_links=self.num_links,
+                _used=self._used, _my_used=used + m,
+            )
+        # compact + grow: gather the live rows contiguously into a fresh
+        # store (rare path — amortized O(1) appends in between)
+        flat = self.flat_cols(np.arange(self.counts.size))
+        store = np.empty(max(16, 2 * (live + m)), dtype=np.int32)
+        store[:live] = flat
+        store[live: live + m] = row
+        counts = np.append(self.counts, m)
+        bounds = np.concatenate(([0], np.cumsum(counts)))
         return LinkIncidence(
-            rows=self.rows + (np.asarray(row, dtype=np.int32),),
-            capacities=self.capacities,
-            num_links=self.num_links,
+            starts=bounds[:-1].copy(), counts=counts, cols_flat=store,
+            capacities=self.capacities, num_links=self.num_links,
+            _used=[live + m], _my_used=live + m,
         )
 
     def without_row(self, index: int) -> "LinkIncidence":
-        """Incidence with job ``index``'s row removed (job departure)."""
-        if not 0 <= index < len(self.rows):
+        """Incidence with job ``index``'s row removed (job departure).
+
+        The removed row's columns stay behind as garbage in the shared
+        store (compacted by the next ``with_row`` that trips the bound).
+        """
+        if not 0 <= index < self.counts.size:
             raise IndexError(
-                f"incidence has {len(self.rows)} rows, no index {index}"
+                f"incidence has {self.counts.size} rows, no index {index}"
             )
         return LinkIncidence(
-            rows=self.rows[:index] + self.rows[index + 1:],
-            capacities=self.capacities,
-            num_links=self.num_links,
+            starts=np.delete(self.starts, index),
+            counts=np.delete(self.counts, index),
+            cols_flat=self.cols_flat,
+            capacities=self.capacities, num_links=self.num_links,
+            _used=self._used, _my_used=self._my_used,
+        )
+
+    def replace_row(self, index: int, row: np.ndarray) -> "LinkIncidence":
+        """Incidence with job ``index``'s columns rewritten (in-place
+        migration): the new columns are appended at the high-water mark and
+        the row repointed — the old columns become garbage."""
+        if not 0 <= index < self.counts.size:
+            raise IndexError(
+                f"incidence has {self.counts.size} rows, no index {index}"
+            )
+        grown = self.with_row(row)
+        starts = grown.starts[:-1].copy()
+        counts = grown.counts[:-1].copy()
+        starts[index] = grown.starts[-1]
+        counts[index] = grown.counts[-1]
+        return LinkIncidence(
+            starts=starts, counts=counts, cols_flat=grown.cols_flat,
+            capacities=self.capacities, num_links=self.num_links,
+            _used=grown._used, _my_used=grown._my_used,
         )
 
 
@@ -244,8 +425,8 @@ class Topology:
         incidence — and therefore everything the allocator derives from it
         — is a pure function of which jobs currently communicate.
         """
-        return LinkIncidence(
-            rows=tuple(self.job_link_ids(p) for p in placements),
+        return LinkIncidence.from_rows(
+            [self.job_link_ids(p) for p in placements],
             capacities=self.link_capacities,
             num_links=len(self.links),
         )

@@ -32,6 +32,7 @@ __all__ = [
     "iter_poisson_trace",
     "dynamic_trace",
     "snapshot_trace",
+    "contended_snapshot",
     "arrival_trace",
     "iter_arrival_trace",
     "ARRIVAL_PATTERNS",
@@ -257,4 +258,41 @@ def snapshot_trace(
                 batch_per_gpu=batch,
             )
         )
+    return jobs
+
+
+def contended_snapshot(
+    topology: Topology,
+    make_jobs,
+    *,
+    tenants: int = 2,
+    duration_iters: int = 10**9,
+) -> list[Job]:
+    """A maximally-contended steady state: ``tenants`` copies of a job
+    population, all present at t = 0 with effectively infinite durations,
+    placed on wrap-around consecutive GPU ranges so ring edges pile onto
+    shared host links and rack uplinks.
+
+    The allocator-bound multi-tenant regime the ``fluid_advance``
+    benchmarks and the incremental re-solver's rack-scaling parity tests
+    share — ``make_jobs`` is called once per tenant and must return a
+    fresh population each time (job objects are mutated in place).
+    """
+    from repro.cluster.job import JobState
+
+    jobs: list[Job] = []
+    for t in range(tenants):
+        pop = list(make_jobs())
+        for j in pop:
+            j.job_id = f"t{t}-{j.job_id}"
+        jobs.extend(pop)
+    cursor, total = 0, topology.num_gpus
+    for j in jobs:
+        j.arrival_ms = 0.0
+        j.duration_iters = duration_iters
+        j.placement = tuple(
+            (cursor + k) % total for k in range(j.num_workers)
+        )
+        cursor = (cursor + j.num_workers) % total
+        j.state = JobState.RUNNING
     return jobs

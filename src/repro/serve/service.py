@@ -86,6 +86,7 @@ class SchedulerService:
         migration_pause_ms: float = 1000.0,
         congested_efficiency: float = 0.88,
         vectorized: bool = True,
+        incremental: bool = False,
         seed: int = 0,
         queue_size: int = 1024,
         submit_timeout_s: float | None = None,
@@ -101,6 +102,7 @@ class SchedulerService:
             migration_pause_ms=migration_pause_ms,
             congested_efficiency=congested_efficiency,
             vectorized=vectorized,
+            incremental=incremental,
             seed=seed,
         )
         self.decisions: list[tuple[float, Decision]] = []
@@ -128,6 +130,11 @@ class SchedulerService:
             maxsize=queue_size
         )
         self._worker: threading.Thread | None = None
+        # exception that escaped the worker loop itself (not a per-request
+        # handler error): stored here and re-raised to the next caller, so
+        # a crashed worker fails fast instead of leaving requests queued
+        # forever against a silently dead service
+        self._worker_exc: BaseException | None = None
         self._closed = False
         if start:
             self.start()
@@ -141,14 +148,30 @@ class SchedulerService:
         )
         self._worker.start()
 
-    def close(self) -> None:
-        """Stop the worker after the queued requests finish."""
+    def close(self, timeout_s: float = 10.0) -> None:
+        """Stop the worker after the queued requests finish.
+
+        Joins with a timeout so a wedged (or already-crashed) worker can
+        never hang shutdown, and is idempotent — including after a worker
+        crash, where the queue may be full and the thread already dead.
+        """
         if self._closed:
             return
         self._closed = True
-        if self._worker is not None:
-            self._queue.put(_SHUTDOWN)
-            self._worker.join()
+        worker = self._worker
+        if worker is not None:
+            if worker.is_alive():
+                try:
+                    # a crashed worker stops consuming: don't block forever
+                    # trying to hand it the shutdown sentinel
+                    self._queue.put(_SHUTDOWN, timeout=timeout_s)
+                except queue.Full:
+                    pass
+            worker.join(timeout=timeout_s)
+            if worker.is_alive():
+                raise RuntimeError(
+                    f"serve worker did not stop within {timeout_s}s"
+                )
             self._worker = None
         self._join_prefetch()
         if self._prefetch_pool is not None:
@@ -169,6 +192,7 @@ class SchedulerService:
         """
         if self._closed:
             raise RuntimeError("service is closed")
+        self._check_worker()
         req = _Request(event=event)
         try:
             if self.submit_timeout_s is None:
@@ -192,11 +216,20 @@ class SchedulerService:
     def drain(self, horizon_ms: float) -> Metrics:
         """Process queued events, then run everything to ``horizon_ms``
         with batch-loop semantics; returns batch-identical Metrics."""
+        self._check_worker()
         fut: Future = Future()
         req = _Request(event=("__drain__", horizon_ms))  # type: ignore[arg-type]
         req.future = fut
         self._queue.put(req)
         return fut.result()
+
+    def _check_worker(self) -> None:
+        """Fail fast once the worker loop has died (vs hanging forever on
+        a Future no thread will ever resolve)."""
+        if self._worker_exc is not None:
+            raise RuntimeError(
+                "serve worker crashed; service is dead"
+            ) from self._worker_exc
 
     def telemetry(self) -> dict[str, float]:
         """Latency percentiles + counters + cache telemetry, one flat dict."""
@@ -212,26 +245,43 @@ class SchedulerService:
 
     # ---------------------- worker -------------------------------- #
     def _worker_loop(self) -> None:
-        while True:
-            item = self._queue.get()
-            if item is _SHUTDOWN:
-                break
-            req: _Request = item  # type: ignore[assignment]
-            kind = (
-                req.event[0].strip("_")
-                if isinstance(req.event, tuple)
-                else type(req.event).__name__
-            )
-            try:
-                result = self._handle(req.event)
-            except BaseException as exc:  # propagate to the caller
-                req.future.set_exception(exc)
-                self.metrics.count(f"{kind}_errors")
-            else:
-                req.future.set_result(result)
-                self.metrics.observe(
-                    kind, (time.perf_counter() - req.t_submit) * 1e3
+        try:
+            while True:
+                item = self._queue.get()
+                if item is _SHUTDOWN:
+                    break
+                req: _Request = item  # type: ignore[assignment]
+                kind = (
+                    req.event[0].strip("_")
+                    if isinstance(req.event, tuple)
+                    else type(req.event).__name__
                 )
+                try:
+                    result = self._handle(req.event)
+                except BaseException as exc:  # propagate to the caller
+                    req.future.set_exception(exc)
+                    self.metrics.count(f"{kind}_errors")
+                else:
+                    req.future.set_result(result)
+                    self.metrics.observe(
+                        kind, (time.perf_counter() - req.t_submit) * 1e3
+                    )
+        except BaseException as exc:
+            # anything escaping the loop body itself (result delivery,
+            # telemetry, queue internals) kills the worker: record it so
+            # submit/drain re-raise instead of enqueueing into a void, and
+            # fail whatever is already queued so no caller blocks forever
+            self._worker_exc = exc
+            self.metrics.count("worker_crashed")
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, _Request) and not item.future.done():
+                    item.future.set_exception(
+                        RuntimeError("serve worker crashed")
+                    )
 
     def _handle(self, event):
         if isinstance(event, tuple) and event[0] == "__drain__":

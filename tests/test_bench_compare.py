@@ -23,13 +23,13 @@ def _row(us, speedup=None):
 
 def test_compare_gate_negative_paths():
     baseline = {
-        "a": _row(100.0, 2.0),
-        "b": _row(100.0),
-        "c": _row(100.0, 1.5),
+        "a": _row(10_000.0, 2.0),
+        "b": _row(10_000.0),
+        "c": _row(10_000.0, 1.5),
     }
     current = {
-        "a": _row(100.0, 2.1),     # ok
-        "b": _row(200.0),          # +100% wall: SLOWER
+        "a": _row(10_000.0, 2.1),  # ok
+        "b": _row(20_000.0),       # +100% wall above the floor: SLOWER
         # "c" missing entirely
         "d": _row(50.0),           # new row: reported, never fails
     }
@@ -45,6 +45,41 @@ def test_compare_lost_speedup():
     assert any("lost its speedup" in f for f in failures)
     _, failures = compare({"a": _row(100.0)}, baseline, 0.20)
     assert any("lost its speedup" in f for f in failures)
+
+
+def test_compare_floor_exempts_subfloor_drift():
+    """A 100→200µs 'regression' is 100µs of timer jitter: reported as
+    ``noise``, marked ✅, and never fails the gate."""
+    baseline = {"a": _row(100.0)}
+    table, failures = compare({"a": _row(200.0)}, baseline, threshold=0.20)
+    assert failures == []
+    assert [s for _, *_, s in table] == ["noise"]
+    md = render_markdown(table, failures, 0.20, "wall.")
+    assert "✅ noise" in md
+    assert "GATE FAILED" not in md
+
+
+def test_compare_floor_boundary_and_override():
+    # either side crossing the floor re-arms the relative gate: a genuine
+    # 4ms → 6ms regression must not hide behind the baseline being small
+    baseline = {"a": _row(4_000.0)}
+    _, failures = compare({"a": _row(6_000.0)}, baseline, threshold=0.20)
+    assert len(failures) == 1 and "drifted" in failures[0]
+    # --floor-us 0 disables the exemption entirely
+    baseline = {"a": _row(100.0)}
+    _, failures = compare(
+        {"a": _row(200.0)}, baseline, threshold=0.20, floor_us=0.0
+    )
+    assert len(failures) == 1
+
+
+def test_compare_floor_never_shields_speedup_gate():
+    """The floor exempts *wall drift* only — a sub-floor row that lost its
+    claimed speedup still fails."""
+    baseline = {"a": _row(100.0, 3.0)}
+    table, failures = compare({"a": _row(200.0, 0.8)}, baseline, 0.20)
+    assert len(failures) == 1 and "lost its speedup" in failures[0]
+    assert [s for _, *_, s in table] == ["LOST-SPEEDUP"]
 
 
 def test_history_roundtrip_and_trends(tmp_path):

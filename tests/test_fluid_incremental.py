@@ -1,0 +1,179 @@
+"""Incremental water-filling re-solver: tolerance-band parity, dirty-
+component bookkeeping, sparse-incidence helpers and allocation-cache LRU
+eviction.
+
+The ``incremental=True`` engine keeps the previous solve's full state
+(per-link demand / live counts / mark ratios, per-slot rates) and only
+refills the connected components of the (member × binding-link) graph a
+delta actually touches.  It is tolerance-band equivalent to the
+from-scratch solve — these tests pin the band at every probe point of
+real simulations, the exact-aggregate contract (identical iteration
+counts), and the state-invalidation rules that keep the deltas honest.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import FluidNetworkSim, Topology, contended_snapshot
+from repro.cluster import network as network_mod
+from repro.engine.scenarios import get_scenario
+
+# the documented equivalence band: rates/marks from delta-maintained state
+# may differ from the from-scratch floats by accumulation order only
+BAND = dict(rtol=1e-9, atol=1e-9)
+
+
+def _contended(racks: int, tenants: int = 1):
+    spec = get_scenario(f"rack-scaling-{racks}")
+    topo = spec.topology()
+    jobs = contended_snapshot(topo, lambda: spec.trace(topo), tenants=tenants)
+    return topo, jobs
+
+
+def _probe_parity(racks: int, window_ms: float, every: int = 7):
+    """Advance with the incremental engine, comparing every ``every``-th
+    solve against the from-scratch solve on the same comm set."""
+    topo, jobs = _contended(racks)
+    net = FluidNetworkSim(topo, seed=racks, incremental=True)
+    net.configure(jobs)
+    stats = {"solves": 0, "probes": 0}
+    orig = FluidNetworkSim._solve_alloc_incremental
+
+    def probe(self, comm_mask):
+        rates, marks = orig(self, comm_mask)
+        stats["solves"] += 1
+        if stats["solves"] % every == 0:
+            r2, m2 = self._solve_alloc(comm_mask)
+            np.testing.assert_allclose(rates, r2, **BAND)
+            np.testing.assert_allclose(marks, m2, **BAND)
+            stats["probes"] += 1
+        return rates, marks
+
+    FluidNetworkSim._solve_alloc_incremental = probe
+    try:
+        net.advance(window_ms)
+    finally:
+        FluidNetworkSim._solve_alloc_incremental = orig
+    assert stats["probes"] > 10
+    # the deltas actually exercised the delta path, not per-solve rebuilds
+    assert net.alloc_delta_solves > 0.9 * (net.alloc_solves - 1)
+    return net
+
+
+def test_incremental_probe_parity_16rack():
+    _probe_parity(16, 4_000.0)
+
+
+def test_incremental_probe_parity_64rack():
+    _probe_parity(64, 1_500.0)
+
+
+@pytest.mark.slow
+def test_incremental_probe_parity_256rack():
+    """The acceptance probe: every sampled solve on the 256-rack fabric
+    stays inside the band against the from-scratch solve (itself pinned
+    bit-exact to the scalar oracle), with the delta path doing the work."""
+    net = _probe_parity(256, 1_200.0, every=13)
+    assert net.alloc_delta_solves > 100
+
+
+def test_incremental_aggregate_consistency_16rack():
+    """Same total iteration count as the from-scratch engine over the
+    same window — band-level float drift must never move an event."""
+    iters = {}
+    for inc in (False, True):
+        topo, jobs = _contended(16)
+        net = FluidNetworkSim(topo, seed=7, incremental=inc)
+        net.configure(jobs)
+        net.advance(5_000.0)
+        iters[inc] = sum(j.iters_done for j in jobs)
+    assert iters[True] == iters[False] > 0
+
+
+def test_incremental_state_reset_on_configure():
+    """configure() swaps the incidence — stale delta state must die."""
+    topo, jobs = _contended(16)
+    net = FluidNetworkSim(topo, seed=1, incremental=True)
+    net.configure(jobs)
+    net.advance(500.0)
+    assert net._wf is not None
+    net.configure(jobs[: len(jobs) // 2])
+    assert net._wf is None
+    net.advance(1_000.0)  # and the rebuilt state solves cleanly
+
+
+# ------------------------------------------------------------------ #
+# sparse incidence helpers (CSR both ways)
+# ------------------------------------------------------------------ #
+def test_link_csr_matches_matrix():
+    topo, jobs = _contended(16)
+    inc = topo.incidence([j.placement for j in jobs])
+    m = inc.matrix
+    rows, cols = inc.flat_pairs
+    assert rows.shape == cols.shape
+    assert m.sum() == rows.size
+    # job-major pairs reproduce the boolean incidence exactly
+    re = np.zeros_like(m)
+    re[rows, cols] = True
+    assert (re == m).all()
+    # link-major CSR is the exact transpose walk
+    lstarts, lcounts, lrows = inc.link_csr
+    assert (lcounts == m.sum(axis=0)).all()
+    for link in np.nonzero(lcounts)[0][:20]:
+        users = lrows[lstarts[link]: lstarts[link] + lcounts[link]]
+        assert sorted(users.tolist()) == np.nonzero(m[:, link])[0].tolist()
+    # gather helper: concatenated users per link, link-major
+    some = np.nonzero(lcounts)[0][:5]
+    got = inc.link_users(some)
+    want = np.concatenate(
+        [lrows[lstarts[l]: lstarts[l] + lcounts[l]] for l in some]
+    )
+    assert (got == want).all()
+
+
+# ------------------------------------------------------------------ #
+# allocation-cache LRU eviction
+# ------------------------------------------------------------------ #
+def test_alloc_cache_lru_keeps_hot_key(monkeypatch):
+    """A hot comm-set key touched between insertions must survive a scan
+    of ``_ALLOC_CACHE_MAX`` cold keys — the regression the wholesale
+    cache clear used to cause (every scan wiped the working set)."""
+    monkeypatch.setattr(network_mod, "_ALLOC_CACHE_MAX", 8)
+    topo, jobs = _contended(16)
+    net = FluidNetworkSim(topo, seed=3)
+    net.configure(jobs)
+    n = len(jobs)
+    hot = np.zeros(n, dtype=bool)
+    hot[:4] = True
+    net._cached_solve(hot)
+    for i in range(network_mod._ALLOC_CACHE_MAX + 4):
+        cold = np.zeros(n, dtype=bool)
+        cold[4 + (i % (n - 5)):] = True
+        cold[4 + ((i * 3) % (n - 5))] = False  # distinct membership per i
+        net._cached_solve(cold)
+        net._cached_solve(hot)  # touch: the hot key stays most-recent
+    before = net.alloc_solves
+    net._cached_solve(hot)
+    assert net.alloc_solves == before  # still cached — never evicted
+    assert len(net._alloc_cache) <= network_mod._ALLOC_CACHE_MAX
+
+
+def test_alloc_cache_evicts_only_lru(monkeypatch):
+    monkeypatch.setattr(network_mod, "_ALLOC_CACHE_MAX", 4)
+    topo, jobs = _contended(16)
+    net = FluidNetworkSim(topo, seed=3)
+    net.configure(jobs)
+    n = len(jobs)
+
+    def mask(i):
+        m = np.zeros(n, dtype=bool)
+        m[i: i + 3] = True
+        return m
+
+    for i in range(6):  # masks 0,1 fall off the LRU end, 2..5 remain
+        net._cached_solve(mask(i))
+    before = net.alloc_solves
+    net._cached_solve(mask(5))          # most recent: hit
+    assert net.alloc_solves == before
+    net._cached_solve(mask(0))          # oldest: was evicted, re-solves
+    assert net.alloc_solves == before + 1

@@ -1,0 +1,100 @@
+"""Property tests for ``segments_from_pattern``: exact tiling of
+``[0, iter_time_ms)`` and Gbit conservation, including wrapped and
+overlapping phases (the cases whose sub-ε cut slivers used to be dropped
+and desynchronize iteration boundaries)."""
+
+import math
+import random
+
+import pytest
+
+from repro.cluster.network import segments_from_pattern
+from repro.core.circle import CommPattern, Phase
+
+
+def _check_invariants(pattern: CommPattern) -> None:
+    segs = segments_from_pattern(pattern)
+    t = pattern.iter_time_ms
+    # every segment carries real width — slivers are folded, never emitted
+    assert all(s.duration_ms > 0.0 for s in segs)
+    # exact tiling: widths sum to the iteration period
+    total = sum(s.duration_ms for s in segs)
+    assert math.isclose(total, t, rel_tol=0.0, abs_tol=1e-6), (total, t)
+    # Gbit conservation: overlapping demands add, wrapped phases keep
+    # their full duration, so the integral equals the per-phase sum.
+    # Slivers are billed at a neighbour's level — error ≤ gbps·ε each.
+    want = sum(ph.gbps * ph.duration_ms for ph in pattern.phases)
+    got = sum(s.gbps * s.duration_ms for s in segs if s.kind == "comm")
+    assert math.isclose(
+        got, want, rel_tol=1e-9, abs_tol=1e-6 * max(1.0, want)
+    ), (got, want)
+    # merge predicate: adjacent segments never share (kind, level)
+    for a, b in zip(segs, segs[1:]):
+        assert (a.kind, a.gbps) != (b.kind, b.gbps)
+
+
+@pytest.mark.parametrize(
+    "phases",
+    [
+        (),                                        # pure compute
+        ((0.0, 100.0, 40.0),),                     # whole-iteration comm
+        ((20.0, 30.0, 25.0),),                     # interior phase
+        ((80.0, 40.0, 25.0),),                     # wraps past the period
+        ((90.0, 95.0, 10.0),),                     # wraps almost fully
+        ((10.0, 50.0, 20.0), (30.0, 50.0, 15.0)),  # overlapping, adds
+        ((80.0, 40.0, 25.0), (10.0, 30.0, 10.0)),  # wrap over a phase
+        ((250.0, 30.0, 18.0),),                    # start beyond period
+        # nearly-coincident cut points: sub-ε slivers must fold, not drop
+        ((20.0, 30.0, 25.0), (20.0 + 1e-12, 30.0, 5.0)),
+        ((0.0, 100.0 - 1e-12, 40.0),),
+    ],
+)
+def test_segment_invariants_explicit(phases):
+    pattern = CommPattern(
+        100.0, tuple(Phase(*p) for p in phases), name="t"
+    )
+    _check_invariants(pattern)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_segment_invariants_seeded(seed):
+    rng = random.Random(seed)
+    t = rng.choice((50.0, 100.0, 250.0, 1000.0))
+    phases = tuple(
+        Phase(
+            start_ms=rng.uniform(0.0, 3.0 * t),
+            duration_ms=rng.uniform(1e-9, t),
+            gbps=rng.uniform(0.1, 50.0),
+        )
+        for _ in range(rng.randint(0, 5))
+    )
+    _check_invariants(CommPattern(t, phases, name=f"s{seed}"))
+
+
+def test_segment_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    finite = {"allow_nan": False, "allow_infinity": False}
+
+    @settings(max_examples=150, deadline=None)
+    @given(
+        t=st.floats(min_value=1.0, max_value=10_000.0, **finite),
+        raw=st.lists(
+            st.tuples(
+                st.floats(min_value=0.0, max_value=30_000.0, **finite),
+                st.floats(min_value=1e-9, max_value=1.0, **finite),
+                st.floats(min_value=0.01, max_value=100.0, **finite),
+            ),
+            max_size=6,
+        ),
+    )
+    def run(t, raw):
+        phases = tuple(
+            # duration as a fraction of the period keeps phases ≤ one lap
+            Phase(start_ms=s, duration_ms=frac * t, gbps=g)
+            for s, frac, g in raw
+        )
+        _check_invariants(CommPattern(t, phases, name="h"))
+
+    run()

@@ -4,6 +4,8 @@ prefetch parity, stream semantics (ISSUE 6 tentpole)."""
 from __future__ import annotations
 
 import math
+import threading
+import time
 from itertools import islice
 
 import pytest
@@ -190,6 +192,88 @@ class TestServiceSemantics:
         svc.close()
         with pytest.raises(RuntimeError, match="closed"):
             svc.submit(QueryPlacement())
+
+
+# --------------------------------------------------------------------- #
+# worker thread lifecycle (crash propagation + bounded shutdown)
+# --------------------------------------------------------------------- #
+class TestWorkerLifecycle:
+    def _spec(self):
+        return get_scenario("multitenant-2")
+
+    def _service(self, **kw):
+        spec = self._spec()
+        return SchedulerService(
+            spec.topology(), spec.make_scheduler("cassini"),
+            epoch_ms=spec.epoch_ms, seed=spec.sim_seed, **kw,
+        )
+
+    @staticmethod
+    def _crash(svc):
+        """Kill the worker loop *outside* the per-request handler: result
+        delivery succeeds, then latency recording blows up the loop."""
+        def boom(*a, **kw):
+            raise ZeroDivisionError("telemetry exploded")
+
+        svc.metrics.observe = boom
+        fut = svc.submit(QueryPlacement())
+        fut.result(timeout=10)  # the request itself completed fine
+        for _ in range(500):    # …then the loop died recording it
+            if svc._worker_exc is not None:
+                return
+            time.sleep(0.01)
+        raise AssertionError("worker did not record its crash")
+
+    def test_worker_crash_reraises_on_submit(self):
+        svc = self._service()
+        self._crash(svc)
+        with pytest.raises(RuntimeError, match="worker crashed") as ei:
+            svc.submit(QueryPlacement())
+        assert isinstance(ei.value.__cause__, ZeroDivisionError)
+        assert svc.metrics.counter("worker_crashed") == 1
+        svc.close()
+
+    def test_worker_crash_reraises_on_drain(self):
+        svc = self._service()
+        self._crash(svc)
+        with pytest.raises(RuntimeError, match="worker crashed"):
+            svc.drain(1_000.0)
+        svc.close()
+
+    def test_worker_crash_fails_queued_futures(self):
+        """Requests already queued behind the crash must error out, not
+        leave their callers blocked on a Future nobody will resolve."""
+        svc = self._service(start=False)
+        svc.metrics.observe = lambda *a, **kw: (_ for _ in ()).throw(
+            ZeroDivisionError("telemetry exploded")
+        )
+        first = svc.submit(QueryPlacement())
+        stuck = [svc.submit(QueryPlacement()) for _ in range(3)]
+        svc.start()
+        first.result(timeout=10)
+        for fut in stuck:
+            with pytest.raises(RuntimeError, match="worker crashed"):
+                fut.result(timeout=10)
+        svc.close()
+
+    def test_close_idempotent_after_crash(self):
+        svc = self._service()
+        self._crash(svc)
+        svc.close()  # dead worker: join returns immediately, no hang
+        svc.close()  # and again — idempotent
+        assert svc._worker is None
+
+    def test_close_timeout_on_wedged_worker(self):
+        svc = self._service()
+        gate = threading.Event()
+        orig = svc._handle
+        svc._handle = lambda ev: (gate.wait(), orig(ev))[1]
+        svc.submit(QueryPlacement())
+        try:
+            with pytest.raises(RuntimeError, match="did not stop"):
+                svc.close(timeout_s=0.2)
+        finally:
+            gate.set()  # release the worker so the daemon thread exits
 
 
 # --------------------------------------------------------------------- #
