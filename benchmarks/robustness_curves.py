@@ -1,0 +1,223 @@
+"""Jitter-robustness curves: how much CASSINI benefit survives phase noise.
+
+    PYTHONPATH=src python -m benchmarks.robustness_curves \
+        [--magnitudes 0,2,5,10,20,40] [--iters 400] [--events 64] \
+        [--out benchmarks/artifacts/robustness_curves.png]
+
+The paper's time-shifts are only as good as the cluster's ability to hold
+them: §5.7's drift agent absorbs *small* slips, but a fabric with real
+phase noise erodes the aligned interleaving.  This driver measures that
+erosion on the cleanest CASSINI win in the repo — the Fig. 2 interleave
+(two VGG19 jobs pinned across one rack uplink, ~1.3-1.4× from alignment
+alone; placement is fixed so the curve isolates alignment benefit from
+placement luck) — by replaying a seeded ``FaultSchedule.jitter`` stream
+(repro.chaos) of increasing magnitude against both the unaligned (Themis
+stand-in: same fixed placement, no time-shifts) and CASSINI runs.
+
+Per magnitude m the sweep reports the aligned speedup and the
+*retained-benefit fraction*
+
+    retained(m) = (speedup(m) - 1) / (speedup(0) - 1)
+
+i.e. how much of the zero-jitter benefit is left once iteration phases
+slip by gauss(0, m) ms.  Both runs at one magnitude replay the *same*
+schedule, so the curve is deterministic end to end.  The PNG and a JSON
+sidecar land under ``benchmarks/artifacts/`` (gitignored; the nightly CI
+robustness job uploads the directory as an artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(__file__), "artifacts", "robustness_curves.png"
+)
+DEFAULT_MAGNITUDES = "0,2,5,10,20,40"
+DEFAULT_ITERS = 400
+DEFAULT_EVENTS = 64
+# jitter window: covers the bulk of both runs' ~110-150s makespan
+JITTER_WINDOW_MS = 100_000.0
+HORIZON_MS = 3_600_000.0
+_PLACEMENTS = {"snap0-vgg19": (0, 6), "snap1-vgg19": (1, 7)}
+
+# chart tokens (validated reference palette — shared with scaling_curves)
+SERIES_HUES = (
+    "#2a78d6",  # blue
+    "#eb6834",  # orange
+    "#1baf7a",  # aqua
+    "#eda100",  # yellow
+)
+SURFACE = "#fcfcfb"
+INK = "#0b0b0b"
+INK_SECONDARY = "#52514e"
+MUTED = "#898781"
+GRIDLINE = "#e1e0d9"
+AXISLINE = "#c3c2b7"
+
+
+def _run_one(magnitude_ms: float, iters: int, events: int,
+             with_cassini: bool, seed: int):
+    from repro.chaos.schedule import FaultSchedule
+    from repro.cluster import ClusterSimulator, Topology, snapshot_trace
+    from repro.sched import CassiniAugmented
+    from repro.sched.fixed import FixedPlacementScheduler
+
+    topo = Topology.paper_testbed()
+    jobs = snapshot_trace(
+        [("vgg19", 2, 1400), ("vgg19", 2, 1400)], iters=iters
+    )
+    schedule = FaultSchedule.jitter(
+        jobs, seed=seed, horizon_ms=JITTER_WINDOW_MS,
+        magnitude_ms=magnitude_ms, events=events,
+    )
+    sched = FixedPlacementScheduler(_PLACEMENTS)
+    if with_cassini:
+        sched = CassiniAugmented(sched, num_candidates=1)
+    sim = ClusterSimulator(topo, sched, fault_schedule=schedule)
+    return sim.run(jobs, horizon_ms=HORIZON_MS)
+
+
+def sweep(magnitudes: list[float], iters: int, events: int,
+          seed: int = 11) -> list[dict]:
+    """One point per jitter magnitude: iteration times for both schedulers,
+    aligned speedup, and the retained-benefit fraction vs magnitude 0."""
+    points: list[dict] = []
+    print("magnitude_ms,themis_iter_ms,cassini_iter_ms,speedup,retained")
+    base_gain: float | None = None
+    for m in magnitudes:
+        themis = _run_one(m, iters, events, with_cassini=False, seed=seed)
+        cassini = _run_one(m, iters, events, with_cassini=True, seed=seed)
+        speedup = themis.avg_iter_ms / cassini.avg_iter_ms
+        if base_gain is None:
+            base_gain = max(speedup - 1.0, 1e-9)
+        retained = (speedup - 1.0) / base_gain
+        point = {
+            "magnitude_ms": m,
+            "themis_iter_ms": themis.avg_iter_ms,
+            "cassini_iter_ms": cassini.avg_iter_ms,
+            "themis_ecn_per_iter": themis.ecn_per_iter(),
+            "cassini_ecn_per_iter": cassini.ecn_per_iter(),
+            "speedup": speedup,
+            "retained": retained,
+        }
+        points.append(point)
+        print(
+            f"{m:g},{point['themis_iter_ms']:.2f},"
+            f"{point['cassini_iter_ms']:.2f},{speedup:.3f},{retained:.3f}",
+            flush=True,
+        )
+    return points
+
+
+def _style_axis(ax) -> None:
+    ax.set_facecolor(SURFACE)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    for side in ("bottom", "left"):
+        ax.spines[side].set_color(AXISLINE)
+        ax.spines[side].set_linewidth(0.8)
+    ax.grid(axis="y", color=GRIDLINE, linewidth=0.8)
+    ax.set_axisbelow(True)
+    ax.tick_params(colors=MUTED, labelcolor=INK_SECONDARY, labelsize=9)
+
+
+def render(points: list[dict], out_png: str) -> None:
+    """Two stacked panels over a shared magnitude axis: iteration time per
+    scheduler, then the retained-benefit fraction."""
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, (ax_iter, ax_ret) = plt.subplots(
+        2, 1, sharex=True, figsize=(7.0, 6.4), dpi=150
+    )
+    fig.patch.set_facecolor(SURFACE)
+    xs = [p["magnitude_ms"] for p in points]
+    series = (
+        ("themis", [p["themis_iter_ms"] for p in points]),
+        ("th+cassini", [p["cassini_iter_ms"] for p in points]),
+    )
+    for idx, (name, ys) in enumerate(series):
+        hue = SERIES_HUES[idx % len(SERIES_HUES)]
+        ax_iter.plot(xs, ys, color=hue, linewidth=2, marker="o",
+                     markersize=6, markeredgecolor=SURFACE,
+                     markeredgewidth=1.0, label=name)
+        # direct label at the line end (identity never rests on color alone)
+        ax_iter.annotate(
+            name, (xs[-1], ys[-1]), xytext=(8, 0),
+            textcoords="offset pixels", va="center", fontsize=9,
+            color=INK_SECONDARY,
+        )
+    ax_ret.plot(
+        xs, [p["retained"] for p in points], color=SERIES_HUES[2],
+        linewidth=2, marker="o", markersize=6, markeredgecolor=SURFACE,
+        markeredgewidth=1.0,
+    )
+    ax_ret.axhline(1.0, color=GRIDLINE, linewidth=1.2, linestyle="--")
+    ax_iter.set_ylabel("avg iteration (ms)", color=INK_SECONDARY,
+                       fontsize=10)
+    ax_ret.set_ylabel("retained benefit fraction", color=INK_SECONDARY,
+                      fontsize=10)
+    ax_ret.set_xlabel("phase-jitter magnitude (ms, gauss σ)",
+                      color=INK_SECONDARY, fontsize=10)
+    ax_ret.set_xticks(xs)
+    for ax in (ax_iter, ax_ret):
+        _style_axis(ax)
+        span = (xs[-1] - xs[0]) or 1.0
+        ax.set_xlim(xs[0] - 0.04 * span, xs[-1] + 0.18 * span)
+    ax_iter.set_ylim(bottom=0.0)
+    ax_ret.set_ylim(bottom=min(0.0, min(p["retained"] for p in points)))
+    ax_iter.set_title(
+        "Jitter robustness: CASSINI interleaving under phase noise\n"
+        "Fig. 2 workload (2×VGG19, shared uplink), seeded PhaseJitter "
+        "replay",
+        color=INK, fontsize=11, loc="left", pad=12,
+    )
+    ax_iter.legend(
+        frameon=False, fontsize=9, labelcolor=INK_SECONDARY,
+        loc="lower right",
+    )
+    fig.tight_layout()
+    os.makedirs(os.path.dirname(out_png) or ".", exist_ok=True)
+    fig.savefig(out_png, facecolor=SURFACE)
+    plt.close(fig)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--magnitudes", default=DEFAULT_MAGNITUDES,
+                    help="comma-separated jitter sigmas in ms "
+                         f"(default {DEFAULT_MAGNITUDES}; 0 must come "
+                         "first — it anchors the retained fraction)")
+    ap.add_argument("--iters", type=int, default=DEFAULT_ITERS,
+                    help=f"iterations per job (default {DEFAULT_ITERS})")
+    ap.add_argument("--events", type=int, default=DEFAULT_EVENTS,
+                    help="jitter events per schedule "
+                         f"(default {DEFAULT_EVENTS})")
+    ap.add_argument("--seed", type=int, default=11,
+                    help="fault-schedule seed (default 11)")
+    ap.add_argument("--out", default=DEFAULT_OUT, metavar="PNG",
+                    help="output figure path (a .json sidecar with the "
+                         "measured points is written next to it)")
+    args = ap.parse_args()
+
+    magnitudes = [float(s) for s in args.magnitudes.split(",") if s]
+    points = sweep(magnitudes, args.iters, args.events, seed=args.seed)
+    render(points, args.out)
+    sidecar = os.path.splitext(args.out)[0] + ".json"
+    with open(sidecar, "w") as f:
+        json.dump(
+            {"magnitudes_ms": magnitudes, "iters": args.iters,
+             "events": args.events, "seed": args.seed, "points": points},
+            f, indent=2,
+        )
+        f.write("\n")
+    print(f"# wrote {args.out} and {sidecar}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ ALL = [
     "fluid_advance",
     "sched_epoch",
     "serve",
+    "fault_replay",
     "roofline",
 ]
 
@@ -665,6 +666,136 @@ def _serve_bench():
         )
 
 
+def _fault_replay_bench():
+    """Chaos rows: fault-replay parity + the degraded-mode overhead gate.
+
+    ``fault_replay/churn-linkfail`` runs the seeded link-churn scenario
+    (6 capacity incidents mid-trace, each triggering re-alignment) through
+    the batch simulator and replays the same arrivals + fault schedule
+    through :class:`SchedulerService`.  Gates: the served run must match
+    the batch run decision for decision (timestamps, placements,
+    time-shifts) and metric for metric — a fault schedule is part of the
+    deterministic replay contract, not a tolerance band — and the healthy
+    CASSINI pipeline must never have fallen back
+    (``degraded_decisions == 0``).
+
+    ``fault_replay/degraded_overhead`` measures what the graceful-
+    degradation wrapper (exception trap + fallback decision path around
+    every ``scheduler.schedule``) costs when nothing is failing: the same
+    multitenant-4 replay drained with ``fallback`` on vs off.  Gate: the
+    healthy-path overhead must stay under 5% (plus a small absolute slack
+    so sub-second replays on noisy CI runners cannot trip it).
+    """
+    from repro.engine.scenarios import get_scenario
+    from repro.serve import JobArrival, SchedulerService
+
+    from .common import timed
+
+    # ---- fault_replay/churn-linkfail: batch vs serve ---------------- #
+    spec = get_scenario("churn-linkfail")
+    built = spec.build("th+cassini")
+    t0 = time.time()
+    m_batch = built.simulator.run(built.jobs, horizon_ms=spec.horizon_ms)
+    batch_s = time.time() - t0
+    d_batch = built.simulator.decisions
+    chaos = built.simulator.chaos
+
+    def serve_replay():
+        topo = spec.topology()
+        jobs = list(spec.arrival_stream(topo))
+        svc = SchedulerService(
+            topo, spec.make_scheduler("th+cassini"), epoch_ms=spec.epoch_ms,
+            compute_jitter=spec.compute_jitter, vectorized=spec.vectorized,
+            seed=spec.sim_seed,
+            fault_schedule=spec.make_fault_schedule(topo, jobs),
+        )
+        with svc:
+            for job in jobs:
+                svc.submit(JobArrival(job))
+            metrics = svc.drain(spec.horizon_ms)
+            return metrics, svc.decisions, svc.telemetry()
+
+    (m_serve, d_serve, tel), us_serve = timed(serve_replay, repeat=1)
+    tuples = lambda ds: [
+        (t, d.placements, d.time_shifts_ms) for t, d in ds
+    ]
+    identical = (
+        m_batch.summary() == m_serve.summary()
+        and tuples(d_batch) == tuples(d_serve)
+    )
+    yield {
+        "name": "fault_replay/churn-linkfail",
+        "us_per_call": us_serve,
+        "derived": (
+            f"batch={batch_s * 1e6:.0f}us; {len(d_serve)} decisions, "
+            f"{chaos.applied_count} faults applied "
+            f"({chaos.skipped} skipped), "
+            f"degraded={tel.get('degraded_decisions', 0):.0f}, "
+            f"identical={identical} (serve replay matches batch decision "
+            f"for decision under link churn)"
+        ),
+    }
+    # gates after the yield: the measured row stays in the artifact
+    if not identical:
+        raise RuntimeError(
+            "served churn-linkfail replay diverged from the batch run "
+            "(decisions or metrics differ under the same fault schedule)"
+        )
+    if tel.get("degraded_decisions", 0):
+        raise RuntimeError(
+            f"healthy pipeline must never fall back: "
+            f"{tel['degraded_decisions']:.0f} degraded decisions"
+        )
+    if not chaos.applied_count:
+        raise RuntimeError(
+            "churn-linkfail applied zero faults — the schedule no longer "
+            "overlaps the trace; the parity gate is vacuous"
+        )
+
+    # ---- fault_replay/degraded_overhead: healthy-path cost ---------- #
+    OVERHEAD_GATE = 1.05
+    SLACK_US = 500_000.0  # 0.5s: sub-second replays on noisy runners
+    mt = get_scenario("multitenant-4")
+
+    def drain_replay(fallback):
+        topo = mt.topology()
+        svc = SchedulerService(
+            topo, mt.make_scheduler("cassini"), epoch_ms=mt.epoch_ms,
+            compute_jitter=mt.compute_jitter, vectorized=mt.vectorized,
+            seed=mt.sim_seed, fallback=fallback,
+        )
+        with svc:
+            for job in mt.arrival_stream(topo):
+                svc.submit(JobArrival(job))
+            svc.drain(mt.horizon_ms)
+            return svc.telemetry()
+
+    drain_replay(True)  # warm imports / jit caches
+    tel_on, us_on = timed(lambda: drain_replay(True))
+    tel_off, us_off = timed(lambda: drain_replay(False))
+    ratio = us_on / us_off
+    yield {
+        "name": "fault_replay/degraded_overhead",
+        "us_per_call": us_on,
+        "derived": (
+            f"fallback_off={us_off:.0f}us ratio={ratio:.3f} "
+            f"(degradation wrapper on the healthy path: exception trap + "
+            f"timeout check per decision, {tel_on['decisions']:.0f} "
+            f"decisions; gate <{(OVERHEAD_GATE - 1) * 100:.0f}%)"
+        ),
+    }
+    if us_on > us_off * OVERHEAD_GATE + SLACK_US:
+        raise RuntimeError(
+            f"degraded-mode wrapper costs too much on the healthy path: "
+            f"{us_on:.0f}us vs {us_off:.0f}us without fallback "
+            f"({ratio:.3f}x, gate {OVERHEAD_GATE:g}x + {SLACK_US:.0f}us)"
+        )
+    if tel_on.get("degraded_decisions", 0) or tel_off.get(
+        "degraded_decisions", 0
+    ):
+        raise RuntimeError("healthy multitenant-4 replay must not degrade")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -712,6 +843,8 @@ def main() -> None:
                 rows = _sched_epoch_bench()
             elif name == "serve":
                 rows = _serve_bench()
+            elif name == "fault_replay":
+                rows = _fault_replay_bench()
             elif name == "roofline":
                 from . import roofline
 

@@ -1,0 +1,38 @@
+"""Deterministic fault injection for the simulator and serve paths.
+
+``repro.chaos`` turns "what survives churn?" into a replayable input: a
+:class:`FaultSchedule` is a plain, sorted list of typed fault events —
+link capacity cuts, NIC flaps, elastic job resizes, per-phase timing
+jitter — either written out explicitly (trace form) or drawn from a
+seeded generator.  A :class:`FaultInjector` applies the schedule to a
+live :class:`~repro.cluster.network.FluidNetworkSim`; both
+:class:`~repro.cluster.simulator.ClusterSimulator` and
+:class:`~repro.serve.service.SchedulerService` thread the injector's
+next-event time into their event loops at the same point, so a schedule
+replays **bit-identically** through either path (pinned by
+tests/test_chaos.py on every ``churn-*`` scenario).
+"""
+
+from repro.chaos.events import (
+    FaultEvent,
+    JobResize,
+    LinkDegrade,
+    LinkDown,
+    LinkRecover,
+    NicFlap,
+    PhaseJitter,
+)
+from repro.chaos.inject import FaultInjector
+from repro.chaos.schedule import FaultSchedule
+
+__all__ = [
+    "FaultEvent",
+    "FaultInjector",
+    "FaultSchedule",
+    "JobResize",
+    "LinkDegrade",
+    "LinkDown",
+    "LinkRecover",
+    "NicFlap",
+    "PhaseJitter",
+]

@@ -1,0 +1,102 @@
+"""Typed fault events (the chaos vocabulary).
+
+Each event is a frozen value with an ``at_ms`` fluid-clock timestamp;
+a :class:`~repro.chaos.schedule.FaultSchedule` is just a sorted tuple of
+them.  Two tiers:
+
+- **primitive** events apply directly to the network model
+  (``LinkDown``/``LinkDegrade``/``LinkRecover``, ``JobResize``,
+  ``PhaseJitter``);
+- ``NicFlap`` is a *compound* convenience: schedule resolution expands it
+  into a ``LinkDown``+``LinkRecover`` pair on the server's host link.
+
+``realigns`` says whether applying the event should pull the affected
+jobs back through Propose→Score→Align immediately (capacity and shape
+changes do; a phase-jitter perturbation is exactly the drift the §5.7
+agent — and the next epoch — are supposed to absorb, so it does not).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Union
+
+__all__ = [
+    "LinkDown",
+    "LinkRecover",
+    "LinkDegrade",
+    "NicFlap",
+    "JobResize",
+    "PhaseJitter",
+    "FaultEvent",
+]
+
+
+@dataclass(frozen=True)
+class LinkDown:
+    """Link loses all capacity (cable pull / switch port death)."""
+
+    at_ms: float
+    link: str
+    realigns = True
+
+
+@dataclass(frozen=True)
+class LinkRecover:
+    """Link returns to its pristine (pre-fault) capacity."""
+
+    at_ms: float
+    link: str
+    realigns = True
+
+
+@dataclass(frozen=True)
+class LinkDegrade:
+    """Link drops to ``factor`` × pristine capacity (flaky optics /
+    autoneg downshift), ``0 < factor < 1``."""
+
+    at_ms: float
+    link: str
+    factor: float
+    realigns = True
+
+
+@dataclass(frozen=True)
+class NicFlap:
+    """A server's NIC goes down for ``down_ms`` then recovers — sugar for
+    ``LinkDown(host link)`` + ``LinkRecover`` at ``at_ms + down_ms``."""
+
+    at_ms: float
+    server: int
+    down_ms: float
+    realigns = True
+
+
+@dataclass(frozen=True)
+class JobResize:
+    """Elastic resize: the job's worker count changes by
+    ``delta_workers`` (negative = shrink, e.g. worker preemption or a
+    failed host; positive = regrow).  Routed through
+    :func:`repro.train.elastic.plan_remesh` so shrinks follow the same
+    data-axis remesh the training stack performs."""
+
+    at_ms: float
+    job_id: str
+    delta_workers: int
+    realigns = True
+
+
+@dataclass(frozen=True)
+class PhaseJitter:
+    """Per-iteration timing perturbation (psim-style measured ``deltas``):
+    the job's next phase slips by ``delta_ms`` (may be negative)."""
+
+    at_ms: float
+    job_id: str
+    delta_ms: float
+    realigns = False
+
+
+FaultEvent = Union[
+    LinkDown, LinkRecover, LinkDegrade, NicFlap, JobResize, PhaseJitter
+]

@@ -1,0 +1,146 @@
+"""Apply a :class:`FaultSchedule` to a live fluid-network simulation.
+
+One injector per run: it resolves the schedule against the run's topology
+(expanding ``NicFlap`` into its down/recover pair), snapshots the
+pristine link capacities so ``LinkRecover``/``LinkDegrade`` are defined
+relative to the *pre-fault* fabric (stacked faults on one link cannot
+compound), and then hands the event loop two things:
+
+- :attr:`next_ms` — the fluid-clock time of the next unapplied event,
+  which the loop folds into its ``min(arrival, epoch, fault, bound)``
+  step target;
+- :meth:`apply_due` — apply everything due at ``now``; returns whether
+  any applied event wants an immediate re-alignment pass (capacity and
+  shape changes do, phase jitter is left for the §5.7 agent / the next
+  epoch to absorb).
+
+Events that target state that no longer exists — a resize for a job that
+already finished, jitter for a job not currently placed — are *skipped
+and counted*, never raised: a fault schedule is environment, not input
+validation.  Both event loops call this at the same point with the same
+clock, so a schedule replays bit-identically through the batch simulator
+and the serve service.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Iterable
+
+from repro.chaos.events import (
+    FaultEvent,
+    JobResize,
+    LinkDegrade,
+    LinkDown,
+    LinkRecover,
+    PhaseJitter,
+)
+from repro.chaos.schedule import FaultSchedule
+from repro.cluster.errors import UnknownJobError
+from repro.cluster.job import Job, JobState
+from repro.train.elastic import plan_remesh
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.cluster.network import FluidNetworkSim
+
+__all__ = ["FaultInjector", "DOWN_GBPS"]
+
+_EPS = 1e-9
+
+# A "down" link keeps a 1 Mbps trickle instead of a hard zero: jobs
+# crossing it are effectively stalled (a 1-Gbit phase would take ~17 min),
+# but every rate/score stays finite — the geometric scorer (Eq. 2 divides
+# by capacity) prices candidates over the dead link as enormously negative
+# and routes around it, which is the network-aware behaviour the churn
+# scenarios exist to measure, rather than crashing on a 0-capacity link.
+DOWN_GBPS = 1e-3
+
+
+class FaultInjector:
+    """Stateful cursor over one schedule's resolved events."""
+
+    def __init__(self, net: "FluidNetworkSim", schedule: FaultSchedule) -> None:
+        self.net = net
+        self._events = schedule.resolve(net.topo)
+        self._i = 0
+        # pristine capacities: recover/degrade targets, immune to stacking
+        self._orig = net.topo.link_capacities.copy()
+        self.applied: list[FaultEvent] = []
+        self.skipped: int = 0
+        self.remesh_plans: list = []  # RemeshPlan per applied shrink
+
+    # ------------------------------------------------------------- #
+    @property
+    def next_ms(self) -> float:
+        """Fluid-clock time of the next unapplied event (inf when done)."""
+        if self._i < len(self._events):
+            return self._events[self._i].at_ms
+        return math.inf
+
+    @property
+    def applied_count(self) -> int:
+        return len(self.applied)
+
+    def apply_due(self, now_ms: float, jobs: Iterable[Job]) -> bool:
+        """Apply every event with ``at_ms <= now``; True if any applied
+        event requests an immediate re-alignment pass."""
+        realign = False
+        by_id: dict[str, Job] | None = None
+        while (
+            self._i < len(self._events)
+            and self._events[self._i].at_ms <= now_ms + _EPS
+        ):
+            ev = self._events[self._i]
+            self._i += 1
+            if by_id is None:
+                by_id = {j.job_id: j for j in jobs}
+            if self._apply(ev, by_id):
+                self.applied.append(ev)
+                realign = realign or ev.realigns
+            else:
+                self.skipped += 1
+        return realign
+
+    # ------------------------------------------------------------- #
+    def _apply(self, ev: FaultEvent, by_id: dict[str, Job]) -> bool:
+        net = self.net
+        if isinstance(ev, LinkDown):
+            net.set_link_capacity(ev.link, DOWN_GBPS)
+            return True
+        if isinstance(ev, LinkDegrade):
+            pristine = self._orig[net.topo.link_ids[ev.link]]
+            net.set_link_capacity(ev.link, pristine * ev.factor)
+            return True
+        if isinstance(ev, LinkRecover):
+            pristine = self._orig[net.topo.link_ids[ev.link]]
+            net.set_link_capacity(ev.link, pristine)
+            return True
+        if isinstance(ev, JobResize):
+            job = by_id.get(ev.job_id)
+            if job is None or job.state in (JobState.DONE, JobState.CUTOFF):
+                return False
+            old = job.num_workers
+            if ev.delta_workers < 0:
+                # shrink = device failure: route through the training
+                # stack's remesh planner (data axis shrinks first)
+                failed = min(-ev.delta_workers, old - 1)
+                if failed <= 0:
+                    return False
+                plan = plan_remesh((old,), ("data",), failed)
+                new = 1
+                for s in plan.new_shape:
+                    new *= s
+                self.remesh_plans.append(plan)
+            else:
+                new = old + ev.delta_workers
+            if new == old:
+                return False
+            job.num_workers = new
+            return True
+        if isinstance(ev, PhaseJitter):
+            try:
+                net.perturb_job(ev.job_id, ev.delta_ms)
+            except UnknownJobError:
+                return False  # not currently placed (pending/finished)
+            return True
+        raise TypeError(f"unknown fault event {ev!r}")  # pragma: no cover

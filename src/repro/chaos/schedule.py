@@ -1,0 +1,186 @@
+"""Fault schedules: the replayable trace of what goes wrong, and when.
+
+A :class:`FaultSchedule` is a value — an ``at_ms``-sorted tuple of typed
+events from :mod:`repro.chaos.events`.  Build one explicitly (trace form:
+``FaultSchedule.of(LinkDown(60_000, "up:r0-sp0"), …)``) or from one of
+the seeded generators (``linkfail`` / ``elastic`` / ``jitter``), which
+draw every fault from a private ``random.Random(seed)`` so the same
+arguments always produce the same schedule.
+
+**Determinism contract.**  The schedule is generated entirely *up front*
+— no randomness is consumed during simulation — and events fire at
+fluid-clock times that both the batch simulator and the serve loop step
+to exactly (their event loops take ``min(next arrival, next epoch, next
+fault, bound)``).  Replaying one schedule through
+``ClusterSimulator.run`` and through ``SchedulerService`` therefore
+applies the identical float mutations in the identical order, which is
+what makes the two paths' decisions and metrics bit-identical
+(tests/test_chaos.py pins this on every ``churn-*`` scenario).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+from repro.chaos.events import (
+    FaultEvent,
+    JobResize,
+    LinkDegrade,
+    LinkDown,
+    LinkRecover,
+    NicFlap,
+    PhaseJitter,
+)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.cluster.job import Job
+    from repro.cluster.topology import Topology
+
+__all__ = ["FaultSchedule"]
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """An ``at_ms``-sorted, validated tuple of fault events."""
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self) -> None:
+        for ev in self.events:
+            if ev.at_ms < 0:
+                raise ValueError(f"fault before t=0: {ev!r}")
+            if isinstance(ev, LinkDegrade) and not 0.0 < ev.factor < 1.0:
+                raise ValueError(
+                    f"LinkDegrade factor must be in (0, 1): {ev!r}"
+                )
+            if isinstance(ev, NicFlap) and ev.down_ms <= 0:
+                raise ValueError(f"NicFlap needs down_ms > 0: {ev!r}")
+        # stable sort: same-timestamp events keep their authored order
+        object.__setattr__(
+            self, "events",
+            tuple(sorted(self.events, key=lambda ev: ev.at_ms)),
+        )
+
+    # ------------------------------------------------------------- #
+    @classmethod
+    def of(cls, *events: FaultEvent) -> "FaultSchedule":
+        """Explicit trace form."""
+        return cls(tuple(events))
+
+    @property
+    def empty(self) -> bool:
+        return not self.events
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def resolve(self, topo: "Topology") -> tuple[FaultEvent, ...]:
+        """Expand compound events into primitives, re-sorted by time.
+
+        ``NicFlap`` becomes a ``LinkDown``/``LinkRecover`` pair on the
+        server's host link; everything else passes through.  The sort is
+        stable on (time, authored position), so resolution is itself
+        deterministic.
+        """
+        prim: list[tuple[float, int, int, FaultEvent]] = []
+        for seq, ev in enumerate(self.events):
+            if isinstance(ev, NicFlap):
+                link = topo.host_link(ev.server).name
+                prim.append((ev.at_ms, seq, 0, LinkDown(ev.at_ms, link)))
+                up = ev.at_ms + ev.down_ms
+                prim.append((up, seq, 1, LinkRecover(up, link)))
+            else:
+                prim.append((ev.at_ms, seq, 0, ev))
+        prim.sort(key=lambda t: t[:3])
+        return tuple(p[3] for p in prim)
+
+    # ---------------------- seeded generators --------------------- #
+    @classmethod
+    def linkfail(
+        cls,
+        topo: "Topology",
+        *,
+        seed: int,
+        horizon_ms: float,
+        events: int = 6,
+        outage_frac: tuple[float, float] = (0.04, 0.12),
+        degrade_prob: float = 0.4,
+    ) -> "FaultSchedule":
+        """Seeded link-failure churn: ``events`` independent incidents on
+        distinct links, each a full outage (down → recover) or, with
+        ``degrade_prob``, a degrade to 30–70 % capacity (→ recover).
+        Incidents land in the middle 10–80 % of the horizon so the first
+        placements and the tail drain stay fault-free."""
+        rng = random.Random(seed)
+        names = list(topo.links)
+        rng.shuffle(names)
+        out: list[FaultEvent] = []
+        for name in names[: max(0, events)]:
+            at = rng.uniform(0.10, 0.80) * horizon_ms
+            outage = rng.uniform(*outage_frac) * horizon_ms
+            if rng.random() < degrade_prob:
+                out.append(LinkDegrade(at, name, rng.uniform(0.3, 0.7)))
+            else:
+                out.append(LinkDown(at, name))
+            out.append(LinkRecover(at + outage, name))
+        return cls(tuple(out))
+
+    @classmethod
+    def elastic(
+        cls,
+        jobs: Sequence["Job"],
+        *,
+        seed: int,
+        horizon_ms: float,
+        resizes: int = 6,
+        dwell_frac: tuple[float, float] = (0.08, 0.20),
+    ) -> "FaultSchedule":
+        """Seeded elastic churn: ``resizes`` distinct multi-worker jobs
+        each shrink by 1..(workers−1) mid-run and regrow to their
+        original size after a dwell — the shrink/regrow pair the
+        ``train/elastic.py`` remesh models."""
+        rng = random.Random(seed)
+        pool = [j for j in jobs if j.num_workers >= 2]
+        rng.shuffle(pool)
+        out: list[FaultEvent] = []
+        for job in pool[: max(0, resizes)]:
+            drop = rng.randint(1, job.num_workers - 1)
+            at = max(
+                job.arrival_ms + 1.0, rng.uniform(0.15, 0.65) * horizon_ms
+            )
+            out.append(JobResize(at, job.job_id, -drop))
+            back = at + rng.uniform(*dwell_frac) * horizon_ms
+            out.append(JobResize(back, job.job_id, drop))
+        return cls(tuple(out))
+
+    @classmethod
+    def jitter(
+        cls,
+        jobs: Sequence["Job"],
+        *,
+        seed: int,
+        horizon_ms: float,
+        magnitude_ms: float,
+        events: int = 48,
+    ) -> "FaultSchedule":
+        """Seeded timing-perturbation replay: ``events`` phase slips drawn
+        uniformly over the middle of the horizon, each targeting a random
+        job with a ``gauss(0, magnitude_ms)`` delta — psim's measured
+        per-iteration ``deltas`` as a replayable trace.  A zero magnitude
+        yields the empty schedule (the robustness curves' baseline
+        point)."""
+        if magnitude_ms <= 0 or not jobs:
+            return cls(())
+        rng = random.Random(seed)
+        ids = [j.job_id for j in jobs]
+        out: list[FaultEvent] = []
+        for _ in range(max(0, events)):
+            at = rng.uniform(0.05, 0.95) * horizon_ms
+            jid = rng.choice(ids)
+            out.append(PhaseJitter(at, jid, rng.gauss(0.0, magnitude_ms)))
+        return cls(tuple(out))

@@ -1,0 +1,61 @@
+"""Typed errors for the incremental mutation surface.
+
+Fault injection (``repro.chaos``) and the serve-mode delta path mutate
+live simulator state by id — job slots, incidence rows, link capacities.
+A bare ``KeyError: 'job-7'`` from three layers down is useless mid-
+incident, so the mutation surface raises these instead: each names the
+offending id *and* summarizes the live set so the operator can see at a
+glance whether the id is stale, misspelled, or belongs to a job that
+already departed.
+
+Both subclass :class:`KeyError` (and ``UnknownJobError`` additionally
+``IndexError`` for the row-indexed incidence surface) so existing
+``except KeyError`` / ``except LookupError`` call sites keep working.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+__all__ = ["UnknownJobError", "UnknownLinkError"]
+
+_PREVIEW = 8  # live-set ids shown before truncating
+
+
+def _summarize(ids: Iterable[object]) -> str:
+    ids = sorted(str(i) for i in ids)
+    if not ids:
+        return "live set is empty"
+    shown = ", ".join(ids[:_PREVIEW])
+    more = f", … +{len(ids) - _PREVIEW} more" if len(ids) > _PREVIEW else ""
+    return f"{len(ids)} live: {shown}{more}"
+
+
+class UnknownJobError(KeyError, IndexError):
+    """A job id (or incidence row index) not in the live set.
+
+    Subclasses both ``KeyError`` (dict-keyed surfaces: ``remove_job``,
+    ``update_job``) and ``IndexError`` (row-indexed surfaces:
+    ``LinkIncidence.without_row``/``replace_row``) so either historical
+    exception contract still catches it.
+    """
+
+    def __init__(self, job_id: object, live: Iterable[object] = ()) -> None:
+        self.job_id = job_id
+        msg = f"unknown job {job_id!r}; {_summarize(live)}"
+        super().__init__(msg)
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep the message
+        return self.args[0]
+
+
+class UnknownLinkError(KeyError):
+    """A link name not present in the topology."""
+
+    def __init__(self, link: object, live: Iterable[object] = ()) -> None:
+        self.link = link
+        msg = f"unknown link {link!r}; {_summarize(live)}"
+        super().__init__(msg)
+
+    def __str__(self) -> str:
+        return self.args[0]

@@ -46,6 +46,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.cluster.errors import UnknownJobError
 from repro.cluster.job import Job, JobState
 from repro.cluster.topology import Link, LinkIncidence, Topology
 from repro.core.circle import CommPattern
@@ -213,6 +214,10 @@ class FluidNetworkSim:
         # state rebuilds within the incremental solver)
         self.alloc_delta_solves: int = 0
         self._wf: dict | None = None  # incremental link-state (see _solve_alloc_incremental)
+        # link ids whose capacity changed since the last incremental solve
+        # (fault injection): fed into _wf_delta as extra dirty links so the
+        # affected components re-fill against the new capacities
+        self._wf_cap_dirty: set[int] = set()
         # array-resident engine state, rebuilt by _build_arrays on configure
         self._slots: list[_JobExec] = []
         self._slot_of: dict[str, int] = {}
@@ -242,7 +247,13 @@ class FluidNetworkSim:
             solo_iter_ms=pattern.iter_time_ms,
             paced_iter_ms=align.paced_period_ms or pattern.iter_time_ms,
         )
-        migrated = prev is not None and prev.links != links
+        # a changed segment structure (elastic resize: same placement, new
+        # worker count → new pattern) is a remesh: checkpoint-restore like
+        # a migration, restarting the cycle at segment 0 — stale seg_idx /
+        # remaining from the old segment list would be meaningless
+        migrated = prev is not None and (
+            prev.links != links or prev.segments != segs
+        )
         if prev is None or migrated:
             ex.delay_ms = (self.migration_pause_ms if migrated else 0.0)
             ex.delay_ms += align.shift_ms
@@ -380,7 +391,7 @@ class FluidNetworkSim:
         try:
             ex = self._execs.pop(job_id)
         except KeyError:
-            raise KeyError(f"job {job_id!r} is not configured") from None
+            raise UnknownJobError(job_id, self._execs) from None
         if self.vectorized:
             self._alive[self._slot_of.pop(job_id)] = False
         return ex.job
@@ -388,10 +399,15 @@ class FluidNetworkSim:
     def update_job(self, job: Job) -> None:
         """Re-apply one running job's epoch decision (directive / placement)
         in place — the per-job logic of :meth:`configure` on a single slot."""
-        if job.job_id not in self._execs:
-            raise KeyError(f"job {job.job_id!r} is not configured")
+        old = self._execs.get(job.job_id)
+        if old is None:
+            raise UnknownJobError(job.job_id, self._execs)
         ex = self._exec_for(job)
-        migrated = ex.links != self._execs[job.job_id].links
+        migrated = ex.links != old.links
+        # elastic resize with an unchanged placement: the link columns keep
+        # the cache keys valid, but the new segment list changes the demand
+        # the same (mask, segment-index) key now encodes
+        resized = ex.segments != old.segments
         self._admit(job, self.now_ms)
         self._execs[job.job_id] = ex  # overwrite keeps dict position
         if not self.vectorized:
@@ -403,11 +419,13 @@ class FluidNetworkSim:
         self._mk[i] = ex.marks
         self._sync_seg(i, ex)
         if migrated:
-            # the slot's link columns change under the cache keys' feet:
-            # this is the one delta op that must drop the cache (and the
-            # incremental solver's per-link demand/live state with it)
+            # the slot's link columns change under the cache keys' feet
             cols = self.topo.job_link_ids(job.placement)
             self._inc = self._inc.replace_row(i, cols)
+        if migrated or resized:
+            # either way the cached rates no longer describe this slot:
+            # drop the cache (and the incremental solver's per-link
+            # demand/live state with it)
             self._alloc_cache.clear()
             self._wf = None
 
@@ -444,6 +462,45 @@ class FluidNetworkSim:
             else:
                 self.add_job(job)
         return "delta"
+
+    # ---------------------- fault injection ----------------------- #
+    def set_link_capacity(self, name: str, gbps: float) -> float:
+        """Mutate one link's capacity mid-simulation; returns the old value.
+
+        The primitive behind ``LinkDown`` (0.0) / ``LinkDegrade`` /
+        ``LinkRecover``.  Capacities are deliberately not part of the
+        allocation-cache key (they never changed mid-run before faults
+        existed), so the cache is dropped; the solvers read capacities
+        live, so the next solve — scalar, vectorized, or incremental —
+        sees the new value.  The incremental water-filling state is kept:
+        the link id is marked dirty and the next delta solve re-fills
+        exactly the components the change touches.
+        """
+        old = self.topo.set_link_capacity(name, gbps)
+        self._alloc_cache.clear()
+        if self.incremental:
+            self._wf_cap_dirty.add(self.topo.link_ids[name])
+        return old
+
+    def perturb_job(self, job_id: str, delta_ms: float) -> float:
+        """Shift one job's pending segment delay by ``delta_ms``
+        (``PhaseJitter``): per-iteration timing perturbation à la psim's
+        measured ``deltas``, pushing the job's phase off its aligned slot
+        without touching alignment state — the drift-adjustment agent
+        (§5.7) sees it exactly like real compute jitter.  Negative deltas
+        pull the phase earlier, floored at zero delay.  Returns the new
+        delay.  Both engines apply the identical float operation (the
+        vectorized mirror and the exec field agree between advances), so
+        replays stay bit-identical.
+        """
+        ex = self._execs.get(job_id)
+        if ex is None:
+            raise UnknownJobError(job_id, self._execs)
+        new = max(0.0, ex.delay_ms + delta_ms)
+        ex.delay_ms = new
+        if self.vectorized and self._inc is not None:
+            self._dly[self._slot_of[job_id]] = new
+        return new
 
     # -------------------------------------------------------------- #
     def _comm_jobs(self) -> dict[str, _JobExec]:
@@ -803,12 +860,26 @@ class FluidNetworkSim:
         st = self._wf
         if st is None or st["caps"].shape[0] != n or st["age"] >= _WF_REFRESH:
             st = self._wf_rebuild(comm_mask, caps_now)
+            self._wf_cap_dirty.clear()  # rebuilt from live capacities
         else:
             changed = np.nonzero(
                 (st["mask"] != comm_mask) | (st["caps"] != caps_now)
             )[0]
-            if changed.size:
-                self._wf_delta(st, comm_mask, caps_now, changed)
+            extra = None
+            if self._wf_cap_dirty:
+                # link capacities mutated by fault injection since the
+                # last solve: treat them as demand-changed links so their
+                # ratios/binding flips recompute and their components
+                # re-fill against the new capacity
+                extra = np.fromiter(
+                    sorted(self._wf_cap_dirty), dtype=np.int64,
+                    count=len(self._wf_cap_dirty),
+                )
+                self._wf_cap_dirty.clear()
+            if changed.size or extra is not None:
+                self._wf_delta(
+                    st, comm_mask, caps_now, changed, extra_links=extra
+                )
             st["age"] += 1
             self.alloc_delta_solves += 1
         # T accumulates ± ratio deltas between refreshes — clamp the tiny
@@ -864,8 +935,14 @@ class FluidNetworkSim:
         comm_mask: np.ndarray,
         caps_now: np.ndarray,
         changed: np.ndarray,
+        extra_links: np.ndarray | None = None,
     ) -> None:
-        """Apply a member diff to the state and refill dirty components."""
+        """Apply a member diff to the state and refill dirty components.
+
+        ``extra_links`` names link ids whose *capacity* changed with no
+        member diff of their own (fault injection): they join the changed-
+        link set so mark ratios, binding flips and component refills all
+        re-evaluate against the mutated ``inc.capacities``."""
         inc = self._inc
         nl = inc.num_links
         cap_l = inc.capacities
@@ -886,9 +963,13 @@ class FluidNetworkSim:
         live = st["live"]
         st["mask"] = comm_mask.copy()
         st["caps"] = caps_now
-        # mark ratios move only where demand moved; scatter the per-link
-        # delta into the per-job totals through the link-major CSR
-        cl = np.unique(ccols)
+        # mark ratios move only where demand (or capacity) moved; scatter
+        # the per-link delta into the per-job totals through the link-major
+        # CSR
+        if extra_links is not None and extra_links.size:
+            cl = np.unique(np.concatenate((ccols, extra_links)))
+        else:
+            cl = np.unique(ccols)
         exc = demand[cl] - cap_l[cl]
         with np.errstate(divide="ignore", invalid="ignore"):
             new_r = np.where(exc > 0, exc / demand[cl], 0.0)
@@ -1114,6 +1195,13 @@ class FluidNetworkSim:
         the cluster simulator can react to the departure immediately); the
         finished jobs are returned with ``finish_ms`` / ``state`` set.
         """
+        if not self._execs:
+            # empty cluster (every job queued or between arrivals — elastic
+            # churn can grow a lone job past the fabric): the fluid state
+            # is trivially constant, so jump the clock instead of stalling
+            # the caller's event loop at a fixed ``now``
+            self.now_ms = max(self.now_ms, until_ms)
+            return []
         if self.vectorized:
             return self._advance_vectorized(until_ms, max_events=max_events)
         return self._advance_scalar(until_ms, max_events=max_events)

@@ -132,10 +132,16 @@ class ClusterSimulator:
         vectorized: bool = True,
         incremental: bool = False,
         seed: int = 0,
+        fault_schedule=None,
     ) -> None:
         self.topo = topology
         self.scheduler = scheduler
         self.epoch_ms = epoch_ms
+        # optional repro.chaos.FaultSchedule injected during run(); a fresh
+        # FaultInjector cursor is built per run so the simulator can be
+        # re-run (and the equivalence harness can replay) from scratch
+        self.fault_schedule = fault_schedule
+        self.chaos = None
         self.net = FluidNetworkSim(
             topology,
             compute_jitter=compute_jitter,
@@ -153,6 +159,13 @@ class ClusterSimulator:
         running: list[Job] = []
         done: list[Job] = []
         next_epoch = 0.0
+        chaos = None
+        if self.fault_schedule is not None and not self.fault_schedule.empty:
+            # deferred import: repro.chaos depends on repro.cluster
+            from repro.chaos.inject import FaultInjector
+
+            chaos = FaultInjector(self.net, self.fault_schedule)
+        self.chaos = chaos
 
         def reschedule(now: float) -> None:
             state = ClusterState(
@@ -184,7 +197,8 @@ class ClusterSimulator:
         while (pending or running) and self.net.now_ms < horizon_ms:
             now = self.net.now_ms
             t_arrival = pending[0].arrival_ms if pending else math.inf
-            t_event = min(t_arrival, next_epoch, horizon_ms)
+            t_fault = chaos.next_ms if chaos is not None else math.inf
+            t_event = min(t_arrival, next_epoch, t_fault, horizon_ms)
 
             if t_event > now:
                 finished = self.net.advance(t_event)
@@ -195,6 +209,14 @@ class ClusterSimulator:
                     reschedule(self.net.now_ms)  # departure triggers re-place
                     continue
             now = self.net.now_ms
+            if chaos is not None and now >= chaos.next_ms - 1e-9:
+                # faults due now mutate capacity / job shape / phase; a
+                # re-aligning fault triggers an immediate pass unless an
+                # arrival at the same instant is about to trigger one anyway
+                if chaos.apply_due(now, running) and not (
+                    pending and pending[0].arrival_ms <= now + 1e-9
+                ):
+                    reschedule(now)
             if pending and now >= pending[0].arrival_ms - 1e-9:
                 while pending and pending[0].arrival_ms <= now + 1e-9:
                     running.append(pending.pop(0))

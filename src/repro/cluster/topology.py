@@ -30,6 +30,8 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from repro.cluster.errors import UnknownJobError, UnknownLinkError
+
 __all__ = ["Link", "LinkIncidence", "Topology"]
 
 
@@ -244,8 +246,8 @@ class LinkIncidence:
         store (compacted by the next ``with_row`` that trips the bound).
         """
         if not 0 <= index < self.counts.size:
-            raise IndexError(
-                f"incidence has {self.counts.size} rows, no index {index}"
+            raise UnknownJobError(
+                index, range(self.counts.size)
             )
         return LinkIncidence(
             starts=np.delete(self.starts, index),
@@ -260,8 +262,8 @@ class LinkIncidence:
         migration): the new columns are appended at the high-water mark and
         the row repointed — the old columns become garbage."""
         if not 0 <= index < self.counts.size:
-            raise IndexError(
-                f"incidence has {self.counts.size} rows, no index {index}"
+            raise UnknownJobError(
+                index, range(self.counts.size)
             )
         grown = self.with_row(row)
         starts = grown.starts[:-1].copy()
@@ -336,6 +338,29 @@ class Topology:
         self.link_capacities = np.array(
             [l.capacity_gbps for l in self.links.values()], dtype=np.float64
         )
+
+    def set_link_capacity(self, name: str, gbps: float) -> float:
+        """Mutate one link's capacity in place; returns the old value.
+
+        The fault-injection primitive behind ``LinkDown``/``LinkDegrade``/
+        ``LinkRecover``.  ``Link`` is a frozen value type, but its identity
+        is shared everywhere a link appears — ``self.links``, the
+        ``job_links`` cache, every ``_JobExec.links`` list — so writing the
+        field through ``object.__setattr__`` updates every holder at once
+        (the scalar allocator reads ``Link.capacity_gbps`` directly).  The
+        ``link_capacities`` vector is shared by reference with every
+        ``LinkIncidence`` built from this topology, so the vectorized and
+        incremental solvers see the new capacity on their next solve too.
+        """
+        if gbps < 0:
+            raise ValueError(f"negative capacity {gbps} for link {name!r}")
+        link = self.links.get(name)
+        if link is None:
+            raise UnknownLinkError(name, self.links)
+        old = float(link.capacity_gbps)
+        object.__setattr__(link, "capacity_gbps", float(gbps))
+        self.link_capacities[self.link_ids[name]] = float(gbps)
+        return old
 
     def rack_nic(self, rack: int) -> float:
         """NIC rate of one rack (uniform unless ``rack_nic_gbps`` is set)."""

@@ -129,6 +129,12 @@ class ScenarioSpec:
     # exactly, so the bit-exact equivalence harness skips these specs and
     # dedicated tolerance/parity tests cover them instead
     incremental: bool = False
+    # optional deterministic fault schedule (repro.chaos): called with the
+    # built (topology, jobs) so seeded generators can target real link
+    # names / job ids; the simulator replays it during run().  The churn-*
+    # scenarios use this — the fault application is engine-symmetric, so
+    # the bit-exact equivalence harness sweeps them like any other spec.
+    fault_schedule: Callable[[Topology, list[Job]], object] | None = None
 
     # ------------------------------------------------------------- #
     def scheduler_names(self) -> tuple[str, ...]:
@@ -156,6 +162,7 @@ class ScenarioSpec:
         choices (the equivalence harness runs every spec both ways, with
         the incremental re-solve forced off for bit-exact comparisons)."""
         topo = self.topology()
+        jobs = self.trace(topo)
         sched = (
             scheduler
             if isinstance(scheduler, Scheduler)
@@ -171,9 +178,10 @@ class ScenarioSpec:
                 self.incremental if incremental is None else incremental
             ),
             seed=self.sim_seed,
+            fault_schedule=self.make_fault_schedule(topo, jobs),
         )
         return BuiltScenario(
-            spec=self, topology=topo, jobs=self.trace(topo), scheduler=sched,
+            spec=self, topology=topo, jobs=jobs, scheduler=sched,
             simulator=sim,
         )
 
@@ -202,6 +210,15 @@ class ScenarioSpec:
             wall_s=time.time() - t0,
             simulator=built.simulator,
         )
+
+    def make_fault_schedule(self, topo: Topology, jobs: list[Job]):
+        """The spec's FaultSchedule for one built (topology, trace) — or
+        None.  Serve-side replays call this with their own topology/job
+        instances so batch and serve apply value-identical schedules to
+        independent state."""
+        if self.fault_schedule is None:
+            return None
+        return self.fault_schedule(topo, jobs)
 
     def arrival_stream(self, topo: Topology | None = None) -> Iterator[Job]:
         """Jobs in arrival order as a lazy stream (serve-mode input).
@@ -558,4 +575,88 @@ register_scenario(ScenarioSpec(
         topo, base_models=("xlm", "resnet50"), burst_models=("dlrm",),
         burst_at_ms=60_000.0, workers=5, burst_workers=4, iters=300,
     ),
+))
+
+
+# ---------------------------------------------------------------------- #
+# churn-* family (ROADMAP "elastic/failure churn" + "timing-perturbation
+# replay" items): the paper's dynamic-arrival stress (§Fig. 10) taken to
+# adversarial state churn — deterministic, seeded fault schedules from
+# repro.chaos replayed against the running cluster.  Fault application is
+# engine-symmetric and the schedules are generated up front, so these
+# specs sweep through the bit-exact vectorized-vs-scalar harness like any
+# other scenario, and batch-vs-serve replays stay decision-identical
+# (tests/test_chaos.py).
+from repro.chaos.schedule import FaultSchedule  # noqa: E402  (registry tail)
+
+# spec horizon: generous enough that the trace completes even under
+# faults; the harness's 600k cap therefore sweeps the *whole* scenario
+_CHURN_HORIZON_MS = 600_000.0
+# fault windows are aimed at the trace's live span (makespan ~355k ms for
+# the seeded trace below) so incidents actually hit running jobs
+_CHURN_FAULT_WINDOW_MS = 360_000.0
+_CHURN_TRACE_KW = dict(
+    load=1.3, num_jobs=10, seed=23, min_iters=120, max_iters=260,
+    models=["vgg19", "wideresnet101", "dlrm", "resnet50", "bert", "gpt2"],
+)
+
+
+def _churn_trace(topo: Topology) -> list[Job]:
+    return poisson_trace(topo, **_CHURN_TRACE_KW)
+
+
+def _churn_linkfail_schedule(topo: Topology, jobs: list[Job]) -> FaultSchedule:
+    return FaultSchedule.linkfail(
+        topo, seed=5, horizon_ms=_CHURN_FAULT_WINDOW_MS, events=6
+    )
+
+
+def _churn_elastic_schedule(topo: Topology, jobs: list[Job]) -> FaultSchedule:
+    return FaultSchedule.elastic(
+        jobs, seed=7, horizon_ms=_CHURN_FAULT_WINDOW_MS, resizes=5
+    )
+
+
+def _churn_jitter_schedule(topo: Topology, jobs: list[Job]) -> FaultSchedule:
+    return FaultSchedule.jitter(
+        jobs, seed=9, horizon_ms=_CHURN_FAULT_WINDOW_MS, magnitude_ms=8.0,
+        events=64,
+    )
+
+
+register_scenario(ScenarioSpec(
+    name="churn-linkfail",
+    description="Paper testbed under Poisson load with seeded link churn: "
+                "6 host/uplink incidents (full outages and 30-70% "
+                "degrades) mid-run, each triggering re-alignment; tests "
+                "whether interleaving benefit survives capacity faults",
+    topology=Topology.paper_testbed,
+    trace=_churn_trace,
+    horizon_ms=_CHURN_HORIZON_MS,
+    fault_schedule=_churn_linkfail_schedule,
+))
+
+register_scenario(ScenarioSpec(
+    name="churn-elastic",
+    description="Elastic resize churn on the paper testbed: 5 jobs shrink "
+                "(train/elastic.py remesh: data axis first) then regrow "
+                "after a dwell, forcing mid-epoch pattern changes and "
+                "re-alignment passes",
+    topology=Topology.paper_testbed,
+    trace=_churn_trace,
+    horizon_ms=_CHURN_HORIZON_MS,
+    fault_schedule=_churn_elastic_schedule,
+))
+
+register_scenario(ScenarioSpec(
+    name="churn-jitter",
+    description="Timing-perturbation replay (psim-style deltas): 64 seeded "
+                "gauss(0, 8ms) phase slips against the running set; "
+                "measures how much aligned-interleaving benefit survives "
+                "imperfect time-shifts (benchmarks/robustness_curves.py "
+                "sweeps the magnitude)",
+    topology=Topology.paper_testbed,
+    trace=_churn_trace,
+    horizon_ms=_CHURN_HORIZON_MS,
+    fault_schedule=_churn_jitter_schedule,
 ))

@@ -24,6 +24,10 @@ class LatencyRecorder:
     """Thread-safe sliding-window latency percentiles + counters/gauges."""
 
     def __init__(self, *, window: int = 8192) -> None:
+        if window < 1:
+            # fail at construction, not mid-incident on the first observe()
+            # (deque(maxlen=-1) raises from inside the worker loop)
+            raise ValueError(f"window must be >= 1, got {window}")
         self.window = window
         self._lock = threading.Lock()
         self._samples: dict[str, deque[float]] = {}

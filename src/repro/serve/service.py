@@ -92,6 +92,9 @@ class SchedulerService:
         submit_timeout_s: float | None = None,
         prefetch: bool = True,
         start: bool = True,
+        fault_schedule=None,
+        fallback: bool = True,
+        realign_timeout_ms: float | None = None,
     ) -> None:
         self.topo = topology
         self.scheduler = scheduler
@@ -105,6 +108,22 @@ class SchedulerService:
             incremental=incremental,
             seed=seed,
         )
+        # optional repro.chaos.FaultSchedule replayed against the embedded
+        # loop at exactly the batch simulator's injection point
+        self.fault_schedule = fault_schedule
+        self._chaos = None
+        if fault_schedule is not None and not fault_schedule.empty:
+            from repro.chaos.inject import FaultInjector
+
+            self._chaos = FaultInjector(self.net, fault_schedule)
+        # graceful degradation: on pipeline exception or a decision that
+        # exceeds realign_timeout_ms, fall back to the host scheduler's
+        # placement (counted as degraded_decisions) instead of killing the
+        # worker; the next trigger retries the full pipeline, so one bad
+        # epoch degrades one decision, not the service
+        self.fallback = bool(fallback)
+        self.realign_timeout_ms = realign_timeout_ms
+        self._host = getattr(scheduler, "host", None)
         self.decisions: list[tuple[float, Decision]] = []
         self.metrics = LatencyRecorder()
         self.submit_timeout_s = submit_timeout_s
@@ -232,15 +251,33 @@ class SchedulerService:
             ) from self._worker_exc
 
     def telemetry(self) -> dict[str, float]:
-        """Latency percentiles + counters + cache telemetry, one flat dict."""
+        """Latency percentiles + counters + cache telemetry, one flat dict.
+
+        Never raises: this is what an operator polls *during* an incident,
+        so a half-broken scheduler/module must degrade to fewer keys, not
+        to a stack trace (the core snapshot itself is total — see
+        ``LatencyRecorder.snapshot``).
+        """
         out = self.metrics.snapshot()
-        out["alloc_cache_solves"] = float(self.net.alloc_solves)
-        out["alloc_cache_hits"] = float(self.net.alloc_hits)
-        module = getattr(self.scheduler, "module", None)
-        if module is not None:
-            out["link_cache_hits"] = float(module.cache_hits)
-            out["link_cache_misses"] = float(module.cache_misses)
+        try:
+            out["alloc_cache_solves"] = float(self.net.alloc_solves)
+            out["alloc_cache_hits"] = float(self.net.alloc_hits)
+        except Exception:  # pragma: no cover - defensive
+            pass
+        try:
+            module = getattr(self.scheduler, "module", None)
+            if module is not None:
+                out["link_cache_hits"] = float(module.cache_hits)
+                out["link_cache_misses"] = float(module.cache_misses)
+        except Exception:  # pragma: no cover - defensive
+            pass
         out["decisions"] = float(len(self.decisions))
+        # always present, even before the first fallback, so dashboards
+        # and the never-dies acceptance test can key on it unconditionally
+        out.setdefault("degraded_decisions", 0.0)
+        if self._chaos is not None:
+            out["faults_applied"] = float(self._chaos.applied_count)
+            out["faults_skipped"] = float(self._chaos.skipped)
         return out
 
     # ---------------------- worker -------------------------------- #
@@ -356,14 +393,18 @@ class SchedulerService:
     # accumulation).  _drain runs it verbatim to a horizon.
     def _loop(self, bound_ms: float, *, defer: bool) -> None:
         net = self.net
+        chaos = self._chaos
         while (self._arrivals or self._running) and net.now_ms < bound_ms:
             now = net.now_ms
             t_arrival = (
                 self._arrivals[0].arrival_ms if self._arrivals else math.inf
             )
-            if defer and min(t_arrival, self._next_epoch) >= bound_ms - _EPS:
+            t_fault = chaos.next_ms if chaos is not None else math.inf
+            if defer and (
+                min(t_arrival, self._next_epoch, t_fault) >= bound_ms - _EPS
+            ):
                 break
-            t_event = min(t_arrival, self._next_epoch, bound_ms)
+            t_event = min(t_arrival, self._next_epoch, t_fault, bound_ms)
 
             if t_event > now:
                 finished = net.advance(t_event)
@@ -374,6 +415,14 @@ class SchedulerService:
                     self._reschedule(net.now_ms, "departure")
                     continue
             now = net.now_ms
+            if chaos is not None and now >= chaos.next_ms - _EPS:
+                # same injection point (and same same-instant arrival
+                # suppression) as ClusterSimulator.run — replay parity
+                if chaos.apply_due(now, self._running) and not (
+                    self._arrivals
+                    and self._arrivals[0].arrival_ms <= now + _EPS
+                ):
+                    self._reschedule(now, "fault")
             if self._arrivals and now >= self._arrivals[0].arrival_ms - _EPS:
                 while (
                     self._arrivals
@@ -408,7 +457,7 @@ class SchedulerService:
             pending=[],
         )
         t0 = time.perf_counter()
-        decision = self.scheduler.schedule(state)
+        decision = self._decide(state)
         self.metrics.observe("schedule", (time.perf_counter() - t0) * 1e3)
         self.metrics.count(f"reschedule_{trigger}")
         self.decisions.append((now, decision))
@@ -434,6 +483,58 @@ class SchedulerService:
         mode = self.net.configure_incremental(placed)
         self.metrics.count(f"configure_{mode}")
         self._maybe_prefetch()
+
+    def _decide(self, state: ClusterState) -> Decision:
+        """One scheduling decision, degrading gracefully when allowed.
+
+        The fallback state machine is stateless by design: HEALTHY on
+        every call; a pipeline exception or a decision slower than
+        ``realign_timeout_ms`` degrades *this* decision to the host
+        scheduler's placement (or, with no host, to freezing the current
+        placements) and the very next trigger retries the full CASSINI
+        pipeline — recovery needs no operator action and no reset, just
+        one healthy epoch.
+        """
+        if not self.fallback:
+            return self.scheduler.schedule(state)
+        t0 = time.perf_counter()
+        decision: Decision | None
+        try:
+            decision = self.scheduler.schedule(state)
+        except Exception:
+            self.metrics.count("pipeline_errors")
+            decision = None
+        if (
+            decision is not None
+            and self.realign_timeout_ms is not None
+            and (time.perf_counter() - t0) * 1e3 > self.realign_timeout_ms
+        ):
+            # the decision arrived, but after the re-alignment budget: a
+            # real deployment has already had to act, so act like it did —
+            # discard the stale plan and take the host placement now
+            self.metrics.count("realign_timeouts")
+            decision = None
+        if decision is None:
+            decision = self._fallback_decision(state)
+        return decision
+
+    def _fallback_decision(self, state: ClusterState) -> Decision:
+        """Degraded-mode decision: host scheduler, else freeze in place."""
+        self.metrics.count("degraded_decisions")
+        if self._host is not None:
+            try:
+                return self._host.schedule(state)
+            except Exception:
+                self.metrics.count("fallback_errors")
+        # last resort (host also failing, or no host to fall back to):
+        # keep every placed job exactly where it is, no new directives
+        return Decision(
+            placements={
+                j.job_id: tuple(j.placement)
+                for j in state.running
+                if j.placement
+            }
+        )
 
     # ---------------------- epoch prefetch ------------------------ #
     def _maybe_prefetch(self) -> None:

@@ -344,3 +344,38 @@ class TestLatencyRecorder:
         snap = rec.snapshot()
         assert snap["q_count"] == 1000.0
         assert rec.percentiles("q")["p50"] >= 984.0  # only the tail kept
+
+    def test_single_sample_is_every_percentile(self):
+        # nearest-rank over n=1: ceil(q/100)-1 == 0 for every q — the one
+        # sample answers p50, p95 and p99 alike (no interpolation to NaN)
+        rec = LatencyRecorder()
+        rec.observe("q", 7.5)
+        assert rec.percentiles("q") == {"p50": 7.5, "p95": 7.5, "p99": 7.5}
+
+    def test_two_samples_split_by_rank(self):
+        # n=2: p50 → ceil(1.0)-1 = index 0 (the smaller sample), p95/p99
+        # → ceil(1.9)/ceil(1.98)-1 = index 1 (the larger) — well-defined,
+        # order-independent
+        rec = LatencyRecorder()
+        rec.observe("q", 9.0)
+        rec.observe("q", 3.0)
+        assert rec.percentiles("q") == {"p50": 3.0, "p95": 9.0, "p99": 9.0}
+
+    def test_snapshot_never_raises_on_sparse_kinds(self):
+        # telemetry() calls snapshot() mid-incident: 0/1/2-sample kinds
+        # must export cleanly alongside warm ones
+        rec = LatencyRecorder()
+        rec.observe("one", 1.0)
+        rec.observe("two", 2.0)
+        rec.observe("two", 4.0)
+        snap = rec.snapshot()
+        assert snap["one_p99_ms"] == 1.0
+        assert snap["two_p50_ms"] == 2.0 and snap["two_p99_ms"] == 4.0
+        assert snap["one_count"] == 1.0
+
+    def test_invalid_window_rejected_at_construction(self):
+        # fail fast (not mid-incident on the first observe())
+        with pytest.raises(ValueError, match="window must be >= 1"):
+            LatencyRecorder(window=0)
+        with pytest.raises(ValueError, match="-3"):
+            LatencyRecorder(window=-3)

@@ -64,8 +64,10 @@ def _apply_script(topo, script, *, advance_ms=400.0):
     lockstep, checking bit-exact parity after every step.
 
     ``script`` is a list of ("add", job) / ("remove", job_id) /
-    ("migrate", job_id, new_placement) / ("cutoff", job_id) /
-    ("advance",) ops over deep-copied job populations.
+    ("migrate", job_id, new_placement) /
+    ("resize", job_id, new_num_workers, new_placement) /
+    ("cutoff", job_id) / ("advance",) ops over deep-copied job
+    populations.
     """
     A = FluidNetworkSim(topo, seed=0)           # rebuild reference
     B = FluidNetworkSim(topo, seed=0)           # delta engine
@@ -90,6 +92,16 @@ def _apply_script(topo, script, *, advance_ms=400.0):
         elif op[0] == "migrate":
             by_id(jobs_a, op[1]).placement = tuple(op[2])
             by_id(jobs_b, op[1]).placement = tuple(op[2])
+            A.configure(list(jobs_a))
+            assert B.configure_incremental(list(jobs_b)) == "delta"
+        elif op[0] == "resize":
+            # elastic resize (chaos JobResize follow-through): the worker
+            # count changes the comm pattern/segments, the placement the
+            # link columns — update_job must drop the alloc cache for both
+            for jobs in (jobs_a, jobs_b):
+                j = by_id(jobs, op[1])
+                j.num_workers = op[2]
+                j.placement = tuple(op[3])
             A.configure(list(jobs_a))
             assert B.configure_incremental(list(jobs_b)) == "delta"
         elif op[0] == "cutoff":
@@ -175,6 +187,44 @@ class TestDeltaParitySeeded:
         script += [("advance",), ("add", _placed_jobs(topo, 15, seed=12)[-1])]
         A, B = _apply_script(topo, script)
         assert len(B._slots) == int(np.count_nonzero(B._alive))  # compacted
+
+    def test_resize_churn_matches_rebuild(self):
+        """Mid-epoch elastic resizes (grow and shrink) mixed with
+        arrivals/departures: the update_job resize path must stay
+        bit-exact against the full rebuild (ISSUE 8 satellite)."""
+        topo = Topology.paper_testbed()
+        jobs = _placed_jobs(topo, 6, seed=13)
+        script = [("add", j) for j in jobs[:4]] + [("advance",)]
+        script += [
+            # shrink job 0 (device loss), same base slot
+            ("resize", jobs[0].job_id, 2, (0, 1)), ("advance",),
+            # grow job 2 onto a wider span (crosses a rack boundary)
+            ("resize", jobs[2].job_id, 4, (10, 11, 12, 13)), ("advance",),
+            ("add", jobs[4]), ("remove", jobs[1].job_id), ("advance",),
+            # resize straight after membership churn
+            ("resize", jobs[3].job_id, 3, (18, 19, 20)),
+            ("add", jobs[5]), ("advance",),
+            # resize back to the original width: no stale cache reuse
+            ("resize", jobs[0].job_id, 3, (0, 1, 2)), ("advance",),
+        ]
+        _apply_script(topo, script)
+
+    def test_resize_same_placement_drops_cache(self):
+        """A resize that keeps the placement (pattern change only) must
+        still invalidate the allocation cache — the (mask, seg) keys
+        would otherwise serve rates for the old segment list."""
+        topo = Topology.paper_testbed()
+        jobs = _placed_jobs(topo, 3, seed=21)
+        B = FluidNetworkSim(topo, seed=0)
+        assert B.configure_incremental(copy.deepcopy(jobs)) == "delta"
+        B.advance(B.now_ms + 500.0)
+        assert B._alloc_cache  # warmed
+        resized = copy.deepcopy(jobs)
+        resized[1].num_workers = max(1, resized[1].num_workers - 1)
+        assert B.configure_incremental(resized) == "delta"
+        assert not B._alloc_cache  # dropped, not reused
+        B.advance(B.now_ms + 500.0)  # re-solves cleanly on the new pattern
+        assert B._alloc_cache
 
     def test_reorder_falls_back_to_rebuild(self):
         topo = Topology.paper_testbed()
@@ -287,34 +337,45 @@ class TestPluginCacheDeltas:
 # regardless, so the module keeps coverage where hypothesis is absent)
 # --------------------------------------------------------------------- #
 def _random_script(topo, seed: int, length: int):
-    """Random churn script: arrivals, departures, migrations, cutoffs and
-    advances over a 10-job population (shared by hypothesis and the
-    seeded fuzz fallback)."""
+    """Random churn script: arrivals, departures, migrations, elastic
+    resizes, cutoffs and advances over a 10-job population (shared by
+    hypothesis and the seeded fuzz fallback)."""
     rng = random.Random(seed)
     jobs = _placed_jobs(topo, 10, seed=seed % 50)
     alive: list = []
     pool = list(jobs)
     script = []
+    widths: dict[str, int] = {}
     for _ in range(length):
         choices = ["advance"]
         if pool:
             choices += ["add", "add"]
         if alive:
-            choices += ["remove", "migrate", "cutoff"]
+            choices += ["remove", "migrate", "resize", "cutoff"]
         op = rng.choice(choices)
         if op == "add":
             j = pool.pop(0)
             alive.append(j)
+            widths[j.job_id] = len(j.placement)
             script.append(("add", j))
         elif op == "remove":
             j = alive.pop(rng.randrange(len(alive)))
             script.append(("remove", j.job_id))
         elif op == "migrate":
             j = rng.choice(alive)
-            base = rng.randrange(0, topo.num_gpus - len(j.placement))
+            w = widths[j.job_id]
+            base = rng.randrange(0, topo.num_gpus - w)
             script.append(
-                ("migrate", j.job_id,
-                 tuple(range(base, base + len(j.placement))))
+                ("migrate", j.job_id, tuple(range(base, base + w)))
+            )
+        elif op == "resize":
+            # elastic grow/shrink to a fresh width, chaos-JobResize style
+            j = rng.choice(alive)
+            w = rng.randint(1, 4)
+            widths[j.job_id] = w
+            base = rng.randrange(0, topo.num_gpus - w)
+            script.append(
+                ("resize", j.job_id, w, tuple(range(base, base + w)))
             )
         elif op == "cutoff":
             script.append(("cutoff", rng.choice(alive).job_id))
