@@ -35,7 +35,8 @@ def run() -> list[dict]:
         "us_per_call": 0.0,
         "derived": (
             f"p90 {s1['p90']/s2['p90']:.2f}x (paper: 1.26x) "
-            f"mean {s1['mean']/s2['mean']:.2f}x ecn {s1['ecn']/max(s2['ecn'],1e-9):.0f}x"
+            f"mean {s1['mean']/s2['mean']:.2f}x "
+            f"ecn {s1['ecn']/max(s2['ecn'],1e-9):.0f}x"
         ),
     })
     return rows

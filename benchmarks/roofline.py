@@ -22,7 +22,6 @@ import json
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.models.api import SHAPES, build_model

@@ -3,6 +3,7 @@
 from .ideal import ideal_metrics
 from .job import Job, JobState
 from .network import FluidNetworkSim, Segment, segments_from_pattern
+from .shard import ShardStats, batched_fill
 from .simulator import ClusterSimulator, Metrics, nearest_rank
 from .topology import Link, LinkIncidence, Topology
 from .traces import (
@@ -28,6 +29,8 @@ __all__ = [
     "Link",
     "LinkIncidence",
     "Topology",
+    "ShardStats",
+    "batched_fill",
     "poisson_trace",
     "iter_poisson_trace",
     "dynamic_trace",

@@ -42,12 +42,14 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.cluster.errors import UnknownJobError
 from repro.cluster.job import Job, JobState
+from repro.cluster.shard import MIN_COMPONENTS as _SHARD_MIN_COMPONENTS
+from repro.cluster.shard import ShardStats, batched_fill
 from repro.cluster.topology import Link, LinkIncidence, Topology
 from repro.core.circle import CommPattern
 
@@ -156,7 +158,10 @@ class _JobExec:
 
     def reset_segment(self) -> None:
         seg = self.segments[self.seg_idx]
-        self.remaining = seg.duration_ms if self.kind == "compute" or not self.links else seg.gbits
+        self.remaining = (
+            seg.duration_ms if self.kind == "compute" or not self.links
+            else seg.gbits
+        )
 
     @property
     def kind(self) -> str:
@@ -181,6 +186,7 @@ class FluidNetworkSim:
         congested_efficiency: float = 0.88,
         vectorized: bool = True,
         incremental: bool = False,
+        sharded: bool = False,
         seed: int = 0,
     ) -> None:
         # DCQCN under congestion does not achieve the full link rate: the
@@ -204,6 +210,18 @@ class FluidNetworkSim:
         # rather than bit-exactly; the default (False) keeps the bit-exact
         # from-scratch solve.  Meaningful only on the vectorized engine.
         self.incremental = bool(incremental and vectorized)
+        # device-sharded component fills (repro.cluster.shard): dirty
+        # components batch into bucketed vmap fills split across
+        # jax.devices() with shard_map instead of one fused host fill.
+        # Rides on the incremental path's component decomposition, so it
+        # is meaningful only with incremental=True; results stay inside
+        # the same documented tolerance band.
+        self.sharded = bool(sharded and self.incremental)
+        # test hook: force the device count seen by the sharded fill
+        # (None → len(jax.devices())); the device-count-invariance tests
+        # pin that decisions do not depend on this value
+        self._shard_devices: int | None = None
+        self.shard_stats = ShardStats()
         # telemetry: how many allocations were actually *solved* (cache
         # misses) on the vectorized path — the invalidation tests pin that
         # compute-only segment churn does not grow this — and how many
@@ -213,7 +231,8 @@ class FluidNetworkSim:
         # telemetry: solves answered by the delta path (vs from-scratch
         # state rebuilds within the incremental solver)
         self.alloc_delta_solves: int = 0
-        self._wf: dict | None = None  # incremental link-state (see _solve_alloc_incremental)
+        # incremental link-state (see _solve_alloc_incremental)
+        self._wf: dict | None = None
         # link ids whose capacity changed since the last incremental solve
         # (fault injection): fed into _wf_delta as extra dirty links so the
         # affected components re-fill against the new capacities
@@ -915,7 +934,7 @@ class FluidNetworkSim:
             bpair = binding[cols_all] & comm_mask[rows_all]
             JR = np.unique(rows_all[bpair])
             if JR.size:
-                rates[JR] = self._wf_fill_core(JR, binding, demand, live)
+                self._wf_fill_dispatch(rates, JR, binding, demand, live)
         self._wf = st = {
             "mask": comm_mask.copy(),
             "caps": caps_now,
@@ -1029,7 +1048,95 @@ class FluidNetworkSim:
         sub_binding = np.zeros(nl, dtype=bool)
         sub_binding[sorted(seenL)] = True
         JR = np.fromiter(sorted(JRs), dtype=np.int64, count=len(JRs))
-        rates[JR] = self._wf_fill_core(JR, sub_binding, demand, live)
+        self._wf_fill_dispatch(rates, JR, sub_binding, demand, live)
+
+    def _wf_components(
+        self, JR: np.ndarray, binding: np.ndarray
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Partition the closed member set ``JR`` into its connected
+        components of the (member x binding-link) graph.
+
+        ``JR`` is closed under the BFS that built it: every comm user of
+        every binding link reachable from a member of ``JR`` is itself in
+        ``JR`` (``_wf_rebuild`` takes all bound comm users; ``_wf_delta``
+        closes over the dirty seeds).  That closure is what makes each
+        returned ``(members, links)`` pair a self-contained water-filling
+        sub-problem: global live counts on a component's links equal its
+        in-component user counts, so the batched fill can recompute them
+        from the component's own sub-incidence.
+        """
+        rows_l, link_rows = self._inc.adjacency
+        jr = set(JR.tolist())
+        seen: set[int] = set()
+        comps: list[tuple[np.ndarray, np.ndarray]] = []
+        for j0 in JR.tolist():
+            if j0 in seen:
+                continue
+            seen.add(j0)
+            members = [j0]
+            links: list[int] = []
+            seenL: set[int] = set()
+            stack = [j0]
+            while stack:
+                u = stack.pop()
+                for g in rows_l[u]:
+                    if binding[g] and g not in seenL:
+                        seenL.add(g)
+                        links.append(g)
+                        for v in link_rows[g]:
+                            if v in jr and v not in seen:
+                                seen.add(v)
+                                members.append(v)
+                                stack.append(v)
+            members.sort()
+            links.sort()
+            comps.append((
+                np.array(members, dtype=np.int64),
+                np.array(links, dtype=np.int64),
+            ))
+        return comps
+
+    def _wf_fill_dispatch(
+        self,
+        rates: np.ndarray,
+        JR: np.ndarray,
+        binding: np.ndarray,
+        demand: np.ndarray,
+        live: np.ndarray,
+    ) -> None:
+        """Route a dirty-union refill to the fused or device-sharded fill.
+
+        The sharded path (``sharded=True``) re-partitions the union into
+        components and solves them as rows of bucketed vmap batches split
+        across devices (repro.cluster.shard).  Below ``MIN_COMPONENTS``
+        the batch cannot amortise a device round-trip, so small unions —
+        including every typical delta, which dirties one or two
+        components — keep the fused host fill.  Both paths write the same
+        slots of ``rates``; equivalence is tolerance-band (component
+        fills reorder float accumulation vs the union fill)."""
+        if self.sharded:
+            comps = self._wf_components(JR, binding)
+            if len(comps) >= _SHARD_MIN_COMPONENTS:
+                cap_l = self._inc.capacities
+                rows = []
+                for mem, lnks in comps:
+                    eff = np.where(
+                        demand[lnks] > cap_l[lnks] + _EPS,
+                        self.congested_efficiency,
+                        1.0,
+                    )
+                    rows.append((
+                        self._cap_now[mem],
+                        self._inc.sub_incidence(mem, lnks),
+                        cap_l[lnks] * eff,
+                    ))
+                filled, stats = batched_fill(rows, ndev=self._shard_devices)
+                for (mem, _), vec in zip(comps, filled):
+                    rates[mem] = vec
+                self.shard_stats.merge(stats)
+                return
+            self.shard_stats.fused_fills += 1
+        rates[JR] = self._wf_fill_core(JR, binding, demand, live)
 
     def _wf_fill_core(
         self,

@@ -112,7 +112,9 @@ class Metrics:
             "avg_jct_ms": self.avg_jct_ms,
             "p99_jct_ms": self.pct_jct_ms(99),
             "ecn_per_iter": self.ecn_per_iter(),
-            "jobs_finished": float(sum(1 for j in self.jobs if j.state == JobState.DONE)),
+            "jobs_finished": float(
+                sum(1 for j in self.jobs if j.state == JobState.DONE)
+            ),
         }
 
 
@@ -131,6 +133,7 @@ class ClusterSimulator:
         congested_efficiency: float = 0.88,
         vectorized: bool = True,
         incremental: bool = False,
+        sharded: bool = False,
         seed: int = 0,
         fault_schedule=None,
     ) -> None:
@@ -149,6 +152,7 @@ class ClusterSimulator:
             congested_efficiency=congested_efficiency,
             vectorized=vectorized,
             incremental=incremental,
+            sharded=sharded,
             seed=seed,
         )
         self.decisions: list[tuple[float, Decision]] = []

@@ -26,7 +26,7 @@ from __future__ import annotations
 import functools
 import hashlib
 from dataclasses import dataclass, field
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -199,6 +199,31 @@ class LinkIncidence:
         np.cumsum(reps[:-1], out=shift[1:])
         pos = np.repeat(self.starts[idx] - shift, reps) + np.arange(total)
         return self.cols_flat[pos].astype(np.int64)
+
+    def sub_incidence(self, rows: np.ndarray, links: np.ndarray) -> np.ndarray:
+        """Dense (len(rows), len(links)) boolean sub-incidence.
+
+        The device-sharded fill's slicing primitive: one component's
+        member rows against its binding links, cut out of the CSR store
+        in O(selected nnz) with a link-id LUT — columns of ``rows``
+        outside ``links`` are dropped (a component's members may also use
+        non-binding links; those never bound a filling increment).  Row
+        columns are unique by construction (``Topology.job_links`` dedups
+        per job), so the boolean matrix loses no multiplicity.
+        """
+        rows = np.asarray(rows, dtype=np.int64)
+        links = np.asarray(links, dtype=np.int64)
+        m = np.zeros((rows.size, links.size), dtype=bool)
+        if rows.size == 0 or links.size == 0:
+            return m
+        lut = np.full(self.num_links, -1, dtype=np.int64)
+        lut[links] = np.arange(links.size)
+        cols = self.flat_cols(rows)
+        rr = np.repeat(np.arange(rows.size), self.counts[rows])
+        loc = lut[cols]
+        keep = loc >= 0
+        m[rr[keep], loc[keep]] = True
+        return m
 
     # ------------------------- delta updates ---------------------- #
     # Serve mode reconfigures the running set one arrival/departure at a
@@ -396,7 +421,10 @@ class Topology:
         return self.links[f"host:r{r}s{s}"]
 
     def uplink(self, rack: int, src_rack: int, dst_rack: int) -> Link:
-        sp = _stable_hash(min(src_rack, dst_rack), max(src_rack, dst_rack)) % self.num_spines
+        sp = (
+            _stable_hash(min(src_rack, dst_rack), max(src_rack, dst_rack))
+            % self.num_spines
+        )
         return self.links[f"up:r{rack}-sp{sp}"]
 
     # -------------------------------------------------------------- #

@@ -137,7 +137,9 @@ class AffinityGraph:
         return out
 
     # -------------------------------------------------------------- #
-    def check_theorem1(self, shifts: Mapping[JobId, float], unit_ms: float = 1e-3) -> bool:
+    def check_theorem1(
+        self, shifts: Mapping[JobId, float], unit_ms: float = 1e-3
+    ) -> bool:
         """Theorem 1 correctness predicate, in its physically-meaningful form.
 
         Delaying a job by a multiple of its own iteration time leaves its
@@ -171,7 +173,11 @@ class AffinityGraph:
                 # combine: δ ≡ r0 (mod m0) ∧ δ ≡ r (mod m)
                 lcm = m0 // g * m
                 # solve r0 + k·m0 ≡ r (mod m)  →  k ≡ (r−r0)/g · inv(m0/g) (mod m/g)
-                k = ((r - r0) // g * pow(m0 // g, -1, m // g)) % (m // g) if m // g > 1 else 0
+                k = (
+                    ((r - r0) // g * pow(m0 // g, -1, m // g)) % (m // g)
+                    if m // g > 1
+                    else 0
+                )
                 r0, m0 = (r0 + k * m0) % lcm, lcm
         return True
 

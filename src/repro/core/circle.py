@@ -17,7 +17,7 @@ over rotation angles lives in :mod:`repro.core.compat`.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from functools import reduce
 from typing import Sequence
 
@@ -103,7 +103,9 @@ class CommPattern:
 
     @property
     def mean_gbps(self) -> float:
-        return float(sum(p.duration_ms * p.gbps for p in self.phases) / self.iter_time_ms)
+        return float(
+            sum(p.duration_ms * p.gbps for p in self.phases) / self.iter_time_ms
+        )
 
     @property
     def peak_gbps(self) -> float:
@@ -117,7 +119,11 @@ class CommPattern:
         return CommPattern(
             iter_time_ms=self.iter_time_ms * time_scale,
             phases=tuple(
-                Phase(p.start_ms * time_scale, p.duration_ms * time_scale, p.gbps * bw_scale)
+                Phase(
+                    p.start_ms * time_scale,
+                    p.duration_ms * time_scale,
+                    p.gbps * bw_scale,
+                )
                 for p in self.phases
             ),
             name=self.name,
@@ -197,7 +203,9 @@ class UnifiedCircle:
         num_angles = min(num_angles, MAX_ANGLES)
 
         # quantized iteration time of each job, in ms, so wraps divide evenly
-        q_iter = [quantize_ms(p.iter_time_ms, quantum_ms) * quantum_ms for p in patterns]
+        q_iter = [
+            quantize_ms(p.iter_time_ms, quantum_ms) * quantum_ms for p in patterns
+        ]
         wraps = tuple(int(round(perimeter / q)) for q in q_iter)
         # make num_angles a multiple of lcm(wraps): rotating job j by
         # num_angles / r_j steps (one private iteration) must be *exactly*

@@ -41,7 +41,12 @@ from typing import Sequence
 
 import numpy as np
 
-from .circle import CommPattern, UnifiedCircle, DEFAULT_PRECISION_DEG, DEFAULT_QUANTUM_MS
+from .circle import (
+    DEFAULT_PRECISION_DEG,
+    DEFAULT_QUANTUM_MS,
+    CommPattern,
+    UnifiedCircle,
+)
 
 __all__ = [
     "CompatResult",

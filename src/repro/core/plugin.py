@@ -39,7 +39,9 @@ from .compat import BatchStats, CompatResult, find_rotations, find_rotations_bat
 __all__ = ["PlacementCandidate", "CassiniDecision", "CassiniModule"]
 
 # (candidate, affinity graph or None when loop-discarded, per-link results)
-Evaluated = tuple["PlacementCandidate", AffinityGraph | None, dict[LinkId, CompatResult]]
+Evaluated = tuple[
+    "PlacementCandidate", AffinityGraph | None, dict[LinkId, CompatResult]
+]
 
 
 @dataclass

@@ -129,6 +129,10 @@ class ScenarioSpec:
     # exactly, so the bit-exact equivalence harness skips these specs and
     # dedicated tolerance/parity tests cover them instead
     incremental: bool = False
+    # device-sharded component fills on top of the incremental re-solve
+    # (repro.cluster.shard): dirty components batch onto jax.devices()
+    # instead of one fused host fill; same tolerance band as incremental
+    sharded: bool = False
     # optional deterministic fault schedule (repro.chaos): called with the
     # built (topology, jobs) so seeded generators can target real link
     # names / job ids; the simulator replays it during run().  The churn-*
@@ -155,12 +159,14 @@ class ScenarioSpec:
         *,
         vectorized: bool | None = None,
         incremental: bool | None = None,
+        sharded: bool | None = None,
     ) -> BuiltScenario:
         """Instantiate topology, trace, scheduler and simulator.
 
-        ``vectorized`` / ``incremental`` override the spec's fluid-engine
-        choices (the equivalence harness runs every spec both ways, with
-        the incremental re-solve forced off for bit-exact comparisons)."""
+        ``vectorized`` / ``incremental`` / ``sharded`` override the
+        spec's fluid-engine choices (the equivalence harness runs every
+        spec both ways, with the incremental re-solve forced off for
+        bit-exact comparisons)."""
         topo = self.topology()
         jobs = self.trace(topo)
         sched = (
@@ -177,6 +183,7 @@ class ScenarioSpec:
             incremental=(
                 self.incremental if incremental is None else incremental
             ),
+            sharded=self.sharded if sharded is None else sharded,
             seed=self.sim_seed,
             fault_schedule=self.make_fault_schedule(topo, jobs),
         )
@@ -192,10 +199,14 @@ class ScenarioSpec:
         horizon_ms: float | None = None,
         vectorized: bool | None = None,
         incremental: bool | None = None,
+        sharded: bool | None = None,
     ) -> ScenarioRun:
         """Build and simulate to the horizon; returns metrics + wall time."""
         built = self.build(
-            scheduler, vectorized=vectorized, incremental=incremental
+            scheduler,
+            vectorized=vectorized,
+            incremental=incremental,
+            sharded=sharded,
         )
         t0 = time.time()
         metrics = built.simulator.run(
@@ -514,7 +525,10 @@ for _racks in RACK_SCALING_SWEEP:
 # recipe again, but the from-scratch water-filling solve is no longer
 # affordable per event — these specs opt into the incremental re-solve
 # (tolerance-band equivalent to the scalar oracle; bit-exact with
-# ``incremental=False``, pinned at a short horizon by the slow harness).
+# ``incremental=False``, pinned at a short horizon by the slow harness)
+# and the device-sharded component fills on top of it (large dirty
+# unions batch onto jax.devices(); same tolerance band, pinned by
+# tests/test_fluid_sharded.py under the forced-host-device CI leg).
 RACK_SCALING_XL: tuple[int, ...] = (256, 1024)
 
 for _racks in RACK_SCALING_XL:
@@ -524,12 +538,14 @@ for _racks in RACK_SCALING_XL:
                     "servers, alternating 50/100 Gbps NIC generations, "
                     "Poisson multi-tenant load growing with the fabric; "
                     "fluid engine runs the incremental water-filling "
-                    "re-solve (tolerance-band oracle equivalence)",
+                    "re-solve (tolerance-band oracle equivalence) with "
+                    "device-sharded component fills",
         topology=functools.partial(_rack_scaling_topology, _racks),
         trace=functools.partial(_rack_scaling_trace, racks=_racks),
         epoch_ms=240_000.0,
         horizon_ms=1_800_000.0,
         incremental=True,
+        sharded=True,
     ))
 
 

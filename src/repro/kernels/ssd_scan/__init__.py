@@ -1,1 +1,3 @@
 from . import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -33,7 +33,7 @@ from repro.configs import get_config, list_archs
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import SHAPES, build_model
-from repro.parallel.sharding import batch_spec, param_shardings
+from repro.parallel.sharding import param_shardings
 from repro.models.common import make_spec
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -44,7 +44,10 @@ VERSION = 2  # bump to invalidate cached cells after analyzer changes
 def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
     cfg = get_config(arch)
     if shape == "long_500k" and not cfg.sub_quadratic:
-        return False, "full-attention arch: 500k-context decode is quadratic-history (skip per assignment; DESIGN.md §4)"
+        return False, (
+            "full-attention arch: 500k-context decode is quadratic-history "
+            "(skip per assignment; DESIGN.md §4)"
+        )
     return True, ""
 
 
@@ -59,7 +62,9 @@ _COLLECTIVES = (
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
     "collective-permute",
 )
-_ARRAY_RE = re.compile(r"(f32|bf16|f16|f64|s32|u32|s64|u64|s8|u8|pred|f8e4m3fn)\[([0-9,]*)\]")
+_ARRAY_RE = re.compile(
+    r"(f32|bf16|f16|f64|s32|u32|s64|u64|s8|u8|pred|f8e4m3fn)\[([0-9,]*)\]"
+)
 
 
 def _first_array_bytes(line: str) -> int:
@@ -120,7 +125,10 @@ def collective_bytes_from_hlo(hlo: str) -> dict:
         for line in lines:
             ls = line.strip()
             for c in _COLLECTIVES:
-                if re.search(rf"= [^=]*\b{c}\(", ls) or f" {c}(" in ls.split("=")[-1][:80]:
+                if (
+                    re.search(rf"= [^=]*\b{c}\(", ls)
+                    or f" {c}(" in ls.split("=")[-1][:80]
+                ):
                     b = _first_array_bytes(ls)
                     per_op[c] += b * mult
                     count[c] += mult

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import get_config, list_archs
 from repro.models.api import build_model

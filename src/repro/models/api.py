@@ -14,10 +14,7 @@ Shape registry (assignment):
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +22,7 @@ import jax.numpy as jnp
 from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
 
 from . import encdec, hybrid, transformer
-from .common import ArchConfig, batch_axes, shard
+from .common import ArchConfig, batch_axes
 
 __all__ = ["SHAPES", "ShapeSpec", "Model", "build_model"]
 
@@ -152,7 +149,7 @@ class Model:
         """NamedSharding pytree for a decode state (mirrors the sharding
         logic of the init_*_decode_state functions — needed as jit
         in_shardings so dry-run memory analysis sees distributed caches)."""
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding
 
         from .common import make_spec
 

@@ -6,7 +6,6 @@ validated against the same math in interpret mode.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -244,7 +243,9 @@ def init_attention(key, cfg: ArchConfig, dtype):
         "wq": dense_init(k1, (cfg.d_model, cfg.num_heads, hd), dtype, cfg.d_model),
         "wk": dense_init(k2, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model),
         "wv": dense_init(k3, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model),
-        "wo": dense_init(k4, (cfg.num_heads, hd, cfg.d_model), dtype, cfg.num_heads * hd),
+        "wo": dense_init(
+            k4, (cfg.num_heads, hd, cfg.d_model), dtype, cfg.num_heads * hd
+        ),
     }
     if cfg.qkv_bias:
         p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)

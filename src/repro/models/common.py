@@ -17,8 +17,7 @@ Design rules (they matter at 512 devices):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
-from functools import partial
+from dataclasses import dataclass, replace
 from typing import Any, Sequence
 
 import jax

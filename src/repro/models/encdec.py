@@ -108,9 +108,15 @@ def init_encdec(key, cfg: ArchConfig):
             "ln2": jnp.ones((cfg.d_model,), dtype),
             "attn": init_attention(k1, cfg, dtype),
             "xattn": {
-                "wq": dense_init(k2, (cfg.d_model, cfg.num_heads, hd), dtype, cfg.d_model),
-                "wk": dense_init(k3, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model),
-                "wv": dense_init(k3, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model),
+                "wq": dense_init(
+                    k2, (cfg.d_model, cfg.num_heads, hd), dtype, cfg.d_model
+                ),
+                "wk": dense_init(
+                    k3, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model
+                ),
+                "wv": dense_init(
+                    k3, (cfg.d_model, cfg.num_kv_heads, hd), dtype, cfg.d_model
+                ),
                 "wo": dense_init(k4, (cfg.num_heads, hd, cfg.d_model), dtype,
                                  cfg.num_heads * hd),
             },
@@ -156,8 +162,12 @@ def _enc_kv(params_dec_stack, enc_out, cfg, mesh=None):
     layer; shard batch over the data axes and head_dim over model (20 heads
     do not divide a 16-way axis, hd=64 does)."""
     def mk(lp):
-        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"].astype(enc_out.dtype))
-        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"].astype(enc_out.dtype))
+        k = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, lp["xattn"]["wk"].astype(enc_out.dtype)
+        )
+        v = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, lp["xattn"]["wv"].astype(enc_out.dtype)
+        )
         return k, v
 
     kx, vx = jax.vmap(mk, in_axes=(0,))(params_dec_stack)
@@ -175,7 +185,9 @@ def encdec_forward(params, cfg: ArchConfig, mesh, frames, tokens) -> jax.Array:
     enc_out = encode(params, cfg, mesh, frames)
     kx, vx = _enc_kv(params["decoder"], enc_out, cfg, mesh)
 
-    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(
+        cfg.d_model
+    ).astype(cfg.dtype)
     x = shard(x, mesh, ba, None, None)
     remat = cfg.remat != "none"
 
@@ -201,7 +213,9 @@ class EncDecDecodeState(NamedTuple):
     pos: jax.Array
 
 
-def init_encdec_decode_state(params, cfg: ArchConfig, batch, max_seq, frames, mesh=None):
+def init_encdec_decode_state(
+    params, cfg: ArchConfig, batch, max_seq, frames, mesh=None
+):
     enc_out = encode(params, cfg, mesh, frames)
     kx, vx = _enc_kv(params["decoder"], enc_out, cfg, mesh)
     L = cfg.num_layers
@@ -221,7 +235,9 @@ def init_encdec_decode_state(params, cfg: ArchConfig, batch, max_seq, frames, me
 
 
 def encdec_decode_step(params, cfg: ArchConfig, mesh, tokens, state):
-    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(
+        cfg.d_model
+    ).astype(cfg.dtype)
     positions = jnp.broadcast_to(state.pos, (tokens.shape[0], 1))
 
     def body(xx, inp):

@@ -86,7 +86,9 @@ def hybrid_forward(params, cfg: ArchConfig, mesh, tokens: jax.Array) -> jax.Arra
     ba = batch_axes(mesh)
     groups, per_group, trailing = hybrid_layout(cfg)
     remat = cfg.remat != "none"
-    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(
+        cfg.d_model
+    ).astype(cfg.dtype)
     x = shard(x, mesh, ba, None, None)
 
     sa = cast_block_params(params["shared_attn"], cfg.dtype)
@@ -153,7 +155,9 @@ def init_hybrid_decode_state(cfg: ArchConfig, batch: int, max_seq: int, mesh=Non
 
 def hybrid_decode_step(params, cfg: ArchConfig, mesh, tokens, state):
     groups, per_group, trailing = hybrid_layout(cfg)
-    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(cfg.d_model).astype(cfg.dtype)
+    x = params["embed"][tokens].astype(cfg.dtype) * jnp.sqrt(
+        cfg.d_model
+    ).astype(cfg.dtype)
     positions = jnp.broadcast_to(state.pos, (tokens.shape[0], 1))
     sa = cast_block_params(params["shared_attn"], cfg.dtype)
 

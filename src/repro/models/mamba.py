@@ -87,7 +87,8 @@ def ssd_chunked(
     def scan_fn(carry, inp):
         st, chunk_decay = inp                                # (B,H,N,P), (B,H)
         new = carry * jnp.exp(chunk_decay)[..., None, None] + st
-        return new, carry                                    # emit state BEFORE this chunk
+        # emit state BEFORE this chunk
+        return new, carry
 
     init = jnp.zeros((b, h, n, p), jnp.float32)
     _, prev_states = jax.lax.scan(

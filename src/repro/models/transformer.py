@@ -12,7 +12,6 @@ concatenated in front of the token embeddings).  Heterogeneous stacks
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

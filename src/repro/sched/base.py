@@ -112,7 +112,9 @@ def sticky_placement(
     Candidate diversity comes from permuting ``rack_order`` (which racks new
     workers prefer) and ``job_order`` (who picks first).
     """
-    rack_pref = list(rack_order) if rack_order is not None else list(range(topo.num_racks))
+    rack_pref = (
+        list(rack_order) if rack_order is not None else list(range(topo.num_racks))
+    )
     order = list(job_order) if job_order is not None else list(range(len(jobs_workers)))
 
     taken: set[int] = set()
@@ -222,7 +224,9 @@ def pack_placement(
     free: dict[int, list[int]] = {r: [] for r in range(topo.num_racks)}
     for g in range(topo.num_gpus):
         free[topo.rack_of(g)].append(g)
-    rack_pref = list(rack_order) if rack_order is not None else list(range(topo.num_racks))
+    rack_pref = (
+        list(rack_order) if rack_order is not None else list(range(topo.num_racks))
+    )
     order = list(job_order) if job_order is not None else list(range(len(jobs_workers)))
     placements: PlacementMap = {}
     for idx in order:

@@ -5,7 +5,7 @@ time-shifts differ between the baseline and the CASSINI-augmented run."""
 
 from __future__ import annotations
 
-from repro.sched.base import ClusterState, Decision, PlacementMap, Scheduler
+from repro.sched.base import ClusterState, PlacementMap, Scheduler
 
 __all__ = ["FixedPlacementScheduler"]
 

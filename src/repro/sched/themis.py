@@ -63,7 +63,10 @@ class ThemisScheduler(Scheduler):
             ]
             if not candidates:
                 break
-            worst = max(candidates, key=lambda jid: self._rho(by_id[jid], alloc[jid], fair))
+            worst = max(
+                candidates,
+                key=lambda jid: self._rho(by_id[jid], alloc[jid], fair),
+            )
             alloc[worst] += 1
             budget -= 1
         return {jid: a for jid, a in alloc.items() if a > 0}

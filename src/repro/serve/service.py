@@ -87,6 +87,7 @@ class SchedulerService:
         congested_efficiency: float = 0.88,
         vectorized: bool = True,
         incremental: bool = False,
+        sharded: bool = False,
         seed: int = 0,
         queue_size: int = 1024,
         submit_timeout_s: float | None = None,
@@ -106,6 +107,7 @@ class SchedulerService:
             congested_efficiency=congested_efficiency,
             vectorized=vectorized,
             incremental=incremental,
+            sharded=sharded,
             seed=seed,
         )
         # optional repro.chaos.FaultSchedule replayed against the embedded

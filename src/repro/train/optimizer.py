@@ -83,7 +83,9 @@ def adamw_update(
         )
 
     flat = jax.tree.map(upd, grads, params, state.mu, state.nu)
-    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(
+        lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple)
+    )
     new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
     new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
     return (

@@ -16,8 +16,6 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from pathlib import Path
-from typing import Any, Callable
 
 import jax
 

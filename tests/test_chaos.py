@@ -25,7 +25,6 @@ from repro.chaos.events import (
 )
 from repro.chaos.inject import DOWN_GBPS
 from repro.cluster import (
-    ClusterSimulator,
     FluidNetworkSim,
     Topology,
     poisson_trace,
@@ -34,7 +33,7 @@ from repro.cluster import (
 from repro.cluster.errors import UnknownJobError, UnknownLinkError
 from repro.engine import get_scenario
 from repro.sched.base import ClusterState, Decision, Scheduler
-from repro.serve import JobArrival, QueryPlacement, SchedulerService
+from repro.serve import JobArrival, SchedulerService
 
 CHURN = ("churn-linkfail", "churn-elastic", "churn-jitter")
 

@@ -14,7 +14,6 @@ from repro.cluster import (
 )
 from repro.cluster.network import segments_from_pattern
 from repro.core.circle import CommPattern, Phase
-from repro.profiles import get_profile
 from repro.sched import CassiniAugmented
 from repro.sched.fixed import FixedPlacementScheduler
 

@@ -19,7 +19,6 @@ from repro.engine import (
     register_scenario,
 )
 from repro.engine.pipeline import (
-    AlignStage,
     AllocateStage,
     Allocation,
     ProposalSet,

@@ -14,7 +14,7 @@ counts), and the state-invalidation rules that keep the deltas honest.
 import numpy as np
 import pytest
 
-from repro.cluster import FluidNetworkSim, Topology, contended_snapshot
+from repro.cluster import FluidNetworkSim, contended_snapshot
 from repro.cluster import network as network_mod
 from repro.engine.scenarios import get_scenario
 

@@ -1,0 +1,257 @@
+"""Device-sharded component fills: parity, fallback and invariance.
+
+The ``sharded=True`` engine re-partitions every dirty-component union
+into its independent water-filling components and solves them as rows of
+bucketed vmap batches split across ``jax.devices()`` with shard_map
+(repro.cluster.shard).  These tests pin:
+
+- tolerance-band parity of every probed solve against the from-scratch
+  ``_solve_alloc`` (itself bit-exact against the scalar oracle) at
+  16/64/256 racks, with real dispatches happening;
+- aggregate equivalence (identical iteration counts) across the
+  sharded, incremental and scalar-oracle engines;
+- the transparent single-device fallback (no mesh, same results);
+- that the visible device count never changes decisions; and
+- the empty-dirty-set no-op (a solve with no member diff refills
+  nothing and leaves the shard telemetry untouched).
+
+All of it runs unchanged under the forced-host-device CI leg
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``), which is what
+exercises the devices>1 shard_map path on every PR.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import FluidNetworkSim, contended_snapshot
+from repro.cluster import network as network_mod
+from repro.cluster import shard as shard_mod
+from repro.engine.scenarios import get_scenario
+
+# the documented equivalence band (same band as the incremental engine)
+BAND = dict(rtol=1e-9, atol=1e-9)
+
+
+def _contended(racks: int, tenants: int = 1):
+    spec = get_scenario(f"rack-scaling-{racks}")
+    topo = spec.topology()
+    jobs = contended_snapshot(topo, lambda: spec.trace(topo), tenants=tenants)
+    return topo, jobs
+
+
+def _sharded_net(topo, *, ndev=None, seed=0):
+    net = FluidNetworkSim(
+        topo, seed=seed, incremental=True, sharded=True
+    )
+    net._shard_devices = ndev
+    return net
+
+
+def _probe_parity(racks, window_ms, *, ndev=None, every=5, monkeypatch=None):
+    """Advance the sharded engine, comparing every ``every``-th solve
+    against the from-scratch solve on the same comm set."""
+    topo, jobs = _contended(racks)
+    net = _sharded_net(topo, ndev=ndev, seed=racks)
+    net.configure(jobs)
+    if monkeypatch is not None:
+        # shard even single-component unions so the device path sees
+        # every solve, not just the large rebuild-shaped ones
+        monkeypatch.setattr(network_mod, "_SHARD_MIN_COMPONENTS", 1)
+    stats = {"solves": 0, "probes": 0}
+    orig = FluidNetworkSim._solve_alloc_incremental
+
+    def probe(self, comm_mask):
+        rates, marks = orig(self, comm_mask)
+        stats["solves"] += 1
+        if stats["solves"] % every == 0:
+            r2, m2 = self._solve_alloc(comm_mask)
+            np.testing.assert_allclose(rates, r2, **BAND)
+            np.testing.assert_allclose(marks, m2, **BAND)
+            stats["probes"] += 1
+        return rates, marks
+
+    FluidNetworkSim._solve_alloc_incremental = probe
+    try:
+        net.advance(window_ms)
+    finally:
+        FluidNetworkSim._solve_alloc_incremental = orig
+    assert stats["probes"] > 5
+    return net
+
+
+def test_sharded_probe_parity_16rack(monkeypatch):
+    net = _probe_parity(16, 2_000.0, monkeypatch=monkeypatch)
+    assert net.shard_stats.dispatches > 0
+    assert net.shard_stats.components >= net.shard_stats.dispatches
+
+
+def test_sharded_probe_parity_64rack(monkeypatch):
+    net = _probe_parity(64, 800.0, monkeypatch=monkeypatch)
+    assert net.shard_stats.dispatches > 0
+
+
+@pytest.mark.slow
+def test_sharded_probe_parity_256rack(monkeypatch):
+    """The acceptance probe at scale: every sampled sharded solve on the
+    256-rack fabric stays inside the band against the from-scratch solve
+    (itself pinned bit-exact to the scalar oracle)."""
+    net = _probe_parity(256, 600.0, every=13, monkeypatch=monkeypatch)
+    assert net.shard_stats.dispatches > 0
+    assert net.shard_stats.devices >= 1
+
+
+def test_sharded_aggregate_vs_incremental_and_oracle():
+    """Identical total iteration counts across the sharded engine, the
+    unsharded incremental engine and the scalar oracle on the same
+    contended 16-rack window — band-level drift must never move an
+    event, whatever engine or device count solves the fills."""
+    iters = {}
+    for key, kw in (
+        ("sharded", dict(incremental=True, sharded=True)),
+        ("incremental", dict(incremental=True)),
+        ("scalar", dict(vectorized=False)),
+    ):
+        topo, jobs = _contended(16)
+        net = FluidNetworkSim(topo, seed=7, **kw)
+        net.configure(jobs)
+        net.advance(3_000.0)
+        iters[key] = sum(j.iters_done for j in jobs)
+    assert iters["sharded"] == iters["incremental"] == iters["scalar"] > 0
+
+
+def test_single_device_fallback(monkeypatch):
+    """``ndev=1`` must skip shard_map entirely (plain jit(vmap)) and
+    still produce in-band results with real dispatches."""
+    monkeypatch.setattr(network_mod, "_SHARD_MIN_COMPONENTS", 1)
+    topo, jobs = _contended(16)
+    net = _sharded_net(topo, ndev=1, seed=3)
+    net.configure(jobs)
+    net.advance(1_000.0)
+    assert net.shard_stats.dispatches > 0
+    assert net.shard_stats.devices == 1
+    # no row padding is ever needed on one device
+    assert net.shard_stats.padded_rows == 0
+
+
+def test_device_count_invariance(monkeypatch):
+    """Decisions must not depend on how many devices solve the fills:
+    the same window advanced under ndev=1 and ndev=<all visible> must
+    produce identical iteration counts and in-band iteration traces."""
+    import jax
+
+    monkeypatch.setattr(network_mod, "_SHARD_MIN_COMPONENTS", 1)
+    runs = {}
+    for ndev in (1, len(jax.devices())):
+        topo, jobs = _contended(16)
+        net = _sharded_net(topo, ndev=ndev, seed=11)
+        net.configure(jobs)
+        net.advance(1_500.0)
+        runs[ndev] = (
+            [j.iters_done for j in jobs],
+            [j.iter_times_ms for j in jobs],
+            net.shard_stats,
+        )
+    (it1, tr1, st1), (itN, trN, stN) = runs[1], runs[len(jax.devices())]
+    assert it1 == itN
+    for a, b in zip(tr1, trN):
+        np.testing.assert_allclose(a, b, **BAND)
+    assert st1.dispatches > 0 and stN.dispatches > 0
+    assert stN.devices == len(jax.devices())
+
+
+def test_batched_fill_matches_fused_fill():
+    """Direct parity of the production dispatch against the fused host
+    fill on a real rebuild-shaped union, at every device count."""
+    import jax
+
+    topo, jobs = _contended(64)
+    net = FluidNetworkSim(topo, seed=5, incremental=True)
+    net.configure(jobs)
+    net.advance(300.0)
+    comm = net._is_comm & net._alive & (net._dly <= 1e-9)
+    caps_now = np.where(comm, net._cap_now, 0.0)
+    st = net._wf_rebuild(comm, caps_now)
+    binding, demand, live = st["binding"], st["demand"], st["live"]
+    rows_all, cols_all = net._inc.flat_pairs
+    bpair = binding[cols_all] & comm[rows_all]
+    JR = np.unique(rows_all[bpair])
+    if JR.size == 0:
+        pytest.skip("no contention at this probe point")
+    fused = net._wf_fill_core(JR, binding, demand, live)
+    comps = net._wf_components(JR, binding)
+    # the component partition covers the union exactly, no overlaps
+    all_members = np.concatenate([m for m, _ in comps])
+    assert sorted(all_members.tolist()) == JR.tolist()
+    cap_l = net._inc.capacities
+    rows = []
+    for mem, lnks in comps:
+        eff = np.where(
+            demand[lnks] > cap_l[lnks] + 1e-9, net.congested_efficiency, 1.0
+        )
+        rows.append((
+            net._cap_now[mem],
+            net._inc.sub_incidence(mem, lnks),
+            cap_l[lnks] * eff,
+        ))
+    ref = np.zeros(len(net._slots))
+    ref[JR] = fused
+    prev = None
+    for ndev in (1, len(jax.devices())):
+        out, stats = shard_mod.batched_fill(rows, ndev=ndev)
+        got = np.zeros(len(net._slots))
+        for (mem, _), vec in zip(comps, out):
+            got[mem] = vec
+        np.testing.assert_allclose(got[JR], ref[JR], **BAND)
+        assert stats.components == len(comps)
+        if prev is not None:
+            # device count must not change the floats at all
+            np.testing.assert_array_equal(got[JR], prev)
+        prev = got[JR]
+
+
+def test_empty_dirty_set_is_noop():
+    """A repeat solve with no member diff must take the delta path,
+    refill nothing and leave the shard telemetry untouched."""
+    topo, jobs = _contended(16)
+    net = _sharded_net(topo, seed=2)
+    net.configure(jobs)
+    net.advance(500.0)
+    comm = net._is_comm & net._alive & (net._dly <= 1e-9)
+    r1, m1 = net._solve_alloc_incremental(comm.copy())
+    before_delta = net.alloc_delta_solves
+    disp = net.shard_stats.dispatches
+    fused = net.shard_stats.fused_fills
+    r2, m2 = net._solve_alloc_incremental(comm.copy())
+    assert net.alloc_delta_solves == before_delta + 1
+    assert net.shard_stats.dispatches == disp
+    assert net.shard_stats.fused_fills == fused
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(m1, m2)
+
+
+def test_sub_incidence_matches_matrix():
+    """The CSR slicing helper equals the dense incidence restricted to
+    the requested rows and links."""
+    topo, jobs = _contended(16)
+    inc = topo.incidence([j.placement for j in jobs])
+    m = inc.matrix
+    rng = np.random.default_rng(0)
+    rows = rng.choice(inc.num_rows, size=min(6, inc.num_rows), replace=False)
+    links = rng.choice(inc.num_links, size=min(9, inc.num_links), replace=False)
+    got = inc.sub_incidence(rows, links)
+    want = m[np.ix_(rows, links)]
+    assert (got == want).all()
+    # degenerate slices
+    assert inc.sub_incidence(rows[:0], links).shape == (0, links.size)
+    assert inc.sub_incidence(rows, links[:0]).shape == (rows.size, 0)
+
+
+def test_sharded_off_without_incremental():
+    """``sharded`` rides on the incremental decomposition — without it
+    the knob must quietly stay off (and never dispatch)."""
+    topo, jobs = _contended(16)
+    net = FluidNetworkSim(topo, seed=0, incremental=False, sharded=True)
+    assert net.sharded is False
+    net.configure(jobs)
+    net.advance(500.0)
+    assert net.shard_stats.dispatches == 0

@@ -22,7 +22,7 @@ import numpy as np
 import pytest
 
 from repro.cluster import FluidNetworkSim, Topology, snapshot_trace
-from repro.cluster.job import Job, JobState
+from repro.cluster.job import JobState
 from repro.engine.scenarios import _REGISTRY, get_scenario
 
 MODELS = ["vgg19", "wideresnet101", "dlrm", "gpt2", "resnet50", "bert"]

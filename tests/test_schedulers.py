@@ -24,7 +24,9 @@ def _state(topo, n_jobs=5, workers=7):
     return ClusterState(topology=topo, now_ms=0.0, running=jobs, pending=[])
 
 
-@pytest.mark.parametrize("sched_cls", [ThemisScheduler, PolluxScheduler, RandomScheduler])
+@pytest.mark.parametrize(
+    "sched_cls", [ThemisScheduler, PolluxScheduler, RandomScheduler]
+)
 def test_allocation_never_oversubscribes(sched_cls):
     topo = Topology.paper_testbed()
     state = _state(topo, n_jobs=6, workers=9)  # 54 demanded > 24 GPUs

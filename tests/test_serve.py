@@ -10,7 +10,7 @@ from itertools import islice
 
 import pytest
 
-from repro.cluster import ClusterSimulator, Topology, iter_poisson_trace, poisson_trace
+from repro.cluster import Topology, iter_poisson_trace, poisson_trace
 from repro.engine import get_scenario
 from repro.serve import (
     JobArrival,

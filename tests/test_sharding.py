@@ -5,7 +5,6 @@ covered by the dry-run cells)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.common import make_spec
