@@ -1,0 +1,168 @@
+"""Kernel autotune driver: search, persist, and report the tuning table.
+
+    # report how the committed table performs vs the untuned defaults
+    PYTHONPATH=src python -m benchmarks.autotune
+
+    # full measured search; write the winners to the committed table
+    # location (src/repro/kernels/tune/tables/<backend>.json) and print
+    # the before/after per-bucket delta report
+    PYTHONPATH=src python -m benchmarks.autotune --retune
+
+    # nightly: search into an artifact file + drift summary vs committed
+    PYTHONPATH=src python -m benchmarks.autotune --retune \
+        --out benchmarks/artifacts/proposed_tuning_table.json --drift
+
+Without ``--retune`` the driver loads the committed table and re-measures
+each of its entries against the untuned defaults on this machine — a
+cheap health check that the committed winners still win here.
+
+With ``--retune`` it runs the full measured grid / successive-halving
+search (:mod:`repro.kernels.tune.search`): every candidate is verified
+against the untuned output before it may be timed, winners only displace
+defaults past a 5% hysteresis margin, and only non-default winners are
+persisted (an absent entry *means* defaults).  The per-bucket report
+shows default → tuned wall time and the chosen parameters.
+
+``--drift`` compares the freshly written table against the committed one
+entry by entry (added / removed / changed schedules) — the nightly CI
+job uploads the proposed table as an artifact and puts this summary in
+the job log; push/PR jobs never consume it, keeping gates deterministic.
+The process exit code is always 0 for drift (it is informational), and
+nonzero only when ``--retune`` produced no measurements at all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.kernels import tune
+from repro.kernels.tune.search import (
+    make_workload,
+    results_to_table,
+    tune_all,
+)
+
+
+def _fmt_params(params: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(params.items()))
+
+
+def _report_retune(results) -> None:
+    print(f"{'variant/bucket':<28} {'default':>10} {'tuned':>10} "
+          f"{'speedup':>8}  params")
+    for r in results:
+        tag = "" if r.is_default else "  <- tuned"
+        print(f"{r.variant + '/' + str(r.bucket):<28} "
+              f"{r.default_us:>9.0f}u {r.tuned_us:>9.0f}u "
+              f"{r.speedup:>7.2f}x  {_fmt_params(dict(r.params))}{tag}")
+
+
+def _check_committed(repeats: int) -> int:
+    """Re-measure the committed table's entries vs defaults here."""
+    table = tune.load_table()
+    print(f"committed table: {table.source} (backend {table.backend}, "
+          f"{len(table.entries)} entries)")
+    if not table.entries:
+        print("no tuned entries; nothing to measure")
+        return 0
+    from repro.kernels.tune.search import _timeit  # shared min-of-N timer
+
+    print(f"{'variant/bucket':<28} {'default':>10} {'tuned':>10} "
+          f"{'speedup':>8}  params")
+    for key, params in sorted(table.entries.items()):
+        variant, _, bucket = key.partition("/")
+        run = make_workload(variant, int(bucket))
+        defaults = tune.clamp_to_width(
+            variant, int(bucket), tune.DEFAULTS[variant]
+        )
+        merged = {**defaults, **params}
+        run(defaults), run(merged)  # compile both schedules
+        d_us = _timeit(lambda: run(defaults), warmup=1, repeats=repeats)
+        t_us = _timeit(lambda: run(merged), warmup=1, repeats=repeats)
+        print(f"{key:<28} {d_us:>9.0f}u {t_us:>9.0f}u "
+              f"{d_us / t_us:>7.2f}x  {_fmt_params(merged)}")
+    return 0
+
+
+def _drift_summary(proposed: dict, committed_path: Path) -> None:
+    """Entry-by-entry diff of a proposed table vs the committed one."""
+    try:
+        committed = json.loads(committed_path.read_text()).get("entries", {})
+    except (OSError, ValueError):
+        committed = {}
+    new = proposed.get("entries", {})
+    added = sorted(set(new) - set(committed))
+    removed = sorted(set(committed) - set(new))
+    changed = sorted(
+        k for k in set(new) & set(committed) if new[k] != committed[k]
+    )
+    print("\n== drift vs committed table ==")
+    print(f"committed: {committed_path} ({len(committed)} entries); "
+          f"proposed: {len(new)} entries")
+    if not (added or removed or changed):
+        print("no drift: the committed table matches this machine's search")
+        return
+    for k in added:
+        print(f"  + {k}: {_fmt_params(new[k])}")
+    for k in removed:
+        print(f"  - {k}: {_fmt_params(committed[k])} (search now keeps "
+              "defaults)")
+    for k in changed:
+        print(f"  ~ {k}: {_fmt_params(committed[k])} -> "
+              f"{_fmt_params(new[k])}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--retune", action="store_true",
+                    help="run the measured search and write a table")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="table output path (default: the committed "
+                         "per-backend file under tables/)")
+    ap.add_argument("--variants", default=None,
+                    help="comma-separated variant filter")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated bucket filter")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="min-of-N repeats in the final timing rung")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--drift", action="store_true",
+                    help="after --retune, print a drift summary vs the "
+                         "committed table (informational, never fails)")
+    args = ap.parse_args(argv)
+
+    if not args.retune:
+        return _check_committed(args.repeats)
+
+    variants = args.variants.split(",") if args.variants else None
+    buckets = (
+        [int(b) for b in args.buckets.split(",")] if args.buckets else None
+    )
+    results = tune_all(
+        variants, buckets, repeats=args.repeats, seed=args.seed,
+        progress=lambda r: print(
+            f"  searched {r.variant}/{r.bucket}: "
+            f"{_fmt_params(dict(r.params))} x{r.speedup:.2f}",
+            flush=True,
+        ),
+    )
+    if not results:
+        print("no (variant, bucket) keys matched the filters", file=sys.stderr)
+        return 1
+    doc = results_to_table(results)
+    out = args.out or tune.default_table_path()
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"\nwrote {out} ({len(doc['entries'])} tuned entries, backend "
+          f"{doc['backend']})\n")
+    _report_retune(results)
+    if args.drift:
+        _drift_summary(doc, tune.default_table_path())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

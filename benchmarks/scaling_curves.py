@@ -19,6 +19,13 @@ The default horizon matches the slow-marked rack-scaling smoke tests
 (600 s simulated), which keeps the full 3-point × 2-scheduler sweep
 around half a minute of wall time; raise ``--horizon-ms`` for a
 publication-grade run.
+
+A psim-style **link-load heatmap** rides along (``--heatmap-racks 16``
+by default, ``--heatmap-racks 0`` to skip): one extra ``th+cassini`` run
+with a :class:`repro.cluster.linkload.LinkLoadRecorder` attached, whose
+per-link utilization and ECN-mark timelines render as two links × time
+heat panels (``link_load_heatmap.png`` + JSON sidecar with the raw
+timelines, same artifact directory).
 """
 
 from __future__ import annotations
@@ -173,6 +180,97 @@ def render(results: dict[str, list[dict]], out_png: str,
     plt.close(fig)
 
 
+def link_load_timeline(
+    racks: int, scheduler: str, horizon_ms: float, bucket_ms: float
+) -> dict:
+    """One recorded ``rack-scaling-{racks}`` run; returns the dense
+    timeline dict (see :meth:`LinkLoadRecorder.timeline`) plus run
+    metadata."""
+    from repro.cluster.linkload import LinkLoadRecorder
+    from repro.engine.scenarios import get_scenario
+
+    spec = get_scenario(f"rack-scaling-{racks}")
+    built = spec.build(scheduler)
+    rec = LinkLoadRecorder(bucket_ms=bucket_ms)
+    built.simulator.net.attach_link_recorder(rec)
+    built.simulator.run(built.jobs, horizon_ms=horizon_ms)
+    tl = rec.timeline()
+    tl["scenario"] = f"rack-scaling-{racks}"
+    tl["scheduler"] = scheduler
+    tl["recorder"] = rec
+    return tl
+
+
+def render_heatmap(tl: dict, out_png: str) -> None:
+    """Links × time heat panels: utilization (top) and ECN-mark intensity
+    (bottom), links ordered by mean utilization so the contended core of
+    the fabric reads off the top rows."""
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+    import numpy as np
+    from matplotlib.colors import LinearSegmentedColormap
+
+    util = tl["utilization"]
+    marks = tl["marks_per_ms"]
+    t_min = tl["t_ms"] / 60_000.0
+    order = np.argsort(-util.mean(axis=0), kind="stable")
+    names = [tl["link_names"][i] for i in order]
+
+    fig, (ax_u, ax_m) = plt.subplots(
+        2, 1, sharex=True, figsize=(7.6, 7.2), dpi=150
+    )
+    fig.patch.set_facecolor(SURFACE)
+    extent = (
+        float(t_min[0] - 0.5 * tl["bucket_ms"] / 60_000.0),
+        float(t_min[-1] + 0.5 * tl["bucket_ms"] / 60_000.0),
+        util.shape[1] - 0.5, -0.5,
+    )
+    panels = (
+        (ax_u, util, "utilization (rate / capacity)", SERIES_HUES[0], 1.0),
+        (ax_m, marks, "ECN marks / ms", SERIES_HUES[1], None),
+    )
+    for ax, mat, label, hue, vmax in panels:
+        cmap = LinearSegmentedColormap.from_list(
+            f"load-{hue}", [SURFACE, hue]
+        )
+        im = ax.imshow(
+            mat[:, order].T, aspect="auto", interpolation="nearest",
+            cmap=cmap, vmin=0.0, vmax=vmax, extent=extent,
+        )
+        cb = fig.colorbar(im, ax=ax, pad=0.01, fraction=0.04)
+        cb.outline.set_edgecolor(AXISLINE)
+        cb.ax.tick_params(colors=MUTED, labelcolor=INK_SECONDARY,
+                          labelsize=8)
+        ax.set_ylabel(f"links (by mean util)\n{label}",
+                      color=INK_SECONDARY, fontsize=9)
+        ax.tick_params(colors=MUTED, labelcolor=INK_SECONDARY, labelsize=8)
+        for side in ax.spines.values():
+            side.set_color(AXISLINE)
+    # name the hottest links so the heatmap is readable without the JSON
+    # sidecar; one caption block — the hot rows are adjacent after the
+    # mean-util sort, so per-row labels would overprint each other
+    if names:
+        hot = ", ".join(names[: min(3, len(names))])
+        ax_u.text(
+            0.01, -0.02, f"hottest rows: {hot}",
+            transform=ax_u.transAxes, va="top", fontsize=8,
+            color=INK_SECONDARY,
+        )
+    ax_m.set_xlabel("simulated time (min)", color=INK_SECONDARY, fontsize=10)
+    ax_u.set_title(
+        f"Per-link load: {tl['scenario']}, {tl['scheduler']}\n"
+        "each row one fabric link; time-mean per "
+        f"{tl['bucket_ms'] / 1000:.0f}s bucket",
+        color=INK, fontsize=11, loc="left", pad=12,
+    )
+    fig.tight_layout()
+    os.makedirs(os.path.dirname(out_png) or ".", exist_ok=True)
+    fig.savefig(out_png, facecolor=SURFACE)
+    plt.close(fig)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--schedulers", default=DEFAULT_SCHEDULERS,
@@ -188,6 +286,12 @@ def main() -> None:
     ap.add_argument("--out", default=DEFAULT_OUT, metavar="PNG",
                     help="output figure path (a .json sidecar with the "
                          "measured points is written next to it)")
+    ap.add_argument("--heatmap-racks", type=int, default=16,
+                    help="rack count for the link-load heatmap run "
+                         "(0 disables the heatmap; default 16)")
+    ap.add_argument("--heatmap-bucket-ms", type=float, default=10_000.0,
+                    help="time-bucket width for the link-load heatmap "
+                         "(default 10000)")
     args = ap.parse_args()
 
     schedulers = [s for s in args.schedulers.split(",") if s]
@@ -205,6 +309,24 @@ def main() -> None:
         )
         f.write("\n")
     print(f"# wrote {args.out} and {sidecar}")
+
+    if args.heatmap_racks:
+        tl = link_load_timeline(
+            args.heatmap_racks, schedulers[-1], args.horizon_ms,
+            args.heatmap_bucket_ms,
+        )
+        hm_png = os.path.join(
+            os.path.dirname(args.out) or ".", "link_load_heatmap.png"
+        )
+        render_heatmap(tl, hm_png)
+        hm_json = os.path.splitext(hm_png)[0] + ".json"
+        doc = tl.pop("recorder").to_json()
+        doc.update(scenario=tl["scenario"], scheduler=tl["scheduler"],
+                   horizon_ms=args.horizon_ms)
+        with open(hm_json, "w") as f:
+            json.dump(doc, f)
+            f.write("\n")
+        print(f"# wrote {hm_png} and {hm_json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,170 @@
+"""psim-style per-link load telemetry for :class:`FluidNetworkSim`.
+
+A :class:`LinkLoadRecorder` attached to a fluid sim observes every
+vectorized event interval — the span over which allocated rates are
+constant by construction — and accumulates two time-weighted per-link
+channels into fixed-width time buckets:
+
+  * **utilization**: delivered rate on the link divided by its capacity
+    (Σ member allocated rates / ``capacity_gbps``; ≤ 1 by the
+    water-filling invariant, ≤ ``congested_efficiency`` while the link is
+    saturated);
+  * **mark intensity**: ECN marks per ms generated *on the link* —
+    ``max(demand − capacity, 0) × 1e-3 × ecn_marks_per_gbit``, exactly
+    the per-link total of the sim's demand-over-capacity marking model
+    (the per-job shares of :meth:`FluidNetworkSim._mark_rates_scalar`
+    sum to this by construction).
+
+Both channels are exact time integrals over the event intervals (an
+event spanning several buckets contributes its overlap to each), so the
+exported timeline is independent of event granularity.  Recording costs
+one ``bincount`` over the job×link incidence pairs per event and is only
+wired into the vectorized engine — attaching a recorder to a scalar sim
+is rejected rather than silently recording nothing.
+
+``benchmarks/scaling_curves.py`` renders the exported timeline as the
+link-load heatmap artifact (PNG + JSON sidecar, uploaded by CI).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .network import FluidNetworkSim
+
+__all__ = ["LinkLoadRecorder"]
+
+
+@dataclass
+class LinkLoadRecorder:
+    """Time-bucketed per-link utilization / ECN-mark timelines.
+
+    ``bucket_ms`` fixes the timeline resolution; buckets are anchored at
+    absolute time 0 so replays of the same scenario land in the same
+    bins.  Attach with :meth:`FluidNetworkSim.attach_link_recorder`
+    before running the simulation.
+    """
+
+    bucket_ms: float = 10_000.0
+    _sim: "FluidNetworkSim | None" = field(default=None, repr=False)
+    # bucket index -> (util_ms, mark_ms) accumulators, each (num_links,)
+    _acc: dict[int, tuple[np.ndarray, np.ndarray]] = field(
+        default_factory=dict, repr=False
+    )
+
+    def _bind(self, sim: "FluidNetworkSim") -> None:
+        if self.bucket_ms <= 0:
+            raise ValueError(f"bucket_ms must be positive, got {self.bucket_ms}")
+        if not sim.vectorized:
+            raise ValueError(
+                "LinkLoadRecorder requires the vectorized fluid engine "
+                "(the scalar oracle has no recording hook)"
+            )
+        self._sim = sim
+
+    def record(
+        self, t0: float, t1: float, comm: np.ndarray, rates: np.ndarray
+    ) -> None:
+        """Accumulate one constant-rate event interval ``[t0, t1)``.
+
+        Called by the vectorized advance loop with this event's comm mask
+        and per-slot allocated rates (both over the sim's slot axis).
+        """
+        sim = self._sim
+        if sim is None or t1 <= t0 or sim._inc is None:
+            return
+        inc = sim._inc
+        caps = inc.capacities
+        rows, cols = inc.flat_pairs
+        live = comm[rows]
+        if not live.any():
+            return
+        cols = cols[live]
+        nl = inc.num_links
+        load = np.bincount(cols, weights=rates[rows[live]], minlength=nl)
+        demand = np.bincount(
+            cols, weights=sim._cap_now[rows[live]], minlength=nl
+        )
+        util = load / caps
+        markr = (
+            np.maximum(demand - caps, 0.0) * 1e-3 * sim.ecn_marks_per_gbit
+        )
+        # spread the interval over the (usually one or two) time buckets
+        # it overlaps: exact time integration, any event granularity
+        b0 = int(t0 // self.bucket_ms)
+        b1 = int(np.ceil(t1 / self.bucket_ms))
+        for b in range(b0, max(b1, b0 + 1)):
+            lo = max(t0, b * self.bucket_ms)
+            hi = min(t1, (b + 1) * self.bucket_ms)
+            w = hi - lo
+            if w <= 0:
+                continue
+            acc = self._acc.get(b)
+            if acc is None:
+                acc = (np.zeros(nl), np.zeros(nl))
+                self._acc[b] = acc
+            u_acc, m_acc = acc
+            u_acc += util * w
+            m_acc += markr * w
+
+    # ---------------------------- export --------------------------- #
+    def timeline(self) -> dict:
+        """Dense timeline arrays over the recorded bucket range.
+
+        Returns ``{"bucket_ms", "t_ms" (B,), "utilization" (B, L),
+        "marks_per_ms" (B, L), "link_names" (L,)}`` — utilization is the
+        time-mean over each bucket (trailing partially-covered buckets
+        are normalized by the covered span, i.e. by ``bucket_ms``, which
+        under-reports only if the sim genuinely went idle).
+        """
+        if not self._acc:
+            nl = self._sim._inc.num_links if (
+                self._sim is not None and self._sim._inc is not None
+            ) else 0
+            return {
+                "bucket_ms": self.bucket_ms,
+                "t_ms": np.zeros(0),
+                "utilization": np.zeros((0, nl)),
+                "marks_per_ms": np.zeros((0, nl)),
+                "link_names": self._link_names(nl),
+            }
+        b_lo, b_hi = min(self._acc), max(self._acc)
+        nl = next(iter(self._acc.values()))[0].shape[0]
+        nb = b_hi - b_lo + 1
+        util = np.zeros((nb, nl))
+        marks = np.zeros((nb, nl))
+        for b, (u, m) in self._acc.items():
+            util[b - b_lo] = u / self.bucket_ms
+            marks[b - b_lo] = m / self.bucket_ms
+        t = (np.arange(b_lo, b_hi + 1) + 0.5) * self.bucket_ms
+        return {
+            "bucket_ms": self.bucket_ms,
+            "t_ms": t,
+            "utilization": util,
+            "marks_per_ms": marks,
+            "link_names": self._link_names(nl),
+        }
+
+    def _link_names(self, num_links: int) -> list[str]:
+        if self._sim is None:
+            return [f"link{i}" for i in range(num_links)]
+        names = [""] * num_links
+        for name, i in self._sim.topo.link_ids.items():
+            if i < num_links:
+                names[i] = name
+        return names
+
+    def to_json(self) -> dict:
+        """JSON-serializable timeline (lists instead of arrays)."""
+        tl = self.timeline()
+        return {
+            "bucket_ms": tl["bucket_ms"],
+            "t_ms": tl["t_ms"].tolist(),
+            "utilization": np.round(tl["utilization"], 6).tolist(),
+            "marks_per_ms": np.round(tl["marks_per_ms"], 6).tolist(),
+            "link_names": tl["link_names"],
+        }

@@ -228,6 +228,10 @@ class FluidNetworkSim:
         # were answered from the cache (serve-mode telemetry)
         self.alloc_solves: int = 0
         self.alloc_hits: int = 0
+        # optional psim-style per-link load telemetry (repro.cluster
+        # .linkload): None costs nothing; attach_link_recorder wires one
+        # into the vectorized event loop
+        self.link_recorder = None
         # telemetry: solves answered by the delta path (vs from-scratch
         # state rebuilds within the incremental solver)
         self.alloc_delta_solves: int = 0
@@ -1295,6 +1299,15 @@ class FluidNetworkSim:
         return r
 
     # -------------------------------------------------------------- #
+    def attach_link_recorder(self, recorder) -> "FluidNetworkSim":
+        """Wire a :class:`repro.cluster.linkload.LinkLoadRecorder` into
+        the vectorized event loop (per-link utilization / ECN-mark
+        timelines).  Raises on the scalar engine — the oracle loop has no
+        recording hook, and silently recording nothing would be worse."""
+        recorder._bind(self)
+        self.link_recorder = recorder
+        return self
+
     def advance(self, until_ms: float, *, max_events: int = 2_000_000) -> list[Job]:
         """Advance the fluid simulation to ``until_ms`` (exact events).
 
@@ -1357,6 +1370,11 @@ class FluidNetworkSim:
                     dt = min(dt, tmin * 1e3)
                 dt = max(dt, 1e-6)
                 self.now_ms += dt
+                if self.link_recorder is not None:
+                    # rates are constant over [now-dt, now) by construction
+                    self.link_recorder.record(
+                        self.now_ms - dt, self.now_ms, comm, rates
+                    )
                 # progress everyone by dt (rates constant over the interval)
                 np.subtract(self._dly, dt, out=self._dly, where=delayed)
                 np.maximum(self._dly, 0.0, out=self._dly, where=delayed)

@@ -261,6 +261,7 @@ def find_rotations_batched(
     stats: BatchStats | None = None,
     device_reduce: bool = True,
     ragged: bool = True,
+    tuned: bool = True,
 ) -> list[CompatResult]:
     """Solve many independent link-level Table-1 problems in one pass.
 
@@ -294,7 +295,11 @@ def find_rotations_batched(
     angle-count group per chunk/step — the pre-ragged behaviour, kept as
     the benchmark comparison path); ``device_reduce=False`` forces the
     full-matrix evaluation + host reduction everywhere (the pre-fusion
-    behaviour, which is always grouped).  Results are bit-identical on
+    behaviour, which is always grouped).  ``tuned=False`` pins every
+    kernel launch to the untuned module-default schedule instead of the
+    per-bucket tuning table (:mod:`repro.kernels.tune`) — schedule
+    parameters are bit-inert for this family, so tuned on/off changes
+    wall time only, never a shift (tests assert it).  Results are bit-identical on
     every path — tests assert it; the fold-sum padding invariance of the
     kernel family is what makes the ragged launch exact.  Pass a
     :class:`BatchStats` to observe which path each problem took
@@ -333,12 +338,16 @@ def find_rotations_batched(
             )
 
     if grid_probs:
-        _solve_grids_batched(grid_probs, backend, stats, device_reduce, ragged)
+        _solve_grids_batched(
+            grid_probs, backend, stats, device_reduce, ragged, tuned
+        )
         stats.grid_problems += len(grid_probs)
         for gp in grid_probs:
             results[gp.index] = _finalize(gp.circle, gp.best, gp.capacity)
     if descent_probs:
-        _solve_descent_batched(descent_probs, backend, stats, device_reduce, ragged)
+        _solve_descent_batched(
+            descent_probs, backend, stats, device_reduce, ragged, tuned
+        )
         stats.descent_problems += len(descent_probs)
         for dp in descent_probs:
             results[dp.index] = _finalize(dp.circle, dp.best, dp.capacity)
@@ -418,6 +427,7 @@ def _batched_excess(
     *,
     backend: str = "auto",
     stats: BatchStats | None = None,
+    tuned: bool = True,
 ) -> np.ndarray:
     """Excess sums for every rotation of ``L`` independent rows at once.
 
@@ -450,7 +460,7 @@ def _batched_excess(
         try:
             from repro.kernels.circle_score import ops as _cs_ops
 
-            out = np.asarray(_cs_ops.circle_score(base, cand, cap))
+            out = np.asarray(_cs_ops.circle_score(base, cand, cap, tuned=tuned))
         except Exception:  # pragma: no cover - fallback if pallas unavailable
             pass
         else:
@@ -478,6 +488,7 @@ def _batched_argmin(
     *,
     backend: str,
     stats: BatchStats | None = None,
+    tuned: bool = True,
 ) -> tuple[np.ndarray, np.ndarray] | None:
     """Fused per-row rotation search: ``(best_shift, best_excess)`` per row.
 
@@ -494,7 +505,9 @@ def _batched_argmin(
     try:
         from repro.kernels.circle_score import ops as _cs_ops
 
-        idx, val = _cs_ops.circle_score_argmin(base, cand, capacity, valid)
+        idx, val = _cs_ops.circle_score_argmin(
+            base, cand, capacity, valid, tuned=tuned
+        )
         idx, val = np.asarray(idx), np.asarray(val)
     except Exception:  # pragma: no cover - fallback if pallas unavailable
         return None
@@ -514,6 +527,7 @@ def _batched_argmin_ragged(
     num_angles: np.ndarray,
     *,
     stats: BatchStats | None = None,
+    tuned: bool = True,
 ) -> tuple[np.ndarray, np.ndarray] | None:
     """Ragged fused rotation search: mixed angle counts, ONE launch.
 
@@ -527,7 +541,7 @@ def _batched_argmin_ragged(
         from repro.kernels.circle_score import ops as _cs_ops
 
         idx, val = _cs_ops.circle_score_ragged_argmin(
-            base, cand, capacity, valid, num_angles
+            base, cand, capacity, valid, num_angles, tuned=tuned
         )
         idx, val = np.asarray(idx), np.asarray(val)
     except ValueError:
@@ -550,6 +564,7 @@ def _batched_segmin(
     *,
     backend: str,
     stats: BatchStats | None = None,
+    tuned: bool = True,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray] | None:
     """Fused per-row search + segmented acceptance scan, fully on device.
 
@@ -568,7 +583,7 @@ def _batched_segmin(
         from repro.kernels.circle_score import ops as _cs_ops
 
         acc, row, shift, best = _cs_ops.circle_score_segmin(
-            base, cand, capacity, valid, seg_ids, init_best
+            base, cand, capacity, valid, seg_ids, init_best, tuned=tuned
         )
         acc, row, shift, best = (
             np.asarray(acc), np.asarray(row), np.asarray(shift), np.asarray(best)
@@ -593,6 +608,7 @@ def _batched_segmin_ragged(
     init_best: np.ndarray,
     *,
     stats: BatchStats | None = None,
+    tuned: bool = True,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray] | None:
     """Ragged fused search + segmented acceptance scan: ONE launch per
     chunk, whatever mix of angle counts the chunk's problems carry (see
@@ -602,7 +618,8 @@ def _batched_segmin_ragged(
         from repro.kernels.circle_score import ops as _cs_ops
 
         acc, row, shift, best = _cs_ops.circle_score_ragged_segmin(
-            base, cand, capacity, valid, num_angles, seg_ids, init_best
+            base, cand, capacity, valid, num_angles, seg_ids, init_best,
+            tuned=tuned,
         )
         acc, row, shift, best = (
             np.asarray(acc), np.asarray(row), np.asarray(shift), np.asarray(best)
@@ -795,6 +812,7 @@ def _solve_grids_batched(
     stats: BatchStats,
     device_reduce: bool = True,
     ragged: bool = True,
+    tuned: bool = True,
 ) -> None:
     """Evaluate every problem's product grid through chunked batched calls.
 
@@ -813,12 +831,12 @@ def _solve_grids_batched(
             p for p in probs if _kernel_eligible(backend, p.circle.num_angles)
         ]
         if kernel_probs:
-            _solve_grids_ragged(kernel_probs, backend, stats)
+            _solve_grids_ragged(kernel_probs, backend, stats, tuned)
         probs = [
             p for p in probs if not _kernel_eligible(backend, p.circle.num_angles)
         ]
     if probs:
-        _solve_grids_grouped(probs, backend, stats, device_reduce)
+        _solve_grids_grouped(probs, backend, stats, device_reduce, tuned)
 
 
 def _grid_segments(
@@ -857,6 +875,7 @@ def _solve_grids_ragged(
     probs: Sequence[_GridProblem],
     backend: str,
     stats: BatchStats,
+    tuned: bool = True,
 ) -> None:
     """One ragged launch per grid chunk: rows from *all* problems, mixed
     angle counts, packed to the chunk's max width with per-row
@@ -886,7 +905,8 @@ def _solve_grids_ragged(
         valid = np.array([p.grids[p.last] for p, _, _ in pending], dtype=np.int32)
         segs, seg_ids, init = _grid_segments(pending)
         reduced = _batched_segmin_ragged(
-            base, cand, caps, valid, widths, seg_ids, init, stats=stats
+            base, cand, caps, valid, widths, seg_ids, init,
+            stats=stats, tuned=tuned,
         )
         if reduced is not None:
             _apply_segmin(segs, pending, reduced)
@@ -897,7 +917,7 @@ def _solve_grids_ragged(
             for a, rows in by_angles.items():
                 ex = _batched_excess(
                     base[rows][:, :a], cand[rows][:, :a], caps[rows],
-                    backend=backend, stats=stats,
+                    backend=backend, stats=stats, tuned=tuned,
                 )
                 for r, row_ex in zip(rows, ex):
                     pending[r][0].update(pending[r][1], row_ex)
@@ -916,6 +936,7 @@ def _solve_grids_grouped(
     backend: str,
     stats: BatchStats,
     device_reduce: bool = True,
+    tuned: bool = True,
 ) -> None:
     """Per-angle-count grouping (the pre-ragged layout, kept for the
     vectorized-numpy rows and as the ragged comparison path): rows are
@@ -957,12 +978,14 @@ def _solve_grids_grouped(
                 )
                 reduced = _batched_segmin(
                     base, cand, caps, valid, seg_ids, init,
-                    backend=backend, stats=stats,
+                    backend=backend, stats=stats, tuned=tuned,
                 )
             if reduced is not None:
                 _apply_segmin(segs, pending, reduced)
             else:
-                ex = _batched_excess(base, cand, caps, backend=backend, stats=stats)
+                ex = _batched_excess(
+                    base, cand, caps, backend=backend, stats=stats, tuned=tuned
+                )
                 for (p, mid, _), row_ex in zip(pending, ex):
                     p.update(mid, row_ex)
             pending.clear()
@@ -1058,6 +1081,7 @@ def _solve_descent_batched(
     stats: BatchStats,
     device_reduce: bool = True,
     ragged: bool = True,
+    tuned: bool = True,
 ) -> None:
     """Run all coordinate descents in lockstep, batching each step's rows.
 
@@ -1090,14 +1114,17 @@ def _solve_descent_batched(
             if device_reduce and _kernel_eligible(backend, num_angles):
                 valid = np.array([s.grids[j] for s in group], dtype=np.int32)
                 reduced = _batched_argmin(
-                    base, cand, caps, valid, backend=backend, stats=stats
+                    base, cand, caps, valid,
+                    backend=backend, stats=stats, tuned=tuned,
                 )
             if reduced is not None:
                 s_new, _ = reduced
                 for s, (b, _), sn in zip(group, rows, s_new):
                     s.apply_shift(j, b, int(sn))
             else:
-                ex = _batched_excess(base, cand, caps, backend=backend, stats=stats)
+                ex = _batched_excess(
+                    base, cand, caps, backend=backend, stats=stats, tuned=tuned
+                )
                 for s, (b, _), row in zip(group, rows, ex):
                     s.apply(j, b, row)
 
@@ -1115,7 +1142,7 @@ def _solve_descent_batched(
         caps = np.array([s.capacity for s in group], dtype=np.float32)
         valid = np.array([s.grids[j] for s in group], dtype=np.int32)
         reduced = _batched_argmin_ragged(
-            base, cand, caps, valid, widths, stats=stats
+            base, cand, caps, valid, widths, stats=stats, tuned=tuned
         )
         if reduced is None:  # pragma: no cover - pallas unavailable
             return group

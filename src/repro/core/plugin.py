@@ -94,6 +94,7 @@ class CassiniModule:
         seed: int = 0,
         device_reduce: bool = True,
         ragged: bool = True,
+        tuned: bool = True,
     ) -> None:
         self.precision_deg = precision_deg
         self.quantum_ms = quantum_ms
@@ -110,6 +111,10 @@ class CassiniModule:
         # False restores the per-angle-count launch grouping (comparison
         # path — results are bit-identical either way).
         self.ragged = ragged
+        # Per-bucket tuned launch schedules from the committed tuning
+        # table (repro.kernels.tune); False pins the untuned kernel
+        # defaults — a comparison/debug switch, bit-identical either way.
+        self.tuned = tuned
         # Candidates at one epoch mostly share link job-sets: memoize the
         # per-link optimization across candidates (and epochs).  All reads
         # and writes go through ``_cache_lock`` so the ThreadPoolExecutor
@@ -374,6 +379,7 @@ class CassiniModule:
                 stats=stats,
                 device_reduce=self.device_reduce,
                 ragged=self.ragged,
+                tuned=self.tuned,
             )
             self.last_batch_stats = stats
             for key, res in zip(keys, solved):

@@ -79,14 +79,18 @@ DEFAULT_BLOCK_L = 32
 # zero-pad the angle axis up to this multiple by default (masked in-kernel,
 # exact — see module docstring).
 LANE_MULTIPLE = 128
-# Shifts evaluated per tournament round of the fused argmin kernel: each
-# loop iteration scores this many consecutive shifts (independent slices,
-# unrolled — no carried dependence between them), reduces them with a
-# log-depth tournament and merges one (value, index) champion pair into
-# the (BL, 1) running best.  Cuts the loop's sequential depth by 8x while
-# keeping the carried state tiny — materializing the full per-shift value
-# matrix instead (one store per iteration) measured ~4x slower because
-# the loop then drags a (BL, AP) buffer through every iteration.
+# Default shifts evaluated per tournament round of the fused argmin
+# kernel: each loop iteration scores this many consecutive shifts
+# (independent slices, unrolled — no carried dependence between them),
+# reduces them with a log-depth tournament and merges one (value, index)
+# champion pair into the (BL, 1) running best.  Cuts the loop's
+# sequential depth by the chunk factor while keeping the carried state
+# tiny — materializing the full per-shift value matrix instead (one
+# store per iteration) measured ~4x slower because the loop then drags a
+# (BL, AP) buffer through every iteration.  The chunk width is a
+# traced-static kernel parameter (``shift_chunk``); this module constant
+# is only the untuned default — per-bucket winners live in the
+# repro.kernels.tune tables and flow in through the ops wrappers.
 SHIFT_CHUNK = 8
 
 
@@ -196,11 +200,12 @@ def _circle_score_kernel(a: int, base_ref, cc_ref, cap_ref, out_ref):
 
 
 def _circle_score_argmin_kernel(
-    base_ref, cc_ref, cap_ref, valid_ref, na_ref, idx_ref, val_ref
+    shift_chunk: int,
+    base_ref, cc_ref, cap_ref, valid_ref, na_ref, idx_ref, val_ref,
 ):
     """Ragged fused variant: per-row angle counts, chunked tournament.
 
-    Each loop round evaluates :data:`SHIFT_CHUNK` consecutive shifts —
+    Each loop round evaluates ``shift_chunk`` consecutive shifts —
     independent slices, unrolled, no carried dependence between them —
     masks shifts ``s ≥ valid[row]`` to ``+inf`` (Eq. 4 bound) and angles
     ``α ≥ num_angles[row]`` to exactly ``0.0`` before the fold (ragged
@@ -234,7 +239,7 @@ def _circle_score_argmin_kernel(
     def body(carry):
         c, best_val, best_idx = carry
         cols_v, cols_i = [], []
-        for i in range(SHIFT_CHUNK):                    # unrolled: no deps
+        for i in range(shift_chunk):                    # unrolled: no deps
             s = c + i
             # rolled[α] = cand[(α − s) mod A] == cc[AP − s : 2·AP − s][:AP]
             # (dynamic_slice clamps s ≥ AP starts; those shifts are ≥ valid
@@ -250,7 +255,7 @@ def _circle_score_argmin_kernel(
         best_val, best_idx = _tournament_min(
             best_val, best_idx, chunk_v, chunk_i
         )
-        return c + SHIFT_CHUNK, best_val, best_idx
+        return c + shift_chunk, best_val, best_idx
 
     # rows with valid == 0 (block padding) start "done" so they can never
     # hold the early-exit condition open
@@ -351,7 +356,10 @@ def circle_score_pallas(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_l", "interpret", "lane_pad", "pad_to")
+    jax.jit,
+    static_argnames=(
+        "block_l", "interpret", "lane_pad", "pad_to", "shift_chunk"
+    ),
 )
 def circle_score_argmin_pallas(
     base: jax.Array,      # (L, A) float32 — zero-padded beyond num_angles[l]
@@ -364,6 +372,7 @@ def circle_score_argmin_pallas(
     interpret: bool = True,
     lane_pad: bool = True,
     pad_to: int | None = None,
+    shift_chunk: int = SHIFT_CHUNK,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused ragged reduction; one launch for any mix of angle counts.
 
@@ -375,6 +384,15 @@ def circle_score_argmin_pallas(
     spans all ``A`` angles); per-group launches are exactly this kernel
     invoked once per distinct angle count, so ragged-vs-grouped
     equivalence reduces to the fold's padding invariance.
+
+    ``block_l`` and ``shift_chunk`` are pure schedule parameters: per-row
+    fold sums and the tree-shape-independent tournament make the returned
+    pair bit-identical for every (block_l, shift_chunk) combination —
+    larger chunks only evaluate extra shifts past a found zero, and those
+    can never displace a lower-index champion.  That invariance is what
+    lets the autotuner (:mod:`repro.kernels.tune`) swap them per width
+    bucket without a numerics audit; it is re-verified for every search
+    candidate and pinned by the parity tests.
     """
     l, a = base.shape
     valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32).reshape(-1, 1), (l, 1))
@@ -386,7 +404,7 @@ def circle_score_argmin_pallas(
     valid = jnp.pad(valid, ((0, lp - l), (0, 0)))
 
     idx, val = pl.pallas_call(
-        _circle_score_argmin_kernel,
+        functools.partial(_circle_score_argmin_kernel, shift_chunk),
         grid=(lp // block_l,),
         in_specs=[
             pl.BlockSpec((block_l, ap), lambda i: (i, 0)),

@@ -81,22 +81,49 @@ _ON_TPU = jax.default_backend() == "tpu"
 from repro.core.compat import ACCEPT_SLACK  # noqa: E402
 
 
-def circle_score(base, cand, capacity) -> jax.Array:
+def _schedule(variant: str, width: int, tuned: bool, **explicit) -> dict:
+    """Resolve a launch's schedule parameters (block_l, shift_chunk, …).
+
+    Explicit non-``None`` kwargs always win; otherwise ``tuned=True``
+    consults the per-bucket tuning table (:mod:`repro.kernels.tune` —
+    every loader failure mode already falls back to defaults inside
+    ``lookup``) and ``tuned=False`` pins the kernels' module defaults
+    (the untuned comparison path the autotuner and benches measure
+    against).  Schedule parameters are bit-inert for this family, so
+    this choice can only ever move wall time.
+    """
+    from repro.kernels import tune
+
+    params = (
+        tune.lookup(variant, width) if tuned else dict(tune.DEFAULTS[variant])
+    )
+    params.update({k: v for k, v in explicit.items() if v is not None})
+    return params
+
+
+def circle_score(base, cand, capacity, *, tuned=True, block_l=None) -> jax.Array:
     """``capacity`` may be a scalar (shared by all rows) or an ``(L,)`` /
-    ``(L, 1)`` array of per-row link capacities."""
+    ``(L, 1)`` array of per-row link capacities.  ``tuned`` / ``block_l``
+    select the launch schedule (see :func:`_schedule`); outputs are
+    bit-identical for every choice."""
     base = jnp.atleast_2d(jnp.asarray(base, jnp.float32))
     cand = jnp.atleast_2d(jnp.asarray(cand, jnp.float32))
     cap = jnp.asarray(capacity, jnp.float32)
-    return circle_score_pallas(base, cand, cap, interpret=not _ON_TPU)
+    sched = _schedule("circle_score", base.shape[1], tuned, block_l=block_l)
+    return circle_score_pallas(base, cand, cap, interpret=not _ON_TPU, **sched)
 
 
-def circle_score_argmin(base, cand, capacity, valid=None):
+def circle_score_argmin(
+    base, cand, capacity, valid=None,
+    *, tuned=True, block_l=None, shift_chunk=None,
+):
     """Fused rotation search: ``(best_shift, best_excess)`` per row.
 
     ``valid`` bounds the admissible shifts per row (Eq. 4: job ``j`` only
     has ``A / r_j`` distinct rotations); ``None`` admits all ``A`` shifts.
     Bit-identical to ``np.argmin`` over ``circle_score(...)[l, :valid[l]]``
-    (first-index tie-breaking) without ever materializing the matrix.
+    (first-index tie-breaking) without ever materializing the matrix —
+    for every launch schedule, tuned or not.
     """
     base = jnp.atleast_2d(jnp.asarray(base, jnp.float32))
     cand = jnp.atleast_2d(jnp.asarray(cand, jnp.float32))
@@ -106,13 +133,18 @@ def circle_score_argmin(base, cand, capacity, valid=None):
         valid = jnp.full((l,), a, jnp.int32)
     else:
         valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32).reshape(-1), (l,))
+    sched = _schedule(
+        "circle_score_argmin", a, tuned,
+        block_l=block_l, shift_chunk=shift_chunk,
+    )
     return circle_score_argmin_pallas(
-        base, cand, cap, valid, interpret=not _ON_TPU
+        base, cand, cap, valid, interpret=not _ON_TPU, **sched
     )
 
 
 def circle_score_ragged_argmin(
-    base, cand, capacity, valid, num_angles, *, pad_to=None
+    base, cand, capacity, valid, num_angles, *, pad_to=None,
+    tuned=True, block_l=None, shift_chunk=None, _variant="circle_score_argmin",
 ):
     """Ragged fused rotation search: ONE launch over mixed angle counts.
 
@@ -127,6 +159,9 @@ def circle_score_ragged_argmin(
         bucket — bit-exact by the fold-sum padding invariance — so
         long-tailed angle-count mixes stop paying one jit recompile per
         distinct packed width.
+      tuned, block_l, shift_chunk: launch schedule selection (see
+        :func:`_schedule`) — the table lookup is keyed by the bucketed
+        launch width; outputs are bit-identical for every schedule.
 
     Returns ``(best_shift, best_excess)`` per row, bit-identical to
     invoking :func:`circle_score_argmin` once per angle-count group on
@@ -153,10 +188,15 @@ def circle_score_ragged_argmin(
         base = np.pad(base, ((0, 0), (0, wb - w)))
         cand = np.pad(cand, ((0, 0), (0, wb - w)))
     cap = jnp.asarray(capacity, jnp.float32)
+    # the table is keyed by exactly this bucketed launch width, so the
+    # lookup and the jit cache see the same (variant, bucket) universe
+    sched = _schedule(
+        _variant, wb, tuned, block_l=block_l, shift_chunk=shift_chunk
+    )
     return circle_score_argmin_pallas(
         jnp.asarray(base), jnp.asarray(cand), cap,
         jnp.asarray(valid), jnp.asarray(na),
-        interpret=not _ON_TPU,
+        interpret=not _ON_TPU, **sched,
     )
 
 
@@ -203,7 +243,10 @@ def _segmin_from(idx, val, seg_ids, init_best):
     return acc, row, shift, best
 
 
-def circle_score_segmin(base, cand, capacity, valid, seg_ids, init_best):
+def circle_score_segmin(
+    base, cand, capacity, valid, seg_ids, init_best,
+    *, tuned=True, block_l=None, shift_chunk=None,
+):
     """Fused rotation search + segmented acceptance, fully device-side.
 
     Args:
@@ -212,23 +255,38 @@ def circle_score_segmin(base, cand, capacity, valid, seg_ids, init_best):
         must be contiguous and in host visit order).
       init_best: (S,) float64 — each segment's incumbent best excess from
         previous chunks (``inf`` for a fresh segment).
+      tuned, block_l, shift_chunk: launch schedule, resolved against the
+        ``circle_score_segmin`` table entries (the grid path's tall
+        chunks tune differently from the descent path's short steps).
 
     Returns ``(accepted (S,) bool, row (S,) int32, shift (S,) int32,
     best (S,) float64)`` — ``row`` is the chunk-global index of the
     accepted row; entries with ``accepted == False`` carry their init
     state.  Only these four O(S) vectors leave the device.
     """
-    idx, val = circle_score_argmin(base, cand, capacity, valid)
+    a = np.atleast_2d(np.asarray(base)).shape[1]
+    sched = _schedule(
+        "circle_score_segmin", a, tuned,
+        block_l=block_l, shift_chunk=shift_chunk,
+    )
+    idx, val = circle_score_argmin(
+        base, cand, capacity, valid, tuned=False, **sched
+    )
     return _segmin_from(idx, val, seg_ids, init_best)
 
 
 def circle_score_ragged_segmin(
-    base, cand, capacity, valid, num_angles, seg_ids, init_best, *, pad_to=None
+    base, cand, capacity, valid, num_angles, seg_ids, init_best, *,
+    pad_to=None, tuned=True, block_l=None, shift_chunk=None,
 ):
     """Ragged :func:`circle_score_segmin`: one launch over mixed angle
     counts (see :func:`circle_score_ragged_argmin`), then the same
-    segmented device-side acceptance scan."""
+    segmented device-side acceptance scan.  The schedule resolves against
+    the ``circle_score_segmin`` table entries, keyed by the bucketed
+    launch width."""
     idx, val = circle_score_ragged_argmin(
-        base, cand, capacity, valid, num_angles, pad_to=pad_to
+        base, cand, capacity, valid, num_angles, pad_to=pad_to,
+        tuned=tuned, block_l=block_l, shift_chunk=shift_chunk,
+        _variant="circle_score_segmin",
     )
     return _segmin_from(idx, val, seg_ids, init_best)

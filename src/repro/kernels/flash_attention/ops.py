@@ -19,11 +19,32 @@ def flash_attention(
     v: jax.Array,
     *,
     causal: bool = True,
-    block_q: int = 128,
-    block_k: int = 128,
+    tuned: bool = True,
+    block_q: int | None = None,
+    block_k: int | None = None,
 ) -> jax.Array:
-    """Returns (B, S, H, D); repeats KV heads for grouped-query attention."""
+    """Returns (B, S, H, D); repeats KV heads for grouped-query attention.
+
+    Block shapes default to the per-bucket tuning table keyed by the
+    sequence length (``tuned=False`` or the loader's fallback ladder pin
+    the historical 128x128 tiles); explicit values always win.  Unlike
+    the circle family, retiling re-associates the online-softmax
+    accumulation, so tuned outputs match the untuned path to float
+    tolerance, not bit-exactly.
+    """
     b, s, h, d = q.shape
+    from repro.kernels import tune
+
+    sched = (
+        tune.lookup("flash_attention", s) if tuned
+        else dict(tune.DEFAULTS["flash_attention"])
+    )
+    # table entries are searched at the bucket width; a caller's real S
+    # inside the bucket may not be divisible by them — clamp rather than
+    # trip the kernel's shape assert (gcd keeps a power-of-two divisor)
+    sched = tune.clamp_to_width("flash_attention", s, sched)
+    block_q = block_q if block_q is not None else sched["block_q"]
+    block_k = block_k if block_k is not None else sched["block_k"]
     hkv = k.shape[2]
     groups = h // hkv
     if groups > 1:

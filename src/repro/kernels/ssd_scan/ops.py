@@ -12,6 +12,24 @@ __all__ = ["ssd_scan", "ssd_ref"]
 _ON_TPU = jax.default_backend() == "tpu"
 
 
-def ssd_scan(x, dt, a_log, Bm, Cm, *, chunk: int = 256) -> jax.Array:
+def ssd_scan(
+    x, dt, a_log, Bm, Cm, *, tuned: bool = True, chunk: int | None = None
+) -> jax.Array:
+    """Chunk length defaults to the per-bucket tuning table keyed by the
+    sequence length (``tuned=False`` or any loader fallback pins the
+    historical 256); an explicit ``chunk`` always wins.  Rechunking
+    re-associates the inter-chunk state accumulation, so tuned outputs
+    match to float tolerance, not bit-exactly."""
+    if chunk is None:
+        from repro.kernels import tune
+
+        s = x.shape[1]
+        sched = (
+            tune.lookup("ssd_scan", s) if tuned
+            else dict(tune.DEFAULTS["ssd_scan"])
+        )
+        # table entries are searched at the bucket width; clamp for real
+        # lengths they do not divide (gcd keeps a power-of-two divisor)
+        chunk = tune.clamp_to_width("ssd_scan", s, sched)["chunk"]
     return ssd_scan_pallas(x, dt, a_log, Bm, Cm, chunk=chunk,
                            interpret=not _ON_TPU)

@@ -1,0 +1,48 @@
+"""Per-bucket kernel autotuning: search offline, commit the table,
+dispatch from it at runtime.
+
+The three pieces (see docs/architecture.md, "Kernel autotune"):
+
+  * :mod:`~repro.kernels.tune.space` — the per-variant search spaces,
+    keyed by (backend, variant, power-of-two width bucket);
+  * :mod:`~repro.kernels.tune.search` — the measured grid /
+    successive-halving search with per-candidate output verification;
+  * :mod:`~repro.kernels.tune.table` — the committed JSON tables under
+    ``tables/`` plus the runtime loader, whose every failure mode falls
+    back to the kernels' module defaults.
+
+Runtime consumers only ever call :func:`lookup` (through the ops
+wrappers); ``benchmarks/autotune.py`` drives the search.
+"""
+
+from .space import BUCKETS, SPACES, candidates, clamp_to_width, variants
+from .table import (
+    DEFAULTS,
+    SCHEMA_VERSION,
+    TuningTable,
+    bucket_for,
+    current_backend,
+    default_table_path,
+    get_table,
+    load_table,
+    lookup,
+    reset_cache,
+)
+
+__all__ = [
+    "BUCKETS",
+    "SPACES",
+    "DEFAULTS",
+    "SCHEMA_VERSION",
+    "TuningTable",
+    "bucket_for",
+    "candidates",
+    "clamp_to_width",
+    "current_backend",
+    "default_table_path",
+    "get_table",
+    "load_table",
+    "lookup",
+    "reset_cache",
+    "variants",
+]

@@ -1,0 +1,105 @@
+"""Search spaces for the per-bucket kernel autotuner.
+
+Every tunable kernel *variant* exposes a small set of schedule parameters
+— block shapes and chunk widths that change how the launch is tiled but
+provably (circle family) or tolerably (flash/ssd) never what it computes.
+The PR 5 power-of-two width bucketing is what keeps this tractable: a
+(backend, variant, bucket) key sees at most a few dozen candidates, so an
+exhaustive measured search per bucket is cheap enough to re-run nightly.
+
+The spaces are deliberately coarse powers of two: Mosaic's tiling wants
+the sublane dimension in {8, 16, 32, ...} and interpret mode's overhead
+scales with the grid step count, so intermediate values never win by more
+than noise (measured).  Growing a space here automatically grows the
+nightly retune sweep — no other file needs to change.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Mapping, Sequence
+
+__all__ = ["BUCKETS", "SPACES", "candidates", "clamp_to_width", "variants"]
+
+# Width buckets the tuner searches, mirroring :func:`bucket_width`'s
+# image over the angle counts real scenarios produce (precision 5° on
+# ring sizes 2..16 unified circles ⇒ A ≤ ~2.9k ⇒ widths 128..4096; the
+# fine-grid A ≥ 512 buckets are the only kernel-eligible ones on the
+# "auto" backend, the small ones matter for forced-pallas callers).
+BUCKETS: tuple[int, ...] = (128, 256, 512, 1024, 2048)
+
+# variant -> parameter name -> admissible values.  The *first* value set
+# must contain the module defaults (table.DEFAULTS) so the search always
+# scores the untuned schedule and can never regress below it on the
+# machine it ran on.
+SPACES: Mapping[str, Mapping[str, Sequence[int]]] = {
+    # full-matrix scorer: only the row-block height is free
+    "circle_score": {"block_l": (8, 16, 32, 64, 128)},
+    # fused ragged argmin: row blocks x tournament chunk width
+    "circle_score_argmin": {
+        "block_l": (8, 16, 32, 64, 128),
+        "shift_chunk": (4, 8, 16, 32),
+    },
+    # argmin + device accept scan; same kernel parameters, timed through
+    # the segmin entry point because the scan shifts the optimum slightly
+    "circle_score_segmin": {
+        "block_l": (8, 16, 32, 64, 128),
+        "shift_chunk": (4, 8, 16, 32),
+    },
+    # flash attention: q/k tile heights (must divide the sequence length,
+    # enforced per-bucket in candidates())
+    "flash_attention": {
+        "block_q": (64, 128, 256),
+        "block_k": (64, 128, 256),
+    },
+    # SSD chunk scan: the chunk length (must divide the sequence length)
+    "ssd_scan": {"chunk": (64, 128, 256, 512)},
+}
+
+# parameters that must divide the bucket width (kernel asserts
+# seq % block == 0); the circle family has no such constraint — its
+# wrappers row-pad to any block_l
+_DIVIDES_BUCKET = {
+    "flash_attention": ("block_q", "block_k"),
+    "ssd_scan": ("chunk",),
+}
+
+
+def variants() -> tuple[str, ...]:
+    return tuple(SPACES)
+
+
+def clamp_to_width(variant: str, width: int, params: dict) -> dict:
+    """Make ``params`` launchable at ``width`` sequence length.
+
+    Divide-the-bucket parameters are replaced by ``gcd(value, width)`` —
+    for the power-of-two values in the spaces this is the largest
+    power-of-two divisor of ``width`` not exceeding the requested value,
+    so the module defaults (e.g. ``ssd_scan``'s chunk 256 on a 128-wide
+    launch) stay valid at every bucket.  Returns ``params`` unchanged for
+    variants with no divisibility constraint.
+    """
+    out = dict(params)
+    for name in _DIVIDES_BUCKET.get(variant, ()):
+        out[name] = math.gcd(out[name], width)
+    return out
+
+
+def candidates(variant: str, bucket: int) -> list[dict[str, int]]:
+    """Full grid of parameter dicts for one (variant, bucket) key.
+
+    Candidates whose divide-the-bucket parameters do not divide the
+    bucket width are dropped (they would trip the kernel's shape
+    assertion); the circle family's grid is bucket-independent.
+    """
+    space = SPACES[variant]
+    names = tuple(space)
+    must_divide = _DIVIDES_BUCKET.get(variant, ())
+    out: list[dict[str, int]] = []
+    for values in itertools.product(*(space[n] for n in names)):
+        cand = dict(zip(names, values))
+        if any(bucket % cand[n] != 0 or cand[n] > bucket for n in must_divide):
+            continue
+        out.append(cand)
+    return out

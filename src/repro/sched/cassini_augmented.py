@@ -32,6 +32,7 @@ class CassiniAugmented(Scheduler):
         seed: int = 0,
         device_reduce: bool = True,
         ragged: bool = True,
+        tuned: bool = True,
     ) -> None:
         # pacing (isochronous grid) is only armed for jobs whose every
         # contended link scored >= pace_threshold: holding the grid on a
@@ -48,7 +49,7 @@ class CassiniAugmented(Scheduler):
 
         self.module = CassiniModule(
             precision_deg=precision_deg, quantum_ms=quantum_ms, seed=seed,
-            device_reduce=device_reduce, ragged=ragged,
+            device_reduce=device_reduce, ragged=ragged, tuned=tuned,
         )
         self.pipeline = SchedulingPipeline.cassini(
             host,

@@ -1,0 +1,338 @@
+"""Autotune subsystem tests: loader fallback ladder, schedule-parameter
+output-inertness through the tuned dispatch, and the measured search.
+
+The loader contract is "a bad table can only cost performance, never
+correctness": every failure mode — missing file, corrupt JSON, schema
+drift, wrong backend, invalid entries, unknown buckets — must resolve to
+the kernels' module defaults without raising.  The dispatch contract for
+the circle family is that (block_l, shift_chunk) are *bit-inert*: any
+schedule the table could ever pin must reproduce the untuned shifts and
+scores exactly (seeded sweeps always run; hypothesis deepens them when
+the dev extra is installed).
+"""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.circle import CommPattern, Phase
+from repro.core.compat import find_rotations_batched
+from repro.kernels import tune
+from repro.kernels.tune.search import make_workload
+from repro.kernels.tune.table import TABLE_ENV
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev extra absent
+    HAVE_HYPOTHESIS = False
+
+BACKEND = tune.current_backend()
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    """Each test sees (and leaves behind) an unprimed process cache."""
+    tune.reset_cache()
+    yield
+    tune.reset_cache()
+
+
+def _write(path, doc):
+    path.write_text(json.dumps(doc))
+    return path
+
+
+def _table_doc(entries, *, backend=BACKEND, schema=tune.SCHEMA_VERSION):
+    return {"schema_version": schema, "backend": backend, "entries": entries}
+
+
+# ---------------------------------------------------------------------- #
+# bucketing + search space
+# ---------------------------------------------------------------------- #
+def test_bucket_for_is_pow2_lane_multiple():
+    assert tune.bucket_for(1) == 128
+    assert tune.bucket_for(128) == 128
+    assert tune.bucket_for(129) == 256
+    assert tune.bucket_for(720) == 1024
+    assert tune.bucket_for(2048) == 2048
+
+
+def test_candidates_respect_divisibility():
+    # circle family: bucket-independent full grid
+    assert len(tune.candidates("circle_score_argmin", 128)) == 5 * 4
+    # flash/ssd: blocks must divide the bucket and not exceed it
+    for c in tune.candidates("flash_attention", 128):
+        assert c["block_q"] <= 128 and c["block_k"] <= 128
+    assert {c["chunk"] for c in tune.candidates("ssd_scan", 128)} == {64, 128}
+    assert {c["chunk"] for c in tune.candidates("ssd_scan", 512)} == {
+        64, 128, 256, 512,
+    }
+
+
+def test_clamp_to_width_keeps_pow2_divisors():
+    assert tune.clamp_to_width("ssd_scan", 128, {"chunk": 256}) == {
+        "chunk": 128,
+    }
+    assert tune.clamp_to_width("ssd_scan", 192, {"chunk": 256}) == {
+        "chunk": 64,
+    }
+    assert tune.clamp_to_width(
+        "flash_attention", 384, {"block_q": 256, "block_k": 128}
+    ) == {"block_q": 128, "block_k": 128}
+    # no divisibility constraint -> untouched
+    assert tune.clamp_to_width(
+        "circle_score_argmin", 7, {"block_l": 64, "shift_chunk": 32}
+    ) == {"block_l": 64, "shift_chunk": 32}
+
+
+# ---------------------------------------------------------------------- #
+# loader fallback ladder
+# ---------------------------------------------------------------------- #
+def test_missing_file_is_silent_defaults(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # missing is normal, not a warning
+        t = tune.load_table(tmp_path / "absent.json")
+    assert t.entries == {} and t.source == "<defaults>"
+    assert t.lookup("circle_score_argmin", 720) == dict(
+        tune.DEFAULTS["circle_score_argmin"]
+    )
+
+
+def test_corrupt_json_warns_and_falls_back(tmp_path):
+    p = tmp_path / "t.json"
+    p.write_text("{not json")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        t = tune.load_table(p)
+    assert t.entries == {}
+
+
+def test_schema_version_mismatch_falls_back(tmp_path):
+    p = _write(tmp_path / "t.json", _table_doc(
+        {"circle_score/512": {"block_l": 128}}, schema=tune.SCHEMA_VERSION + 1,
+    ))
+    with pytest.warns(RuntimeWarning, match="unsupported schema"):
+        t = tune.load_table(p)
+    assert t.entries == {}
+
+
+def test_non_object_top_level_falls_back(tmp_path):
+    p = _write(tmp_path / "t.json", ["not", "a", "table"])
+    with pytest.warns(RuntimeWarning, match="unsupported schema"):
+        assert tune.load_table(p).entries == {}
+
+
+def test_backend_mismatch_falls_back(tmp_path):
+    p = _write(tmp_path / "t.json", _table_doc(
+        {"circle_score/512": {"block_l": 128}}, backend="tpu-mosaic",
+    ))
+    with pytest.warns(RuntimeWarning, match="backend"):
+        t = tune.load_table(p, backend="cpu-interpret")
+    assert t.entries == {}
+
+
+def test_invalid_entries_dropped_rest_kept(tmp_path):
+    good = {"block_l": 128, "shift_chunk": 16}
+    p = _write(tmp_path / "t.json", _table_doc({
+        "circle_score_argmin/512": good,
+        "no_such_variant/512": {"block_l": 128},       # unknown variant
+        "circle_score_argmin/huge": {"block_l": 128},  # non-numeric bucket
+        "circle_score/512": {"wrong_param": 8},        # off-space name
+        "circle_score/1024": {"block_l": 77},          # off-space value
+        "circle_score_segmin/512": {"shift_chunk": True},  # bool is not int
+        "ssd_scan/512": "not a dict",
+    }))
+    with pytest.warns(RuntimeWarning, match="dropped invalid entries"):
+        t = tune.load_table(p)
+    assert t.entries == {"circle_score_argmin/512": good}
+    # the surviving entry merges over defaults, unknown buckets stay default
+    assert t.lookup("circle_score_argmin", 500) == good
+    assert t.lookup("circle_score_argmin", 100) == dict(
+        tune.DEFAULTS["circle_score_argmin"]
+    )
+
+
+def test_partial_entry_merges_over_defaults(tmp_path):
+    p = _write(tmp_path / "t.json", _table_doc(
+        {"circle_score_segmin/1024": {"block_l": 64}},
+    ))
+    got = tune.load_table(p).lookup("circle_score_segmin", 720)
+    assert got == {
+        "block_l": 64,
+        "shift_chunk": tune.DEFAULTS["circle_score_segmin"]["shift_chunk"],
+    }
+
+
+def test_lookup_returns_fresh_dicts(tmp_path):
+    p = _write(tmp_path / "t.json", _table_doc(
+        {"circle_score/512": {"block_l": 8}},
+    ))
+    t = tune.load_table(p)
+    t.lookup("circle_score", 512)["block_l"] = 999
+    assert t.lookup("circle_score", 512)["block_l"] == 8
+    t.lookup("circle_score", 128)["block_l"] = 999
+    assert tune.DEFAULTS["circle_score"]["block_l"] != 999
+
+
+def test_unknown_variant_raises():
+    with pytest.raises(KeyError):
+        tune.load_table("/nonexistent").lookup("no_such_kernel", 128)
+
+
+def test_env_override_and_reset_cache(tmp_path, monkeypatch):
+    p = _write(tmp_path / "override.json", _table_doc(
+        {"circle_score/128": {"block_l": 8}},
+    ))
+    monkeypatch.setenv(TABLE_ENV, str(p))
+    tune.reset_cache()
+    assert tune.lookup("circle_score", 100) == {"block_l": 8}
+    # the cache pins the table until reset, even if the env changes
+    monkeypatch.delenv(TABLE_ENV)
+    assert tune.lookup("circle_score", 100) == {"block_l": 8}
+    tune.reset_cache()
+    got = tune.lookup("circle_score", 100)
+    assert got == dict(tune.DEFAULTS["circle_score"]) or got != {"block_l": 8}
+
+
+# ---------------------------------------------------------------------- #
+# tuned dispatch is output-inert for the circle family
+# ---------------------------------------------------------------------- #
+PERIODS = (160.0, 200.0, 240.0, 320.0, 400.0)
+CAPACITIES = (25.0, 50.0, 100.0)
+DEMANDS = (0.0, 4.0, 20.0, 40.0, 45.0, 60.0)
+
+
+def _random_problem(rng, tag, k):
+    pats = []
+    for j in range(k):
+        it = float(rng.choice(PERIODS))
+        phases = []
+        for _ in range(int(rng.integers(1, 3))):
+            start = float(rng.uniform(0.0, it))
+            dur = float(rng.uniform(0.0, 0.9 * it))
+            phases.append(Phase(start, dur, float(rng.choice(DEMANDS))))
+        pats.append(CommPattern(it, tuple(phases), name=f"{tag}j{j}"))
+    return pats, float(rng.choice(CAPACITIES))
+
+
+def _pin_weird_schedules(tmp_path, monkeypatch):
+    """Point the process table at schedules far from the defaults for
+    every circle bucket, so tuned dispatch demonstrably takes them."""
+    entries = {}
+    for v in ("circle_score", "circle_score_argmin", "circle_score_segmin"):
+        for b in tune.BUCKETS:
+            e = {"block_l": 16}
+            if v != "circle_score":
+                e["shift_chunk"] = 32
+            entries[f"{v}/{b}"] = e
+    p = _write(tmp_path / "weird.json", _table_doc(entries))
+    monkeypatch.setenv(TABLE_ENV, str(p))
+    tune.reset_cache()
+
+
+def _assert_same_rotations(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x.shifts_steps == y.shifts_steps
+        assert x.score == y.score
+        assert x.shifts_ms == y.shifts_ms
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_tuned_vs_untuned_rotations_bit_identical(seed, tmp_path, monkeypatch):
+    """End to end through ``find_rotations_batched``: a table pinning
+    non-default schedules for every bucket must not move one shift."""
+    _pin_weird_schedules(tmp_path, monkeypatch)
+    rng = np.random.default_rng(seed)
+    problems = [
+        _random_problem(rng, f"p{i}", int(rng.integers(2, 5)))
+        for i in range(3)
+    ]
+    for deg in (5.0, 0.5):  # numpy-grid regime and kernel regime
+        tuned = find_rotations_batched(problems, precision_deg=deg)
+        untuned = find_rotations_batched(
+            problems, precision_deg=deg, tuned=False
+        )
+        _assert_same_rotations(tuned, untuned)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(2, 4))
+    def test_tuned_vs_untuned_rotations_hypothesis(seed, k):
+        rng = np.random.default_rng(seed)
+        problems = [_random_problem(rng, "h", k)]
+        tuned = find_rotations_batched(problems, precision_deg=0.5)
+        untuned = find_rotations_batched(
+            problems, precision_deg=0.5, tuned=False
+        )
+        _assert_same_rotations(tuned, untuned)
+
+
+@pytest.mark.parametrize("block_l", (8, 32, 128))
+@pytest.mark.parametrize("shift_chunk", (4, 16, 32))
+def test_ragged_argmin_schedule_sweep_bit_identical(block_l, shift_chunk):
+    """Kernel-level sweep on the search's own ragged workload: every
+    (block_l, shift_chunk) point reproduces the default schedule's
+    (idx, val) exactly."""
+    run = make_workload("circle_score_argmin", 256)
+    want = run({})
+    got = run({"block_l": block_l, "shift_chunk": shift_chunk})
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_segmin_schedule_sweep_bit_identical():
+    run = make_workload("circle_score_segmin", 128)
+    want = run({})
+    for params in ({"block_l": 8, "shift_chunk": 32},
+                   {"block_l": 128, "shift_chunk": 4}):
+        got = run(params)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------- #
+# measured search
+# ---------------------------------------------------------------------- #
+def test_search_smoke_and_table_round_trip(tmp_path):
+    from repro.kernels.tune.search import tune_variant
+
+    r = tune_variant("circle_score", 128, repeats=1)
+    assert r.variant == "circle_score" and r.bucket == 128
+    assert r.default_params == dict(tune.DEFAULTS["circle_score"])
+    assert dict(r.params) in tune.candidates("circle_score", 128)
+    assert r.tuned_us <= r.default_us  # the winner never loses to defaults
+    assert not r.rejected  # schedule params are output-inert
+
+    from repro.kernels.tune.search import results_to_table
+
+    doc = results_to_table([r])
+    assert doc["schema_version"] == tune.SCHEMA_VERSION
+    assert doc["backend"] == BACKEND
+    # only non-default winners are persisted; either way the doc loads
+    p = _write(tmp_path / "searched.json", doc)
+    t = tune.load_table(p)
+    assert set(t.entries) <= {"circle_score/128"}
+    if r.is_default:
+        assert t.entries == {}
+    else:
+        assert t.lookup("circle_score", 128) == dict(r.params)
+
+
+def test_committed_table_loads_if_present():
+    """Whatever table ships for this backend must validate cleanly (no
+    dropped entries, no fallback warnings)."""
+    p = tune.default_table_path()
+    if not p.is_file():
+        pytest.skip(f"no committed table for {BACKEND}")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        t = tune.load_table(p)
+    assert t.source == str(p)
+    raw = json.loads(p.read_text())
+    assert set(t.entries) == set(raw["entries"])
